@@ -1,0 +1,24 @@
+"""Shared benchmark plumbing: artifact dir, timing, CSV row protocol."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "bench")
+
+
+def save_artifact(name: str, payload) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.join(ARTIFACT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6

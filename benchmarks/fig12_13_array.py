@@ -1,0 +1,128 @@
+"""Figs 12-13: system-level area / energy efficiency of the BitParticle
+accelerator vs BitWave and AdaS on the four CNNs, normalized to AdaS.
+
+Mini-ZigZag flow per (accelerator, network):
+  1. per-layer dataflow choice + spatial utilization (dataflow engine),
+  2. cycles: temporal steps x avg-cycles-per-step from the cycle-accurate
+     array simulator (BitParticle, with zero-value filtering) or cited
+     per-op cycles (baselines — generous: they get our best-mapping
+     utilization too, noted as a conservative choice for our claims),
+  3. energy: MAC energy (Table III derived) + SRAM traffic + DRAM traffic,
+  4. area: PE array + SRAM macro area.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.configs.cnn_zoo import (ACT_VALUE_SPARSITY, BIT_SPARSITY, NETWORKS)
+from repro.core import cost_model as cm
+from repro.core.array_sim import ArrayConfig, run_experiment
+from repro.core.dataflow import analyze_traffic, choose_mapping
+
+CLOCK = cm.CLOCK_HZ
+
+
+def _accel_area_mm2(accel: str, unit: str) -> float:
+    cfg = cm.ACCEL_CONFIGS[accel]
+    pe = cfg.pe_count * cm.AREA_UM2[unit] * 1e-6
+    sram_kb = (cfg.w_cache_bytes + cfg.a_cache_bytes + cfg.r_cache_bytes
+               + cfg.metadata_bytes) / 1024
+    return pe + sram_kb * cm.SRAM_MM2_PER_KB
+
+
+def _bp_cycles_per_op(net: str, approx: bool) -> float:
+    res = run_experiment(0, ArrayConfig(E=3, Q=2, zero_filter=True,
+                                        approx=approx), 256,
+                         BIT_SPARSITY[net],
+                         a_value_sparsity=ACT_VALUE_SPARSITY[net])
+    return res.avg_cycles_per_step
+
+
+def _baseline_cycles_per_op(unit: str, net: str) -> float:
+    xs = np.asarray(cm.SPARSITY_LEVELS)
+    return float(np.interp(BIT_SPARSITY[net], xs,
+                           np.asarray(cm.PAPER_AVG_CYCLES[unit])))
+
+
+BATCH = 8   # inference batch (amortizes FC weight DRAM traffic)
+
+
+def evaluate(accel_key: str, unit: str, net: str):
+    import dataclasses
+    layers = [dataclasses.replace(l, B=l.B * BATCH) for l in NETWORKS[net]()]
+    acfg = cm.ACCEL_CONFIGS[accel_key]
+    bs = BIT_SPARSITY[net]
+    if unit.startswith("bp"):
+        cpo = _bp_cycles_per_op(net, unit == "bp_approx")
+    else:
+        cpo = _baseline_cycles_per_op(unit, net)
+    total_macs = total_cycles = 0
+    e_mac = e_sram = e_dram = 0.0
+    mac_pj = cm.mac_energy_pj(unit, bs)
+    for layer in layers:
+        m = choose_mapping(layer)
+        total_macs += layer.total_macs
+        # scale steps to this accelerator's PE count (512-slot steps)
+        steps = m.steps * (512 / acfg.pe_count)
+        total_cycles += steps * cpo
+        t = analyze_traffic(layer, m, accel_key)
+        e_sram += t.cache_energy_pj(accel_key)
+        if acfg.metadata_bytes:   # AdaS per-op bit-index metadata reads
+            e_sram += layer.total_macs * cm.sram_pj_per_byte(
+                acfg.metadata_bytes)
+        e_dram += t.dram_energy_pj()
+        e_mac += layer.total_macs * mac_pj
+    time_s = total_cycles / CLOCK
+    energy_j = (e_mac + e_sram + e_dram) * 1e-12
+    core_j = (e_mac + e_sram) * 1e-12
+    tops = 2 * total_macs / time_s / 1e12
+    area = _accel_area_mm2(accel_key, unit)
+    return {"net": net, "unit": unit, "tops": tops,
+            "area_mm2": area, "energy_j": energy_j,
+            "area_eff": tops / area,
+            "energy_eff": 2 * total_macs / energy_j / 1e12,
+            "core_energy_eff": 2 * total_macs / core_j / 1e12}
+
+
+def run():
+    systems = [("bitparticle", "bp_exact"), ("bitparticle", "bp_approx"),
+               ("bitwave", "bitwave"), ("adas", "adas")]
+    rows = []
+    per_net = {}
+    for net in NETWORKS:
+        base = evaluate("adas", "adas", net)
+        for accel, unit in systems:
+            r = evaluate(accel, unit, net)
+            r["area_eff_norm"] = r["area_eff"] / base["area_eff"]
+            r["energy_eff_norm"] = r["energy_eff"] / base["energy_eff"]
+            r["core_energy_eff_norm"] = (r["core_energy_eff"]
+                                         / base["core_energy_eff"])
+            rows.append(r)
+            per_net.setdefault(unit, {})[net] = r
+    gm = lambda unit, key: float(np.exp(np.mean([
+        np.log(per_net[unit][n][key]) for n in NETWORKS])))
+    out = {
+        "rows": rows,
+        "geomean_area_eff_vs_adas": {u: gm(u, "area_eff_norm")
+                                     for _, u in systems},
+        "geomean_energy_eff_vs_adas": {u: gm(u, "energy_eff_norm")
+                                       for _, u in systems},
+        "geomean_core_energy_eff_vs_adas": {u: gm(u, "core_energy_eff_norm")
+                                            for _, u in systems},
+    }
+    out["bp_vs_bitwave_area_eff"] = (
+        out["geomean_area_eff_vs_adas"]["bp_exact"]
+        / out["geomean_area_eff_vs_adas"]["bitwave"] - 1)       # paper 29.2%
+    out["bp_vs_bitwave_energy_eff"] = (
+        out["geomean_energy_eff_vs_adas"]["bp_exact"]
+        / out["geomean_energy_eff_vs_adas"]["bitwave"] - 1)     # ~comparable
+    out["approx_vs_exact_energy"] = (
+        out["geomean_energy_eff_vs_adas"]["bp_approx"]
+        / out["geomean_energy_eff_vs_adas"]["bp_exact"] - 1)    # paper 7.5%
+    out["approx_vs_exact_area"] = (
+        out["geomean_area_eff_vs_adas"]["bp_approx"]
+        / out["geomean_area_eff_vs_adas"]["bp_exact"] - 1)      # paper 2.1%
+    return out

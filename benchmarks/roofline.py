@@ -1,0 +1,189 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod 16x16 mesh:
+
+    compute term    = dot_FLOPs_per_device / 197 TFLOP/s
+    memory term     = HBM bytes per device / 819 GB/s
+    collective term = collective bytes per device / 50 GB/s (per-link)
+
+FLOPs and collective bytes are the trip-count-aware HLO-derived numbers
+(launch/hlo_analysis.py); the memory term uses an analytic per-device HBM
+traffic model (params + optimizer states + saved activations + caches —
+XLA's bytes-accessed also undercounts loop bodies), cross-checked against
+compiled memory_analysis sizes.  MODEL_FLOPS = 6ND (train) / 2ND(+attn)
+(serve), active params for MoE.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.base import SHAPES, get_arch
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+TP_DEGREE = 16   # "model" mesh axis size on both production meshes
+
+
+def analytic_hbm_bytes_per_device(arch_id: str, shape_name: str,
+                                  n_devices: int = 256) -> float:
+    """First-order per-device HBM traffic for one step.
+
+    Variant-aware: ``@int8``/``@int8kv`` halve weight bytes (int8 storage);
+    ``@int8kv`` additionally halves KV-cache bytes.  Serve-path weights are
+    TP-sharded (each chip streams its 1/16 shard once); train-path params
+    stream fully per chip after the FSDP gather (fwd + remat + bwd) on top
+    of the local optimizer-state traffic.
+    """
+    base, _, variant = arch_id.partition("@")
+    cfg = get_arch(base)
+    shape = SHAPES[shape_name]
+    n_params = cfg.param_count()
+    n_active = cfg.param_count(active_only=True)
+    wbytes = 1 if variant in ("int8", "int8kv") else 2
+    cbytes = 1 if variant == "int8kv" else 2
+    d = cfg.d_model
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        # gathered weights stream through HBM fwd + remat + bwd
+        gathered = n_params * 2 * 3
+        # local shards: opt states m, v, master read+write (f32) + grads
+        local = (n_params * 4 * 6 + n_params * 2 * 2) / n_devices
+        # activations: residual stream saved per layer (bf16), write + read
+        act = 2 * B * S * d * cfg.num_layers * 2 * 2 / n_devices
+        return gathered + local + act
+    if shape.kind == "prefill":
+        act = B * S * d * cfg.num_layers * 2 * 2 / n_devices
+        cache = _cache_bytes(cfg, B, S, cbytes) / n_devices
+        return n_active * wbytes / TP_DEGREE + act + cache
+    # decode: every (active) weight shard read once + cache read + write
+    cache = _cache_bytes(cfg, B, S, cbytes)
+    return n_active * wbytes / TP_DEGREE + cache / n_devices
+
+
+def _cache_bytes(cfg, B, T, cbytes: int = 2) -> float:
+    hd = cfg.resolved_head_dim
+    if cfg.family in ("dense", "moe", "vlm"):
+        return 2.0 * cfg.num_layers * B * T * cfg.num_kv_heads * hd * cbytes
+    if cfg.family == "audio":
+        return (2.0 * cfg.num_layers * B * (T + T // 4)
+                * cfg.num_kv_heads * hd * cbytes)
+    if cfg.family == "ssm":
+        n = cfg.rwkv_head_dim
+        h = cfg.d_model // n
+        return cfg.num_layers * B * h * n * n * 4.0
+    if cfg.family == "hybrid":
+        n_sup = cfg.num_layers // cfg.attn_every
+        kv = 2.0 * n_sup * B * T * cfg.num_kv_heads * hd * cbytes
+        ssm = cfg.num_layers * B * (2 * cfg.d_model // cfg.ssm_head_dim) \
+            * cfg.ssm_head_dim * cfg.ssm_state * 4.0
+        return kv + ssm
+    raise ValueError(cfg.family)
+
+
+def load_records(mesh: str = "pod16x16"):
+    out = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def roofline_row(rec):
+    arch, shape = rec["arch"], rec["shape"]
+    base = arch.partition("@")[0]
+    n_dev = rec["n_devices"]
+    flops_dev = rec["dot_flops_per_device"]
+    flops_int_dev = rec.get("dot_flops_int_per_device", 0.0)
+    coll_dev = sum(rec["collective_bytes"].values())
+    hbm_dev = analytic_hbm_bytes_per_device(arch, shape, n_dev)
+    # int8 contractions run at 2x the MXU rate
+    t_compute = (flops_dev / PEAK_FLOPS_BF16
+                 + flops_int_dev / (2 * PEAK_FLOPS_BF16))
+    t_memory = hbm_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # recompute MODEL_FLOPS fresh (param-count bookkeeping may be fixed
+    # after an artifact was written)
+    from repro.models import api as model_api
+    model_flops = model_api.model_flops(get_arch(base), SHAPES[shape])
+    flops_dev = flops_dev + flops_int_dev
+    useful_ratio = model_flops / (flops_dev * n_dev) if flops_dev else 0.0
+    # roofline fraction: useful model FLOPs per chip-second at the bound
+    frac = (model_flops / n_dev / PEAK_FLOPS_BF16) / bound if bound else 0.0
+    # peak_memory is XLA's heap-simulation peak (arguments included in
+    # buffer liveness)
+    peak_mem = (rec["memory_analysis"].get("peak_memory") or 0)
+    return {
+        "arch": arch, "shape": shape,
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": flops_dev * n_dev,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_fraction": frac,
+        "mem_per_device_gib": peak_mem / 2**30,
+        "fits_16gib": peak_mem < 16 * 2**30,
+    }
+
+
+def run():
+    recs = load_records("pod16x16")
+    all_rows = [roofline_row(r) for r in recs.values() if r.get("ok")]
+    rows = [r for r in all_rows if "@" not in r["arch"]]
+    variant_rows = [r for r in all_rows if "@" in r["arch"]]
+    failures = [(a, s) for (a, s), r in recs.items() if not r.get("ok")]
+    multi = load_records("pod2x16x16")
+    multi_ok = sum(1 for r in multi.values()
+                   if r.get("ok") and "@" not in r["arch"])
+    rows.sort(key=lambda r: r["roofline_fraction"])
+    # pair each variant with its baseline for the §Perf before/after table
+    base_by_key = {(r["arch"], r["shape"]): r for r in rows}
+    perf_pairs = []
+    for v in variant_rows:
+        b = base_by_key.get((v["arch"].partition("@")[0], v["shape"]))
+        if b:
+            perf_pairs.append({"cell": f"{v['arch']} {v['shape']}",
+                               "before": {k: b[k] for k in
+                                          ("compute_s", "memory_s",
+                                           "collective_s",
+                                           "roofline_fraction")},
+                               "after": {k: v[k] for k in
+                                         ("compute_s", "memory_s",
+                                          "collective_s",
+                                          "roofline_fraction")}})
+    return {
+        "rows": rows,
+        "variant_rows": variant_rows,
+        "perf_pairs": perf_pairs,
+        "n_cells_single_pod_ok": len(rows),
+        "n_cells_multi_pod_ok": multi_ok,
+        "failures": failures,
+        "worst_3_roofline": [(r["arch"], r["shape"],
+                              round(r["roofline_fraction"], 4))
+                             for r in rows[:3]],
+        "most_collective_bound": [
+            (r["arch"], r["shape"], round(r["collective_s"], 4))
+            for r in sorted(rows, key=lambda x: -x["collective_s"])[:3]],
+    }
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant |"
+           " useful_ratio | roofline_frac | mem/dev GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    body = "".join(
+        f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+        f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['dominant']} | "
+        f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
+        f"{r['mem_per_device_gib']:.2f} |\n"
+        for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])))
+    return hdr + body

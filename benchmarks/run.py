@@ -1,0 +1,66 @@
+"""Benchmark harness: one module per paper table/figure (+ roofline).
+
+Prints ``name,us_per_call,derived`` CSV and writes JSON artifacts to
+experiments/bench/.  Usage:
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig11 t3   # substring filter
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import save_artifact, timed
+
+BENCHMARKS = [
+    # (name, import path, headline-metric extractor)
+    ("fig1_sparsity", "benchmarks.fig1_sparsity",
+     lambda r: f"sign_mag_advantage={r['sign_mag_advantage']:.3f}"),
+    ("table3_mac_unit", "benchmarks.table3_mac_unit",
+     lambda r: f"bp60_area_gain={r['bp_exact_area_eff_gain_60pct']:.3f};"
+               f"max_cycle_err={r['max_bp_modeled_cycle_error']:.3f}"),
+    ("fig8_9_elasticity", "benchmarks.fig8_9_elasticity",
+     lambda r: f"e3q2_util={r['e3q2_util_range'][0]:.3f}-"
+               f"{r['e3q2_util_range'][1]:.3f}"),
+    ("fig10_zero_filter", "benchmarks.fig10_zero_filter",
+     lambda r: f"thr_gain@0.8={r['throughput_gain_at_0.8']:.3f}"),
+    ("fig11_skipped", "benchmarks.fig11_skipped",
+     lambda r: f"bp>serial_from_bs={r['bp_beats_bitserial_from_bs']}"),
+    ("fig12_13_array", "benchmarks.fig12_13_array",
+     lambda r: f"bp_vs_bitwave_area={r['bp_vs_bitwave_area_eff']:.3f};"
+               f"approx_energy={r['approx_vs_exact_energy']:.3f}"),
+    ("accuracy_approx", "benchmarks.accuracy_approx",
+     lambda r: f"mlp_drop={r['mlp_acc_drop_exact_to_approx']:.3f}"),
+    ("cluster_quasi_sync", "benchmarks.cluster_quasi_sync",
+     lambda r: f"e3q2_speedup@0.3={r['e3q2_speedup_at_0.3']:.2f}x"),
+    ("ablation_drop_groups", "benchmarks.ablation_drop_groups",
+     lambda r: f"paper_err={r['paper_choice_max_error']};"
+               f"3rd_blowup={r['third_group_error_blowup']:.1f}x"),
+    ("roofline", "benchmarks.roofline",
+     lambda r: f"cells_ok={r['n_cells_single_pod_ok']}"
+               f"+{r['n_cells_multi_pod_ok']}mp"),
+]
+
+
+def main() -> None:
+    filters = [a.lower() for a in sys.argv[1:]]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, modpath, headline in BENCHMARKS:
+        if filters and not any(f in name for f in filters):
+            continue
+        try:
+            mod = __import__(modpath, fromlist=["run"])
+            result, us = timed(mod.run)
+            save_artifact(name, result)
+            print(f"{name},{us:.0f},{headline(result)}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},-1,ERROR:{type(e).__name__}:{e}", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

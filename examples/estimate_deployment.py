@@ -1,0 +1,72 @@
+"""Price a real model's layers on the modeled BitParticle accelerator:
+per-layer bit/value sparsity -> cycles, energy, and the exact-vs-approx /
+vs-AdaS / vs-BitWave comparison (the paper's evaluation flow applied to an
+LM from this repo's zoo).
+
+    PYTHONPATH=src python examples/estimate_deployment.py [--arch qwen2-1.5b]
+"""
+
+import argparse
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch
+from repro.core import cost_model as cm
+from repro.core import quant, sparsity
+from repro.models import api
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 128), 0,
+                                cfg.vocab_size)
+    mod = api.module_for(cfg)
+    if cfg.family == "audio":
+        batch = {"tokens": tokens,
+                 "src_embeds": jax.random.normal(jax.random.PRNGKey(2),
+                                                 (2, 32, cfg.d_model),
+                                                 jnp.bfloat16)}
+        from repro.models import encdec
+        acts = encdec.encode(params, cfg, batch["src_embeds"])
+    else:
+        acts, _, _ = mod.forward(params, cfg, {"tokens": tokens})
+    a_q, _ = quant.quantize_per_tensor(jnp.asarray(acts, jnp.float32))
+
+    print(f"{'layer':42s} {'bitsp':>6s} {'valsp':>6s} {'cyc':>6s} "
+          f"{'cyc~':>6s} {'pJ/MAC':>7s}")
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    rows = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if leaf.ndim < 2 or not name.endswith("w"):
+            continue
+        w_q, _ = quant.quantize_per_tensor(jnp.asarray(leaf, jnp.float32))
+        bs = float(sparsity.bit_sparsity_sign_magnitude(w_q))
+        vs = float(sparsity.value_sparsity(a_q))
+        cyc = cm.avg_cycles_for_tensors(w_q, a_q, approx=False)
+        cyc_a = cm.avg_cycles_for_tensors(w_q, a_q, approx=True)
+        pj = cm.mac_energy_pj("bp_exact", bs)
+        rows.append((bs, vs, cyc, cyc_a, pj))
+        if len(rows) <= 12:
+            print(f"{name[-42:]:42s} {bs:6.3f} {vs:6.3f} {cyc:6.2f} "
+                  f"{cyc_a:6.2f} {pj:7.2f}")
+    bs_m = float(np.mean([r[0] for r in rows]))
+    print(f"\nmean weight bit sparsity {bs_m:.3f} over {len(rows)} kernels")
+    for unit in ("bp_exact", "bp_approx", "bitwave", "adas"):
+        c = cm.modeled_avg_cycles(
+            "bit_serial" if unit == "adas" else unit, bs_m, n=50_000)
+        print(f"  {unit:10s} cycles/MAC={c:5.2f}  "
+              f"energy/MAC={cm.mac_energy_pj(unit, bs_m):5.2f} pJ  "
+              f"area={cm.AREA_UM2[unit]:8.1f} um^2")
+
+
+if __name__ == "__main__":
+    main()

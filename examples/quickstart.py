@@ -1,0 +1,72 @@
+"""Quickstart: the BitParticle pipeline end to end in two minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitparticle as bp
+from repro.core import cost_model as cm
+from repro.core.array_sim import ArrayConfig, run_experiment
+from repro.core.bp_matmul import bp_matmul_int
+from repro.kernels.bitparticle_matmul import bp_matmul as bp_matmul_pallas
+
+
+def section(title):
+    print(f"\n=== {title} " + "=" * max(0, 60 - len(title)))
+
+
+def main():
+    # ---- 1. one MAC through the particlized datapath ---------------------
+    section("1. Particlized multiplication (paper Fig. 4)")
+    a, w = -93, 57
+    prod, pps, cycles = bp.assemble_partial_products(a, w)
+    print(f"a={a}, w={w}: particles(a)={list(np.asarray(bp.particlize(abs(a))))}")
+    print(f"IR matrix:\n{np.asarray(bp.ir_matrix(abs(a), abs(w)))}")
+    print(f"partial products per cycle (set0, set1): {pps}")
+    print(f"product={prod} (check: {a*w}), cycles={cycles} "
+          f"(model: {int(bp.mac_cycles(a, w))})")
+    print(f"approx product={int(bp.multiply_approx(a, w))} "
+          f"(drops IR groups 0 and 1-4)")
+
+    # ---- 2. quantized matmul in all three numerics modes ------------------
+    section("2. W8A8 matmul: exact == int8; approx within 81*K")
+    key = jax.random.PRNGKey(0)
+    A = jax.random.randint(key, (8, 64), -127, 128, dtype=jnp.int32).astype(jnp.int8)
+    W = jax.random.randint(jax.random.fold_in(key, 1), (64, 16), -127, 128,
+                           dtype=jnp.int32).astype(jnp.int8)
+    exact = bp_matmul_int(A, W, "bp_exact")
+    approx = bp_matmul_int(A, W, "bp_approx")
+    print(f"max |exact - int_matmul| = "
+          f"{int(jnp.abs(exact - A.astype(jnp.int32) @ W.astype(jnp.int32)).max())}")
+    print(f"max |approx - exact| = {int(jnp.abs(approx - exact).max())} "
+          f"(bound: 81*K = {81*64})")
+
+    # ---- 3. the Pallas TPU kernel (interpret mode on CPU) -----------------
+    section("3. Pallas kernel (pl.pallas_call, interpret=True)")
+    out = bp_matmul_pallas(A, W, approx=True, interpret=True, block_m=8)
+    print(f"kernel == jnp reference: {bool((out == approx).all())}")
+
+    # ---- 4. quasi-synchronous MAC array ------------------------------------
+    section("4. Quasi-sync array: E/Q elasticity (paper Fig. 8)")
+    for E, Q in [(0, 0), (3, 2)]:
+        r = run_experiment(0, ArrayConfig(E=E, Q=Q), 128, bit_sparsity=0.7)
+        print(f"E{E}Q{Q}: PE utilization={r.pe_utilization:.3f}, "
+              f"cycles/step={r.avg_cycles_per_step:.3f}")
+
+    # ---- 5. efficiency vs the baselines ------------------------------------
+    section("5. Table III reproduction (normalized to AdaS)")
+    t = cm.table3("paper")
+    print("area eff  @60% bit sparsity:",
+          {k: round(v["area_eff"][1], 2) for k, v in t.items()})
+    print("energy eff@60% bit sparsity:",
+          {k: round(v["energy_eff"][1], 2) for k, v in t.items()})
+    print("our modeled BP cycles vs paper:",
+          round(cm.modeled_avg_cycles("bp_exact", 0.6, n=50_000), 3),
+          "vs", cm.PAPER_AVG_CYCLES["bp_exact"][1])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end serving driver: batched requests against a small qwen2-family
+model with BitParticle W8A8 weights and an int8 KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py [--tokens 24] [--batch 4]
+"""
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch
+from repro.core import cost_model as cm
+from repro.core import sparsity
+from repro.models import api
+from repro.models.layers import quantize_dense_params
+from repro.serving.engine import ServeConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--mode", default="bp_exact",
+                    choices=["bf16", "bp_exact", "bp_approx"])
+    args = ap.parse_args()
+
+    cfg = get_arch("qwen2-1.5b").reduced().replace(
+        num_layers=4, d_model=256, d_ff=512, vocab_size=2048, head_dim=32)
+    print(f"arch: qwen2-family reduced ({cfg.param_count()/1e6:.1f}M params), "
+          f"mode={args.mode}")
+
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    if args.mode != "bf16":
+        params = quantize_dense_params(params)
+        cfg = cfg.replace(matmul_mode=args.mode, kv_cache_int8=True)
+        print("weights quantized to int8 (per-channel), KV cache int8")
+
+    engine = ServingEngine(cfg, params,
+                           ServeConfig(max_new_tokens=args.tokens,
+                                       temperature=0.8))
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 2,
+                                 cfg.vocab_size)
+    # warmup (compile)
+    engine.generate({"tokens": prompts[:, :8]})
+    res = engine.generate({"tokens": prompts})
+    print(f"prefill: {res.prefill_s*1e3:.1f} ms for "
+          f"{args.batch}x{args.prompt_len} tokens")
+    print(f"decode:  {res.steps} steps, "
+          f"{res.decode_tokens_per_s:.1f} tokens/s (batch={args.batch})")
+    print(f"sample continuation (request 0): {res.tokens[0][:12].tolist()}")
+
+    # ---- BitParticle deployment estimate ----------------------------------
+    if args.mode != "bf16":
+        w_leaves = [l for l in jax.tree.leaves(params)
+                    if hasattr(l, "dtype") and l.dtype == jnp.int8]
+        bs = float(np.mean([float(sparsity.bit_sparsity_sign_magnitude(w))
+                            for w in w_leaves[:8]]))
+        cyc = cm.modeled_avg_cycles(
+            "bp_exact" if args.mode == "bp_exact" else "bp_approx", bs,
+            n=50_000)
+        e = cm.mac_energy_pj(args.mode if args.mode != "bf16" else "bp_exact",
+                             bs)
+        print(f"\nBitParticle deployment estimate (modeled 45nm array):")
+        print(f"  weight bit sparsity (sign-magnitude): {bs:.3f}")
+        print(f"  avg cycles/MAC: {cyc:.2f}   energy/MAC: {e:.2f} pJ")
+        print(f"  vs AdaS unit:  {cm.mac_energy_pj('adas', bs):.2f} pJ;  "
+              f"vs BitWave: {cm.mac_energy_pj('bitwave', bs):.2f} pJ")
+
+
+if __name__ == "__main__":
+    main()

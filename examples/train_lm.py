@@ -1,0 +1,84 @@
+"""End-to-end training driver with checkpoint/resume, spike rejection and
+compressed-gradient data parallelism on the synthetic pipeline.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 100
+    PYTHONPATH=src python examples/train_lm.py --steps 200   # resumes at 100
+
+    # ~100M-param configuration (slow on CPU; the default is laptop-sized):
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 5
+"""
+
+import argparse
+import shutil
+
+import jax
+
+from repro.configs.base import get_arch
+from repro.data.pipeline import DataConfig
+from repro.distributed.quasi_sync import ClusterConfig, cluster_utilization
+from repro.train import optimizer as opt_lib
+from repro.train.train_loop import TrainConfig, Trainer
+
+PRESETS = {
+    "tiny": dict(num_layers=2, d_model=128, d_ff=256, vocab_size=1024,
+                 head_dim=32, seq=128, batch=8),
+    "10m": dict(num_layers=4, d_model=320, d_ff=864, vocab_size=4096,
+                head_dim=64, seq=256, batch=8),
+    "100m": dict(num_layers=12, d_model=768, d_ff=2048, vocab_size=8192,
+                 head_dim=64, seq=512, batch=8),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--fresh", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    arch = get_arch("qwen2-1.5b").reduced().replace(
+        num_layers=p["num_layers"], d_model=p["d_model"], d_ff=p["d_ff"],
+        vocab_size=p["vocab_size"], head_dim=p["head_dim"])
+    print(f"model: {arch.param_count()/1e6:.1f}M params "
+          f"(preset={args.preset})")
+    if args.fresh:
+        shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+
+    tc = TrainConfig(
+        total_steps=args.steps, ckpt_every=25, ckpt_dir=args.ckpt_dir,
+        compress_grads=args.compress_grads, log_every=10,
+        optimizer=opt_lib.OptimizerConfig(peak_lr=3e-3, warmup_steps=20,
+                                          total_steps=args.steps))
+    dc = DataConfig(vocab_size=arch.vocab_size, seq_len=p["seq"],
+                    global_batch=p["batch"])
+    trainer = Trainer(arch, tc, dc, init_key=jax.random.PRNGKey(0))
+    if trainer.start_step:
+        print(f"resumed from checkpoint at step {trainer.start_step}")
+
+    def log(step, metrics):
+        print(f"step {step:4d}  loss={metrics['loss']:.4f}  "
+              f"lr={metrics['lr']:.2e}  gnorm={metrics['grad_norm']:.2f}  "
+              f"{metrics['step_time_s']*1e3:.0f} ms")
+
+    end, hist = trainer.run(on_metrics=log)
+    losses = [l for _, l in hist]
+    print(f"\ndone at step {end}; loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
+          f"rejected steps: {trainer.total_skips}")
+
+    # --- what would quasi-sync buy this job at fleet scale? ----------------
+    strict = cluster_utilization(ClusterConfig(E=0, Q=0), n_rounds=100)
+    elastic = cluster_utilization(ClusterConfig(E=3, Q=2), n_rounds=100)
+    print(f"\nfleet-scale quasi-sync estimate (8 hosts x 32 DP groups, "
+          f"lognormal stragglers):")
+    print(f"  strict sync  E0Q0: worker utilization "
+          f"{strict.pe_utilization:.3f}")
+    print(f"  quasi-sync   E3Q2: worker utilization "
+          f"{elastic.pe_utilization:.3f} "
+          f"({(elastic.pe_utilization/strict.pe_utilization-1)*100:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

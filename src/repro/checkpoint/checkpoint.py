@@ -1,0 +1,152 @@
+"""Sharded, atomic, async checkpointing with elastic resharding on restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000123.tmp/          (written, fsync'd)
+    <dir>/step_000123/              (atomic rename = commit)
+        MANIFEST.json               {step, leaf index, shapes, dtypes, crc}
+        arr_00000.npy ...           one file per pytree leaf
+
+Restore is mesh-agnostic: leaves are loaded on host and ``device_put`` with
+whatever shardings the *new* mesh prescribes — checkpoints written on one
+topology restore onto another (elastic scaling / failure recovery).  Async
+saves run in a daemon thread; ``wait()`` joins before the next save or exit.
+Keeps the newest ``keep`` checkpoints; partial (``.tmp``) directories are
+ignored by discovery, so a preempted save can never be resumed from.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+def _leaf_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [("/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path), leaf) for path, leaf in flat]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- discovery ---------------------------------------------------------
+    def all_steps(self):
+        steps = []
+        for name in os.listdir(self.directory):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.directory, name,
+                                                 "MANIFEST.json")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: Optional[bool] = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        if blocking is None:
+            blocking = not self.async_save
+        if blocking:
+            self._write(step, host_tree)
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree), daemon=True)
+            self._thread.start()
+
+    def _write(self, step: int, host_tree):
+        name = f"step_{step:09d}"
+        tmp = os.path.join(self.directory, name + ".tmp")
+        final = os.path.join(self.directory, name)
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        manifest = {"step": step, "leaves": []}
+        for i, (path, leaf) in enumerate(_leaf_paths(host_tree)):
+            fname = f"arr_{i:05d}.npy"
+            # numpy can't round-trip extension dtypes (bfloat16 etc.) through
+            # .npy — store a same-width integer view + the logical dtype
+            stored = leaf
+            if leaf.dtype.kind not in "biufc":
+                stored = leaf.view(f"u{leaf.dtype.itemsize}")
+            elif str(leaf.dtype) == "bfloat16":
+                stored = leaf.view(np.uint16)
+            np.save(os.path.join(tmp, fname), stored)
+            manifest["leaves"].append({
+                "path": path, "file": fname, "shape": list(leaf.shape),
+                "dtype": str(leaf.dtype), "stored_dtype": str(stored.dtype),
+                "crc": zlib.crc32(np.ascontiguousarray(stored).tobytes()),
+            })
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)                      # atomic commit
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore ---------------------------------------------------------------
+    def restore(self, step: int, like: Any, shardings: Any = None,
+                verify_crc: bool = True) -> Any:
+        """Restore into the structure of ``like``; optionally reshard.
+
+        ``shardings``: optional pytree of jax.sharding.Sharding matching
+        ``like`` (elastic restore onto a different mesh).
+        """
+        d = os.path.join(self.directory, f"step_{step:09d}")
+        with open(os.path.join(d, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        by_path = {e["path"]: e for e in manifest["leaves"]}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        shard_flat = (jax.tree.leaves(shardings,
+                                      is_leaf=lambda x: hasattr(x, "spec"))
+                      if shardings is not None else [None] * len(flat))
+        out = []
+        for (path, leaf), shd in zip(flat, shard_flat):
+            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                           for k in path)
+            entry = by_path[key]
+            arr = np.load(os.path.join(d, entry["file"]))
+            if verify_crc:
+                crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                if crc != entry["crc"]:
+                    raise IOError(f"checkpoint corruption in {key}")
+            if entry["dtype"] != entry.get("stored_dtype", entry["dtype"]):
+                import ml_dtypes
+                logical = np.dtype(getattr(ml_dtypes, entry["dtype"], None)
+                                   or entry["dtype"])
+                arr = arr.view(logical)
+            assert list(arr.shape) == list(leaf.shape), (key, arr.shape, leaf.shape)
+            if shd is not None:
+                out.append(jax.device_put(arr, shd))
+            else:
+                out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        return jax.tree.unflatten(treedef, [v for v in out])

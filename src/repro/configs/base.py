@@ -1,0 +1,182 @@
+"""Architecture & workload-shape configuration system.
+
+Every assigned architecture is a frozen ``ArchConfig``; every workload shape
+is a ``ShapeConfig``.  ``runnable_cells()`` yields the (arch x shape) grid
+with the assignment's applicability rules applied (long_500k only for
+sub-quadratic families; encoder-only would skip decode — all our archs have
+decoders).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+VOCAB_PAD_MULTIPLE = 256  # divisible by every mesh (data x model) product
+
+
+def pad_vocab(v: int) -> int:
+    return -(-v // VOCAB_PAD_MULTIPLE) * VOCAB_PAD_MULTIPLE
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    ffn_type: str = "swiglu"          # swiglu | gelu
+    rope_theta: float = 1e6
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    attn_every: int = 0               # zamba2: shared attn applied every N layers
+    # RWKV
+    rwkv_head_dim: int = 64
+    # encoder-decoder
+    encoder_layers: int = 0
+    # VLM (M-RoPE)
+    mrope_sections: Tuple[int, ...] = ()
+    # numerics / BitParticle backend: bf16 | qat | bp_exact | bp_approx
+    matmul_mode: str = "bf16"
+    # int8 KV cache with per-token-per-head scales (serving memory term)
+    kv_cache_int8: bool = False
+
+    # ---------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // max(self.num_heads, 1)
+
+    @property
+    def vocab_padded(self) -> int:
+        return pad_vocab(self.vocab_size)
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        kw = dict(
+            num_layers=min(self.num_layers, 4 if not self.attn_every else 2 * self.attn_every),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=max(1, min(self.num_kv_heads,
+                                    4 * self.num_kv_heads // max(self.num_heads, 1), 4)),
+            d_ff=256,
+            vocab_size=512,
+            head_dim=32,
+        )
+        if self.num_experts:
+            kw.update(num_experts=min(self.num_experts, 8),
+                      top_k=min(self.top_k, 2), d_ff=64)
+        if self.ssm_state:
+            kw.update(ssm_state=16, ssm_head_dim=32)
+        if self.family == "ssm":
+            kw.update(rwkv_head_dim=32, num_heads=4)
+        if self.encoder_layers:
+            kw.update(encoder_layers=2)
+        if self.mrope_sections:
+            kw.update(mrope_sections=(4, 6, 6))  # sums to head_dim/2 = 16
+        return self.replace(**kw)
+
+    # parameter-count estimate (for 6*N*D model FLOPs)
+    def param_count(self, *, active_only: bool = False) -> int:
+        d, l = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        attn = d * hd * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * hd * d
+        if self.ffn_type == "swiglu":
+            ffn_dense = 3 * d * self.d_ff
+        else:
+            ffn_dense = 2 * d * self.d_ff
+        if self.num_experts:
+            n_exp = self.top_k if active_only else self.num_experts
+            ffn = n_exp * ffn_dense + d * self.num_experts  # + router
+        else:
+            ffn = ffn_dense
+        if self.family == "ssm":                      # rwkv6 block
+            blk = 5 * d * d + 2 * d * self.d_ff       # time-mix + channel-mix
+        elif self.family == "hybrid":                 # mamba2 + shared attn amortized
+            d_in = 2 * d
+            blk = d * (2 * d_in + 2 * self.ssm_state) + d_in * d
+            n_attn = l // max(self.attn_every, 1)
+            blk += (attn + ffn) * n_attn / max(l, 1)
+        else:
+            blk = attn + ffn
+        # 6ND convention: the LM head participates in matmul FLOPs, the
+        # embedding lookup does not — count the vocab matrix once
+        total = l * blk + self.vocab_padded * d
+        if self.encoder_layers:
+            total += self.encoder_layers * (attn + ffn)   # encoder stack
+            total += l * (d * hd * (self.num_heads + 2 * self.num_kv_heads)
+                          + self.num_heads * hd * d)      # cross-attention
+        return int(total)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = (
+    "phi3-medium-14b", "granite-34b", "qwen2-1.5b", "qwen2-7b", "qwen2-vl-7b",
+    "rwkv6-7b", "zamba2-2.7b", "moonshot-v1-16b-a3b", "granite-moe-1b-a400m",
+    "seamless-m4t-medium",
+)
+
+
+def get_arch(name: str) -> ArchConfig:
+    mod = importlib.import_module(
+        f"repro.configs.{name.replace('-', '_').replace('.', '_')}")
+    return mod.CONFIG
+
+
+def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> bool:
+    if shape.name == "long_500k":
+        # needs sub-quadratic attention: SSM / hybrid only (DESIGN.md §5)
+        return arch.sub_quadratic
+    return True
+
+
+def runnable_cells():
+    """All (arch_id, shape_name) cells per the assignment rules."""
+    for aid in ARCH_IDS:
+        arch = get_arch(aid)
+        for sname, shape in SHAPES.items():
+            if shape_applicable(arch, shape):
+                yield aid, sname

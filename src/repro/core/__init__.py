@@ -1,0 +1,3 @@
+"""Core BitParticle numerics, cost models and simulators."""
+
+from repro.core import bitparticle, bp_matmul, quant, sparsity  # noqa: F401

@@ -1,0 +1,181 @@
+"""Cycle-accurate simulator of the quasi-synchronizing MAC array (Sec. IV-B).
+
+Faithful to the paper's simulator (Section IV-B3):
+
+  * 16 x 32 PE array; each *column* is a synchronization group (32 groups).
+  * **Intra-group elasticity**: every PE owns an operand queue of depth Q.
+    A column "propagates one step forward" only when all 16 of its PEs accept
+    the step's operands (Q = 0 degenerates to strict in-column sync: all PEs
+    must be idle).
+  * **Inter-group elasticity**: the fastest column may run at most E steps
+    ahead of the slowest (weight buffer holds E+1 weight versions).
+  * **Zero-value filtering**: zero operands are filtered before the queue and
+    cost 0 cycles.
+  * Data correlation matches the dataflow: the weight of row r at step s is
+    shared by all 32 columns; the activation entering column c at step s
+    propagates down the rows, so PE (r, c) at column-step s multiplies
+    weight[r, s] x activation[c, s - r].
+  * "As long as a column is ready to advance, sufficient input data is always
+    available" — no cache-miss stalls are modeled, per the paper.
+
+Pure numpy (a discrete-cycle loop over vectorized (R, C) state) — this is
+tooling around the JAX framework, mirroring the paper's C++-style simulator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitparticle as bp
+from repro.core.sparsity import sample_with_bit_sparsity
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayConfig:
+    rows: int = 16
+    cols: int = 32
+    E: int = 3                 # inter-group step divergence bound
+    Q: int = 2                 # per-PE operand queue depth
+    zero_filter: bool = False  # pre-queue zero-value filtering
+    approx: bool = False       # approximate MAC variant (cycle model)
+
+    @property
+    def weight_buffer_depth(self) -> int:
+        return self.E + 1      # Section IV-B2
+
+
+@dataclasses.dataclass
+class SimResult:
+    cycles: int
+    n_steps: int
+    pe_utilization: float      # busy PE-cycles / (R*C*cycles)
+    avg_cycles_per_step: float # cycles / n_steps   (Fig. 9 metric)
+    throughput_steps_per_cycle: float
+    max_observed_divergence: int
+
+
+def build_op_costs(key, cfg: ArrayConfig, n_steps: int, bit_sparsity: float,
+                   w_value_sparsity: float = 0.0,
+                   a_value_sparsity: float = 0.0) -> np.ndarray:
+    """Per-(row, col, step) MAC cycle costs from the paper's data generator.
+
+    Weights: (R, S) shared across columns.  Activations: (C, S + R - 1);
+    the activation consumed by PE (r, c) at column-step s entered at step
+    s - r (pipeline skew), giving the in-column reuse correlation.
+    """
+    kw, ka = jax.random.split(key)
+    w = sample_with_bit_sparsity(kw, (cfg.rows, n_steps), bit_sparsity,
+                                 w_value_sparsity)
+    a = sample_with_bit_sparsity(ka, (cfg.cols, n_steps + cfg.rows - 1),
+                                 bit_sparsity, a_value_sparsity)
+    # a_used[r, c, s] = a[c, s - r + (R-1)]
+    s_idx = np.arange(n_steps)[None, None, :]
+    r_idx = np.arange(cfg.rows)[:, None, None]
+    a_used = np.asarray(a)[np.arange(cfg.cols)[None, :, None],
+                           s_idx - r_idx + (cfg.rows - 1)]
+    w_used = np.broadcast_to(np.asarray(w)[:, None, :],
+                             (cfg.rows, cfg.cols, n_steps))
+    costs = np.asarray(
+        bp.mac_cycles(jnp.asarray(w_used), jnp.asarray(a_used),
+                      approx=cfg.approx))
+    if cfg.zero_filter:
+        costs = np.where((w_used == 0) | (a_used == 0), 0, costs)
+    return costs.astype(np.int32)
+
+
+def simulate(costs: np.ndarray, cfg: ArrayConfig) -> SimResult:
+    """Run the quasi-synchronous schedule over a (R, C, S) cost tensor."""
+    R, C, S = costs.shape
+    assert (R, C) == (cfg.rows, cfg.cols)
+    Q = cfg.Q
+    qcap = max(Q, 1)
+    queue = np.zeros((R, C, qcap), np.int32)   # FIFO of pending op costs
+    qlen = np.zeros((R, C), np.int32)
+    exec_rem = np.zeros((R, C), np.int32)
+    steps = np.full(C, -1, np.int64)           # last accepted step per column
+    busy_cycles = 0
+    cycles = 0
+    max_div = 0
+    # safety bound: every op serialized + drain
+    max_cycles = int(costs.sum() + 4 * S + R * C + 64)
+
+    while True:
+        # termination: everything accepted and drained
+        if (steps == S - 1).all() and not exec_rem.any() and not qlen.any():
+            break
+        cycles += 1
+        assert cycles <= max_cycles, "simulator failed to make progress"
+
+        # --- 1. column advancement (acceptance) -------------------------
+        # The divergence bound (fastest <= slowest + E) is evaluated against
+        # the POST-advance step vector: columns all sitting at the same step
+        # may advance together even at E = 0.  Fixpoint over the (monotone)
+        # constraint set.
+        if Q == 0:
+            accept_ok = ((exec_rem == 0) & (qlen == 0)).all(axis=0)
+        else:
+            accept_ok = (qlen < Q).all(axis=0)
+        adv = accept_ok & (steps < S - 1)
+        while adv.any():
+            new_min = np.where(adv, steps + 1, steps).min()
+            adv2 = adv & (steps + 1 - new_min <= cfg.E)
+            if (adv2 == adv).all():
+                break
+            adv = adv2
+        if adv.any():
+            new_steps = steps[adv] + 1
+            new_costs = costs[:, adv, :][np.arange(R)[:, None],
+                                         np.arange(adv.sum())[None, :],
+                                         new_steps[None, :]]
+            nz = new_costs > 0                 # zero-cost ops never enqueue
+            cols_adv = np.where(adv)[0]
+            if Q == 0:
+                # straight to execution (PE proven idle)
+                er = exec_rem[:, cols_adv]
+                er[nz] = new_costs[nz]
+                exec_rem[:, cols_adv] = er
+            else:
+                qv = queue[:, cols_adv, :]
+                ql = qlen[:, cols_adv]
+                r_i, c_i = np.nonzero(nz)
+                qv[r_i, c_i, ql[r_i, c_i]] = new_costs[r_i, c_i]
+                ql[r_i, c_i] += 1
+                queue[:, cols_adv, :] = qv
+                qlen[:, cols_adv] = ql
+            steps[adv] += 1
+            max_div = max(max_div, int(steps.max() - steps.min()))
+
+        # --- 2. issue: idle PEs pop the queue head ----------------------
+        pop = (exec_rem == 0) & (qlen > 0)
+        if pop.any():
+            exec_rem[pop] = queue[pop, 0]
+            queue[pop] = np.roll(queue[pop], -1, axis=-1)
+            queue[pop, qcap - 1] = 0
+            qlen[pop] -= 1
+
+        # --- 3. execute one cycle ---------------------------------------
+        busy = exec_rem > 0
+        busy_cycles += int(busy.sum())
+        exec_rem[busy] -= 1
+
+    return SimResult(
+        cycles=cycles,
+        n_steps=S,
+        pe_utilization=busy_cycles / (R * C * max(cycles, 1)),
+        avg_cycles_per_step=cycles / S,
+        throughput_steps_per_cycle=S / max(cycles, 1),
+        max_observed_divergence=max_div,
+    )
+
+
+def run_experiment(seed: int, cfg: ArrayConfig, n_steps: int,
+                   bit_sparsity: float, w_value_sparsity: float = 0.0,
+                   a_value_sparsity: float = 0.0) -> SimResult:
+    costs = build_op_costs(jax.random.PRNGKey(seed), cfg, n_steps,
+                           bit_sparsity, w_value_sparsity, a_value_sparsity)
+    return simulate(costs, cfg)

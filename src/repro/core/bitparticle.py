@@ -1,0 +1,330 @@
+"""BitParticle core numerics: particlization-based dual-factor bit-sparse MAC.
+
+Faithful, bit-exact emulation of the MAC unit of
+
+    "BitParticle: Partializing Sparse Dual-Factors to Build Quasi-Synchronizing
+     MAC Arrays for Energy-efficient DNNs" (cs.AR 2025), Section III.
+
+Operands are 8-bit **sign-magnitude**: 1 sign bit + 7 magnitude bits, range
+[-127, 127].  Each 7-bit magnitude is split into four *particles* with bit
+widths (2, 2, 2, 1) and LSB weights (0, 2, 4, 6):
+
+    p0 = m[1:0]   p1 = m[3:2]   p2 = m[5:4]   p3 = m[6]
+
+Cross-multiplying the particles of the two operands yields a 4x4 matrix of
+*intermediate results* (IRs); IR(i, j) = pa_i * pw_j has LSB weight 2*(i+j)
+and position ID 4*i + j.  IRs on the same anti-diagonal (i + j = k) share an
+LSB weight and form the seven *groups* (k = 0..6).  The groups are split into
+
+    Group Set 0:  k in {0, 2, 4, 6}   -> IDs {0}, {2,5,8}, {7,10,13}, {15}
+    Group Set 1:  k in {1, 3, 5}      -> IDs {1,4}, {3,6,9,12}, {11,14}
+
+Within a set, one selected IR per group never overlaps another group's field,
+so the selections *concatenate* (zero-overhead wiring) into one partial
+product of <= 13 bits per set.  One IR per group is consumed per cycle, hence
+
+    cycles(a, w) = max(1, max_k #nonzero IRs in group k)  in  [1, 4]
+
+and at most 3 (set 0) + 4 (set 1) = 7 partial products are ever produced --
+matching a conventional 7-bit multiplier's worst case.
+
+The *approximate* variant (Section III-B4) unconditionally discards group
+{0} (k=0) and group {1,4} (k=1):
+
+    approx(|a|, |w|) = |a|*|w| - a0*w0 - 4*(a0*w1 + a1*w0)
+
+with a0 = |a| & 3, a1 = (|a| >> 2) & 3 (same for w), sign applied afterwards.
+
+Everything here is vectorized jnp over arbitrary-shaped integer arrays and is
+the single source of truth ("oracle") for the Pallas kernels, the cycle/energy
+cost models, and the benchmark suite.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Static structure of the particlization (Section III-A, Fig. 4).
+# ---------------------------------------------------------------------------
+
+PARTICLE_WIDTHS = (2, 2, 2, 1)          # widths of p0..p3 (LSB..MSB order)
+PARTICLE_LSB_WEIGHTS = (0, 2, 4, 6)     # LSB weight of p0..p3
+NUM_PARTICLES = 4
+NUM_GROUPS = 7                           # anti-diagonals k = i + j in 0..6
+
+#: group k -> tuple of position IDs (ID = 4*i + j) lying on anti-diagonal k.
+GROUP_IDS = tuple(
+    tuple(4 * i + j for i in range(4) for j in range(4) if i + j == k)
+    for k in range(NUM_GROUPS)
+)
+# GROUP_IDS == ((0,), (1, 4), (2, 5, 8), (3, 6, 9, 12), (7, 10, 13), (11, 14), (15,))
+
+#: the paper's two group sets (by anti-diagonal index k).
+GROUP_SET0 = (0, 2, 4, 6)   # LSB weights 0, 4, 8, 12  -> one 13-bit PP
+GROUP_SET1 = (1, 3, 5)      # LSB weights 2, 6, 10     -> one 13-bit PP
+
+#: groups discarded by the approximate variant: group "0" and group "1-4".
+APPROX_DROPPED_GROUPS = (0, 1)
+
+#: the seven representable IR values (2-bit x 2-bit products).
+IR_VALUE_SET = (0, 1, 2, 3, 4, 6, 9)
+
+MAX_MAGNITUDE = 127          # sign-magnitude 8-bit range is [-127, 127]
+MAX_CYCLES = 4               # largest group has 4 IRs
+MAX_PARTIAL_PRODUCTS = 7     # 3 from set 0 + 4 from set 1
+
+
+# ---------------------------------------------------------------------------
+# Sign-magnitude helpers.
+# ---------------------------------------------------------------------------
+
+def to_sign_magnitude(x):
+    """Split signed ints in [-127, 127] into (sign, magnitude).
+
+    sign is 1 for negative, 0 otherwise (int32); magnitude is |x| (int32).
+    """
+    x = jnp.asarray(x, jnp.int32)
+    return (x < 0).astype(jnp.int32), jnp.abs(x)
+
+
+def from_sign_magnitude(sign, mag):
+    sign = jnp.asarray(sign, jnp.int32)
+    mag = jnp.asarray(mag, jnp.int32)
+    return jnp.where(sign != 0, -mag, mag)
+
+
+# ---------------------------------------------------------------------------
+# Step 1-2: particlization and the IR matrix.
+# ---------------------------------------------------------------------------
+
+def particlize(mag):
+    """Split 7-bit magnitudes into particles.  Returns (..., 4) int32.
+
+    Particle order is LSB-first: [m&3, (m>>2)&3, (m>>4)&3, (m>>6)&1].
+    """
+    mag = jnp.asarray(mag, jnp.int32)
+    p0 = mag & 3
+    p1 = (mag >> 2) & 3
+    p2 = (mag >> 4) & 3
+    p3 = (mag >> 6) & 1
+    return jnp.stack([p0, p1, p2, p3], axis=-1)
+
+
+def unparticlize(particles):
+    """Inverse of :func:`particlize` (for round-trip tests)."""
+    p = jnp.asarray(particles, jnp.int32)
+    return p[..., 0] + (p[..., 1] << 2) + (p[..., 2] << 4) + (p[..., 3] << 6)
+
+
+def ir_matrix(mag_a, mag_w):
+    """The 4x4 intermediate-result matrix.  Returns (..., 4, 4) int32.
+
+    IR[..., i, j] = particle_i(|a|) * particle_j(|w|); LSB weight 2*(i+j).
+    """
+    pa = particlize(mag_a)[..., :, None]
+    pw = particlize(mag_w)[..., None, :]
+    return pa * pw
+
+
+# i + j for the (4, 4) IR matrix — anti-diagonal (= group) index per position.
+_DIAG_INDEX = np.add.outer(np.arange(4), np.arange(4))  # (4, 4) ints 0..6
+
+
+# ---------------------------------------------------------------------------
+# Step 3-5: grouping, selection, concatenation, accumulation.
+# ---------------------------------------------------------------------------
+
+def group_nonzero_counts(mag_a, mag_w):
+    """#nonzero IRs per anti-diagonal group.  Returns (..., 7) int32."""
+    irs = ir_matrix(mag_a, mag_w)
+    nz = (irs != 0).astype(jnp.int32)
+    counts = []
+    for k in range(NUM_GROUPS):
+        mask = jnp.asarray(_DIAG_INDEX == k)
+        counts.append(jnp.sum(nz * mask, axis=(-2, -1)))
+    return jnp.stack(counts, axis=-1)
+
+
+def mac_cycles(a, w, approx: bool = False):
+    """Initiation interval (cycles) of one BitParticle MAC, elementwise.
+
+    cycles = max(1, max_k nnz_k) over the groups the variant evaluates.
+    Zero-valued products still cost one cycle here; zero-value *filtering*
+    (cost 0) is an array-level mechanism handled by the scheduler/simulator.
+    """
+    _, mag_a = to_sign_magnitude(a)
+    _, mag_w = to_sign_magnitude(w)
+    counts = group_nonzero_counts(mag_a, mag_w)
+    if approx:
+        keep = np.array([k not in APPROX_DROPPED_GROUPS for k in range(NUM_GROUPS)])
+        counts = counts * jnp.asarray(keep, jnp.int32)
+    return jnp.maximum(1, jnp.max(counts, axis=-1))
+
+
+def magnitude_product_from_irs(mag_a, mag_w, dropped_groups=()):
+    """Reconstruct |a|*|w| as the weighted IR sum (the hardware's math).
+
+    ``dropped_groups`` lists anti-diagonal indices whose IRs are discarded
+    (the approximate variant uses ``APPROX_DROPPED_GROUPS``).
+    """
+    irs = ir_matrix(mag_a, mag_w)
+    weights = np.left_shift(1, 2 * _DIAG_INDEX).astype(np.int64)
+    for k in dropped_groups:
+        weights = np.where(_DIAG_INDEX == k, 0, weights)
+    return jnp.sum(irs * jnp.asarray(weights, jnp.int32), axis=(-2, -1))
+
+
+def multiply_exact(a, w):
+    """Signed exact BitParticle product (== a * w, verified exhaustively)."""
+    sa, ma = to_sign_magnitude(a)
+    sw, mw = to_sign_magnitude(w)
+    mag = magnitude_product_from_irs(ma, mw)
+    return from_sign_magnitude(sa ^ sw, mag)
+
+
+def multiply_approx(a, w):
+    """Signed approximate BitParticle product (groups {0} and {1,4} dropped)."""
+    sa, ma = to_sign_magnitude(a)
+    sw, mw = to_sign_magnitude(w)
+    mag = magnitude_product_from_irs(ma, mw, APPROX_DROPPED_GROUPS)
+    return from_sign_magnitude(sa ^ sw, mag)
+
+
+def approx_correction(a, w):
+    """The signed term subtracted by the approximate variant.
+
+    multiply_approx(a, w) == a*w - approx_correction(a, w), with
+
+        correction = s * (a0*w0 + 4*(a0*w1 + a1*w0)),   s = sign(a)*sign(w)
+
+    This *algebraic* form is what the Pallas matmul kernel uses: defining the
+    signed low particles A0 = sign(a)*(|a| & 3), A1 = sign(a)*((|a|>>2) & 3)
+    (same for W), the correction of a dot product factorizes into three small
+    matmuls:  A0@W0 + 4*(A0@W1 + A1@W0).
+    """
+    sa, ma = to_sign_magnitude(a)
+    sw, mw = to_sign_magnitude(w)
+    a0, a1 = ma & 3, (ma >> 2) & 3
+    w0, w1 = mw & 3, (mw >> 2) & 3
+    mag = a0 * w0 + 4 * (a0 * w1 + a1 * w0)
+    return from_sign_magnitude(sa ^ sw, mag)
+
+
+# ---------------------------------------------------------------------------
+# Cycle-by-cycle partial-product assembly (Section III-B1).
+#
+# This mirrors the datapath literally: per cycle, one nonzero IR is selected
+# from every group by priority (lowest position ID first, matching the
+# priority-selection logic), the set-0 and set-1 selections are concatenated
+# into two partial products, added by the 13-bit adder and accumulated.
+# It exists to *prove* the <=7-PP claim and the concatenation-overlap-freedom
+# claim in tests; bulk numerics use the closed forms above.
+# ---------------------------------------------------------------------------
+
+def assemble_partial_products(a: int, w: int):
+    """Scalar, python-level datapath emulation.
+
+    Returns (product, pps, cycles) where ``pps`` is the list of (set0_pp,
+    set1_pp) pairs produced per cycle, as signed-magnitude integers before
+    sign application.
+    """
+    a, w = int(a), int(w)
+    assert abs(a) <= MAX_MAGNITUDE and abs(w) <= MAX_MAGNITUDE
+    sign = (a < 0) != (w < 0)
+    ma, mw = abs(a), abs(w)
+    pa = [(ma >> s) & (2 ** wd - 1) for s, wd in zip(PARTICLE_LSB_WEIGHTS, PARTICLE_WIDTHS)]
+    pw = [(mw >> s) & (2 ** wd - 1) for s, wd in zip(PARTICLE_LSB_WEIGHTS, PARTICLE_WIDTHS)]
+    # nonzero register: ID -> IR value (only nonzero entries retained)
+    pending = {}
+    for i in range(4):
+        for j in range(4):
+            v = pa[i] * pw[j]
+            if v:
+                pending[4 * i + j] = v
+    pps = []
+    acc = 0
+    cycles = 0
+    while True:
+        cycles += 1
+        set_pps = []
+        for group_set in (GROUP_SET0, GROUP_SET1):
+            pp = 0
+            for k in group_set:
+                for pos in GROUP_IDS[k]:          # priority: lowest ID first
+                    if pos in pending:
+                        ir = pending.pop(pos)
+                        field = ir << (2 * k)
+                        assert pp & field == 0, "concatenation fields overlap"
+                        pp |= field                # concatenation, not addition
+                        break
+            set_pps.append(pp)
+        pps.append(tuple(set_pps))
+        acc += set_pps[0] + set_pps[1]             # the 13-bit adder + accumulate
+        if not pending:
+            break
+        assert cycles < MAX_CYCLES + 1
+    return (-acc if sign else acc), pps, max(1, cycles)
+
+
+# ---------------------------------------------------------------------------
+# 3-bit IR encoding (Section III-B3): values {0,1,2,3,4,6,9}, 9 -> 0b111.
+# ---------------------------------------------------------------------------
+
+def ir_encode3(ir):
+    """Encode a 4-bit IR value in {0,1,2,3,4,6,9} into 3 bits (9 -> 7)."""
+    ir = jnp.asarray(ir, jnp.int32)
+    return jnp.where(ir == 9, 7, ir)
+
+
+def ir_decode3(code):
+    """Inverse of :func:`ir_encode3` (7 -> 9)."""
+    code = jnp.asarray(code, jnp.int32)
+    return jnp.where(code == 7, 9, code)
+
+
+# ---------------------------------------------------------------------------
+# Skipped-calculations metric (Section V-C, Fig. 11).
+#
+# A 7x7 grid of single-bit multiplications per MAC; a bitwise product with a
+# zero operand bit is "skippable".  Metric = skipped / 49, averaged.
+# ---------------------------------------------------------------------------
+
+def _popcount7(mag):
+    mag = jnp.asarray(mag, jnp.int32)
+    c = jnp.zeros_like(mag)
+    for b in range(7):
+        c = c + ((mag >> b) & 1)
+    return c
+
+
+def skipped_calculations(a, w, method: str):
+    """Fraction of the 49 single-bit products skipped, elementwise.
+
+    methods:
+      ``ideal``      skip every product with a zero bit on either side.
+      ``bit_serial`` skip zero bits of operand ``a`` only (7 products each).
+      ``bp_exact``   skip products inside all-zero 2-bit particles (both sides).
+      ``bp_approx``  bp_exact plus the unconditionally dropped groups k in {0,1}.
+    """
+    _, ma = to_sign_magnitude(a)
+    _, mw = to_sign_magnitude(w)
+    if method == "ideal":
+        computed = _popcount7(ma) * _popcount7(mw)
+    elif method == "bit_serial":
+        computed = _popcount7(ma) * 7
+    elif method in ("bp_exact", "bp_approx"):
+        pa = (particlize(ma) != 0).astype(jnp.int32)      # (..., 4)
+        pw = (particlize(mw) != 0).astype(jnp.int32)
+        widths = jnp.asarray(PARTICLE_WIDTHS, jnp.int32)
+        wa = pa * widths                                   # bits evaluated per particle
+        ww = pw * widths
+        pair = wa[..., :, None] * ww[..., None, :]          # (..., 4, 4) bit products
+        if method == "bp_approx":
+            keep = jnp.asarray(_DIAG_INDEX >= 2, jnp.int32)
+            pair = pair * keep
+        computed = jnp.sum(pair, axis=(-2, -1))
+    else:
+        raise ValueError(f"unknown method: {method}")
+    return 1.0 - computed.astype(jnp.float32) / 49.0

@@ -1,0 +1,162 @@
+"""Quantized matmul backends with BitParticle numerics.
+
+Three modes, selectable per layer / per config:
+
+  ``bf16``      plain mixed-precision matmul (the unquantized baseline).
+  ``bp_exact``  W8A8 sign-magnitude int8 matmul.  BitParticle's exact MAC is
+                bit-identical to integer multiply (proven exhaustively in
+                tests), so the TPU lowering is a single int8xint8->int32 MXU
+                contraction + dequant epilogue.
+  ``bp_approx`` the paper's approximate MAC (drops IR groups {0} and {1,4}).
+                Using signed low particles A0 = s.(|A| & 3), A1 = s.(|A|>>2 & 3),
+                W0 = s.(|W| & 3), Wlow4 = s.(|W| & 15):
+
+                    approx(A @ W) = A@W - A0@Wlow4 - 4*(A1@W0)
+
+                i.e. the elementwise IR-group drop factorizes into two extra
+                int8 matmuls — the TPU-native formulation of the variant.
+
+The Pallas TPU kernel in ``repro.kernels.bitparticle_matmul`` fuses all
+contractions + dequant in one VMEM pass; this module is the pure-jnp (XLA)
+implementation used for training, dry-runs, and as the kernel oracle.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+MODES = ("bf16", "qat", "bp_exact", "bp_approx")
+
+
+def signed_low_particles(q):
+    """(q0, q1, qlow4): signed particles of the two low 2-bit groups.
+
+    q0 = sign(q)*(|q| & 3), q1 = sign(q)*((|q| >> 2) & 3),
+    qlow4 = sign(q)*(|q| & 15) = q0 + 4*q1.  All int8-range int32 arrays.
+    """
+    q = jnp.asarray(q, jnp.int32)
+    s = jnp.sign(q)
+    m = jnp.abs(q)
+    q0 = s * (m & 3)
+    q1 = s * ((m >> 2) & 3)
+    return q0, q1, q0 + 4 * q1
+
+
+def int_matmul(a_q, w_q):
+    """int8 x int8 -> int32 contraction over the last/first axes (MXU-native)."""
+    return jax.lax.dot_general(
+        a_q.astype(jnp.int8), w_q.astype(jnp.int8),
+        (((a_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def bp_matmul_int(a_q, w_q, mode: str = "bp_exact"):
+    """Integer-domain BitParticle matmul: int8 operands -> int32 accumulators."""
+    acc = int_matmul(a_q, w_q)
+    if mode == "bp_exact":
+        return acc
+    if mode == "bp_approx":
+        a0, a1, _ = signed_low_particles(a_q)
+        w0, _, wlow4 = signed_low_particles(w_q)
+        corr = int_matmul(a0, wlow4) + 4 * int_matmul(a1, w0)
+        return acc - corr
+    raise ValueError(f"unknown integer mode: {mode}")
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def quantized_matmul(x, w, w_scale, mode: str):
+    """Dequantizing BitParticle matmul with a straight-through gradient.
+
+    x: (..., K) float; w: (K, N) int8 (pre-quantized, per-channel w_scale (N,)).
+    Activations are dynamically per-tensor quantized (the paper's per-tensor
+    symmetric scheme).  Returns (..., N) in x.dtype.
+    """
+    return _qmm_fwd_impl(x, w, w_scale, mode)
+
+
+def _qmm_fwd_impl(x, w, w_scale, mode):
+    x_scale = quant.compute_scale(x)
+    x_q = quant.quantize(x, x_scale)
+    acc = bp_matmul_int(x_q, w, mode)
+    return (acc.astype(jnp.float32) * (x_scale * w_scale)).astype(x.dtype)
+
+
+def _qmm_fwd(x, w, w_scale, mode):
+    return _qmm_fwd_impl(x, w, w_scale, mode), (x, w, w_scale)
+
+
+def _qmm_bwd(mode, res, g):
+    x, w, w_scale = res
+    # STE through quantization: grads flow as if the matmul were x @ (w*ws).
+    w_f = w.astype(g.dtype) * w_scale.astype(g.dtype)
+    gx = jnp.einsum("...n,kn->...k", g, w_f)
+    gw = jnp.zeros_like(w)  # int weights are not trained through this path
+    gws = jnp.zeros_like(w_scale)
+    return gx, gw, gws
+
+
+quantized_matmul.defvjp(_qmm_fwd, _qmm_bwd)
+
+
+@jax.custom_vjp
+def quantized_gather(w):
+    """Per-channel int8 quantize -> replicate (the collective moves int8) ->
+    dequantize.  STE backward: the cotangent passes straight to the sharded
+    weight (its resharding transposes to a reduce-scatter under SPMD).
+
+    This is the paper's W8 quantization applied to the *FSDP all-gather
+    wire format*: weight-gather bytes halve vs bf16 (EXPERIMENTS.md §Perf B).
+    """
+    from repro.distributed.sharding import force_replicated
+    scale = quant.compute_scale(w.astype(jnp.float32), axis=(0,))
+    q = quant.quantize(w.astype(jnp.float32), scale)
+    q = force_replicated(q)
+    return (q.astype(jnp.float32) * scale).astype(w.dtype)
+
+
+def _qg_fwd(w):
+    return quantized_gather(w), None
+
+
+def _qg_bwd(_, g):
+    return (g,)
+
+
+quantized_gather.defvjp(_qg_fwd, _qg_bwd)
+
+
+def dense_apply(x, w_f, mode: str, *, precision=None):
+    """Dense layer forward used by all models: float weights, mode-dependent.
+
+    ``bf16``: plain matmul.  Quantized modes: weights are per-channel
+    fake-routed through int8 (dynamic quantization of both operands) so that
+    dry-run HLO contains the true int8 contraction graph.  For training the
+    straight-through estimator keeps the graph differentiable.
+    The ``+q8gather`` suffix routes the weight through
+    :func:`quantized_gather` first (int8 on the FSDP gather wire).
+    """
+    if mode.endswith("+q8gather"):
+        w_f = quantized_gather(w_f)
+        mode = mode[: -len("+q8gather")]
+    if w_f.dtype == jnp.int8:
+        # pre-quantized serving weights: the scale rides along in the params
+        raise ValueError("int8 weights must go through dense() with w_scale")
+    if mode == "bf16":
+        return jnp.einsum("...k,kn->...n", x, w_f, precision=precision)
+    if mode == "qat":
+        # Quantization-aware training: fake-quant both operands (STE grads
+        # flow to the float weights), float MXU matmul.
+        ws = quant.compute_scale(w_f.astype(jnp.float32), axis=(0,))
+        w_fq = quant.fake_quant(w_f.astype(jnp.float32), ws).astype(x.dtype)
+        xs = quant.compute_scale(x.astype(jnp.float32))
+        x_fq = quant.fake_quant(x.astype(jnp.float32), xs).astype(x.dtype)
+        return jnp.einsum("...k,kn->...n", x_fq, w_fq, precision=precision)
+    w_q, w_scale = quant.quantize_per_channel(w_f.astype(jnp.float32), channel_axis=-1)
+    w_scale = w_scale.reshape(-1)  # (N,)
+    return quantized_matmul(x, w_q, w_scale, mode)

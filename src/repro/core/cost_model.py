@@ -1,0 +1,186 @@
+"""Area / power / energy / cycle cost models (paper Tables II-III, Figs 12-13).
+
+Two kinds of numbers live here, kept strictly apart:
+
+  * **Cited constants** — the paper's RTL-synthesis results (45 nm, 500 MHz,
+    Synopsys DC): per-unit area and power, and Table III's measured average
+    cycles.  No RTL toolchain exists offline, so these are inputs, exactly as
+    CACTI/DC outputs were inputs to the paper's own system model.
+  * **First-principles models** — average-cycle models for BitParticle (from
+    the bit-exact emulation), an ideal bit-serial unit, and BitWave's
+    column-skip scheme, Monte-Carlo'd over the paper's data generator.  The
+    benchmark suite reports modeled-vs-cited deltas.
+
+Memory energies follow Horowitz, "Computing's energy problem" (ISSCC 2014),
+45 nm: ~10 pJ per 32-bit access for an 8 KiB SRAM, scaling ~sqrt(capacity);
+DRAM ~1.3 nJ per 32-bit access.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitparticle as bp
+from repro.core.sparsity import sample_with_bit_sparsity
+
+CLOCK_HZ = 500e6
+SPARSITY_LEVELS = (0.5, 0.6, 0.7, 0.8, 0.9)
+
+# --- Table III (cited) ------------------------------------------------------
+
+PAPER_AVG_CYCLES: Dict[str, tuple] = {
+    "adas":      (3.22, 2.46, 1.80, 1.29, 1.04),
+    "bitwave":   (0.91, 0.85, 0.76, 0.62, 0.42),
+    "bp_exact":  (2.14, 1.71, 1.34, 1.10, 1.01),
+    "bp_approx": (2.12, 1.69, 1.33, 1.10, 1.01),
+}
+
+AREA_UM2: Dict[str, float] = {
+    "adas": 462.04, "bitwave": 1504.76, "bp_exact": 544.50, "bp_approx": 443.42,
+}
+
+POWER_UW: Dict[str, tuple] = {
+    "adas":      (439.81, 434.80, 420.49, 368.47, 285.83),
+    "bitwave":   (1054.50, 1008.10, 923.44, 867.41, 728.43),
+    "bp_exact":  (509.38, 481.01, 451.49, 392.54, 318.13),
+    "bp_approx": (432.20, 409.94, 386.40, 339.17, 273.24),
+}
+
+# --- Table II (cited) -------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorConfig:
+    name: str
+    pe_count: int
+    w_cache_bytes: int
+    a_cache_bytes: int
+    r_cache_bytes: int
+    metadata_bytes: int = 0
+
+
+ACCEL_CONFIGS = {
+    "bitparticle": AcceleratorConfig("bitparticle", 512, 64 << 10, 128 << 10, 128 << 10),
+    "bitwave": AcceleratorConfig("bitwave", 512, 256 << 10, 256 << 10, 0),
+    "adas": AcceleratorConfig("adas", 256, 128 << 10, 128 << 10, 0, 64 << 10),
+}
+
+# --- Memory energy / area (Horowitz ISSCC'14-derived, 45 nm) ---------------
+
+DRAM_PJ_PER_BYTE = 1300.0 / 4.0          # ~1.3 nJ / 32-bit access
+SRAM_MM2_PER_KB = 0.0007 * 2.0           # ~1.4e-3 mm^2 per KB at 45 nm
+
+
+def sram_pj_per_byte(capacity_bytes: int) -> float:
+    """~10 pJ / 32-bit at 8 KiB, scaling with sqrt(capacity)."""
+    return (10.0 / 4.0) * math.sqrt(max(capacity_bytes, 1024) / 8192.0)
+
+
+# --- First-principles average-cycle models ----------------------------------
+
+def _mc_operands(bit_sparsity: float, n: int, seed: int):
+    ka, kw = jax.random.split(jax.random.PRNGKey(seed))
+    a = sample_with_bit_sparsity(ka, (n,), bit_sparsity)
+    w = sample_with_bit_sparsity(kw, (n,), bit_sparsity)
+    return a, w
+
+
+def modeled_avg_cycles(method: str, bit_sparsity: float, n: int = 200_000,
+                       seed: int = 0) -> float:
+    """Monte-Carlo average cycles per MAC under the paper's data generator.
+
+    methods: ``bp_exact`` / ``bp_approx`` — the emulated BitParticle unit;
+    ``bit_serial`` — idealized single-factor bit-serial (AdaS-class):
+    cycles = max(1, #nonzero magnitude bits of one operand);
+    ``bitwave`` — 8-lane column skipping: a bit column is processed iff any
+    of 8 grouped operands has a 1 there; cycles/op = surviving columns / 8.
+    """
+    a, w = _mc_operands(bit_sparsity, n, seed)
+    if method in ("bp_exact", "bp_approx"):
+        c = bp.mac_cycles(a, w, approx=(method == "bp_approx"))
+        return float(jnp.mean(c.astype(jnp.float32)))
+    if method == "bit_serial":
+        _, mag = bp.to_sign_magnitude(a)
+        nnz = bp._popcount7(mag)
+        return float(jnp.mean(jnp.maximum(1, nnz).astype(jnp.float32)))
+    if method == "bitwave":
+        _, mag = bp.to_sign_magnitude(a)
+        groups = mag[: n // 8 * 8].reshape(-1, 8)
+        cols = jnp.zeros((groups.shape[0],), jnp.int32)
+        for b in range(7):
+            cols = cols + (jnp.any((groups >> b) & 1, axis=1)).astype(jnp.int32)
+        return float(jnp.mean(cols.astype(jnp.float32))) / 8.0
+    raise ValueError(method)
+
+
+# --- Efficiency metrics (Table III derivations) ------------------------------
+
+def tops(avg_cycles: float, n_units: int = 1) -> float:
+    """Tera-ops/s: one MAC = 2 ops, at CLOCK_HZ, initiation interval = cycles."""
+    return 2.0 * CLOCK_HZ * n_units / avg_cycles / 1e12
+
+
+def area_efficiency(avg_cycles: float, area_um2: float) -> float:
+    """TOPS / mm^2 for a single unit."""
+    return tops(avg_cycles) / (area_um2 * 1e-6)
+
+
+def energy_efficiency(avg_cycles: float, power_uw: float) -> float:
+    """TOPS / W for a single unit."""
+    return tops(avg_cycles) / (power_uw * 1e-6)
+
+
+def table3(cycles_source: str = "paper") -> Dict[str, Dict[str, list]]:
+    """Reproduce Table III's normalized efficiency rows.
+
+    ``cycles_source``: "paper" uses the cited cycle measurements, "model"
+    uses our first-principles Monte-Carlo models (adas -> bit_serial model).
+    """
+    methods = ("adas", "bitwave", "bp_exact", "bp_approx")
+    out = {m: {"avg_cycles": [], "area_eff": [], "energy_eff": []} for m in methods}
+    for i, bs in enumerate(SPARSITY_LEVELS):
+        for m in methods:
+            if cycles_source == "paper":
+                c = PAPER_AVG_CYCLES[m][i]
+            else:
+                c = modeled_avg_cycles("bit_serial" if m == "adas" else m, bs)
+            out[m]["avg_cycles"].append(c)
+            out[m]["area_eff"].append(area_efficiency(c, AREA_UM2[m]))
+            out[m]["energy_eff"].append(energy_efficiency(c, POWER_UW[m][i]))
+    # normalize to AdaS, per sparsity level (the paper's presentation)
+    for key in ("area_eff", "energy_eff"):
+        base = list(out["adas"][key])
+        for m in methods:
+            out[m][key] = [v / b for v, b in zip(out[m][key], base)]
+    return out
+
+
+# --- Per-tensor deployment pricing (framework integration) -------------------
+
+def avg_cycles_for_tensors(w_q, a_q, approx: bool = False,
+                           zero_filter: bool = True) -> float:
+    """Expected BitParticle cycles/MAC if these quantized tensors were run on
+    the modeled array — prices real model layers (examples/estimate)."""
+    w = jnp.asarray(w_q, jnp.int32).reshape(-1)
+    a = jnp.asarray(a_q, jnp.int32).reshape(-1)
+    n = min(w.shape[0], a.shape[0], 200_000)
+    w = w[:n]
+    a = jax.random.permutation(jax.random.PRNGKey(0), a)[:n]
+    c = bp.mac_cycles(w, a, approx=approx).astype(jnp.float32)
+    if zero_filter:
+        c = jnp.where((w == 0) | (a == 0), 0.0, c)
+    return float(jnp.mean(c))
+
+
+def mac_energy_pj(unit: str, bit_sparsity: float) -> float:
+    """Per-MAC energy: (power / clock) x avg cycles, interpolating Table III."""
+    bs = float(np.clip(bit_sparsity, SPARSITY_LEVELS[0], SPARSITY_LEVELS[-1]))
+    xs = np.asarray(SPARSITY_LEVELS)
+    p = float(np.interp(bs, xs, np.asarray(POWER_UW[unit])))
+    c = float(np.interp(bs, xs, np.asarray(PAPER_AVG_CYCLES[unit])))
+    return (p * 1e-6 / CLOCK_HZ) * c * 1e12

@@ -1,0 +1,71 @@
+"""Symmetric int8 quantization matched to BitParticle's sign-magnitude range.
+
+Sign-magnitude int8 represents [-127, 127] (no -128), so all quantizers here
+clip symmetrically to +/-127 — exactly the paper's "8-bit per-tensor symmetric
+quantization" (Section III-B4).
+
+Provides per-tensor and per-channel scales, a straight-through-estimator
+fake-quant for quantization-aware passes, and the dequant epilogue used by
+the quantized matmul backends.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127  # sign-magnitude int8 magnitude range
+
+
+def compute_scale(x, axis: Optional[Sequence[int]] = None, eps: float = 1e-8):
+    """max-abs symmetric scale so that x/scale lands in [-127, 127].
+
+    ``axis=None`` -> per-tensor scalar scale.  Otherwise the reduction axes;
+    kept dims are preserved so the scale broadcasts against ``x``.
+    """
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, eps) / QMAX
+
+
+def quantize(x, scale):
+    """Round-to-nearest-even symmetric quantization to int8 in [-127, 127]."""
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_per_tensor(x):
+    scale = compute_scale(x, axis=None)
+    return quantize(x, scale), scale
+
+
+def quantize_per_channel(x, channel_axis: int = -1):
+    """Per-channel scales along ``channel_axis`` (weights: output channel)."""
+    axes = tuple(i for i in range(x.ndim) if i != channel_axis % x.ndim)
+    scale = compute_scale(x, axis=axes)
+    return quantize(x, scale), scale
+
+
+@jax.custom_vjp
+def fake_quant(x, scale):
+    """Quantize-dequantize with a straight-through gradient (QAT)."""
+    return dequantize(quantize(x, scale), scale)
+
+
+def _fake_quant_fwd(x, scale):
+    return fake_quant(x, scale), (x, scale)
+
+
+def _fake_quant_bwd(res, g):
+    x, scale = res
+    # STE: pass gradients through where |x| is inside the clip range.
+    inside = (jnp.abs(x) <= scale * QMAX).astype(g.dtype)
+    return g * inside, jnp.zeros_like(scale)
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)

@@ -1,0 +1,64 @@
+"""Value- and bit-level sparsity statistics (paper Fig. 1 and Section IV-B3).
+
+The paper measures bit-level sparsity of 8-bit quantized tensors in
+sign-magnitude representation (7 magnitude bits per element) and contrasts it
+with 2's-complement, which exhibits lower sparsity for negative values.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bitparticle import _popcount7, to_sign_magnitude
+
+
+def value_sparsity(q):
+    """Fraction of exactly-zero elements."""
+    q = jnp.asarray(q)
+    return jnp.mean((q == 0).astype(jnp.float32))
+
+
+def bit_sparsity_sign_magnitude(q, nonzero_only: bool = False):
+    """Mean fraction of zero bits among the 7 magnitude bits.
+
+    ``nonzero_only`` restricts the average to nonzero elements (the paper's
+    "bit-level sparsity of non-zero elements", Section IV-B3).
+    """
+    _, mag = to_sign_magnitude(q)
+    zeros = 7 - _popcount7(mag)
+    frac = zeros.astype(jnp.float32) / 7.0
+    if nonzero_only:
+        m = (mag != 0).astype(jnp.float32)
+        return jnp.sum(frac * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(frac)
+
+
+def bit_sparsity_twos_complement(q):
+    """Mean fraction of zero bits among all 8 bits of the 2's-complement form."""
+    q = jnp.asarray(q, jnp.int32)
+    u = jnp.where(q < 0, q + 256, q)  # 8-bit two's complement pattern
+    c = jnp.zeros_like(u)
+    for b in range(8):
+        c = c + ((u >> b) & 1)
+    return jnp.mean((8 - c).astype(jnp.float32) / 8.0)
+
+
+def sample_with_bit_sparsity(key, shape, bit_sparsity: float, value_sparsity_p: float = 0.0):
+    """Generate sign-magnitude int operands matching the paper's generator.
+
+    Each of the 7 magnitude bits is independently 0 with probability
+    ``bit_sparsity``; sign is uniform; optionally a fraction
+    ``value_sparsity_p`` of elements is forced to exact zero.
+    (Section IV-B3: "assigns each bit a probability of bs to be 0".)
+    """
+    import jax
+
+    kb, ks, kz = jax.random.split(key, 3)
+    bits = jax.random.bernoulli(kb, 1.0 - bit_sparsity, shape + (7,))
+    mag = jnp.sum(bits.astype(jnp.int32) << jnp.arange(7), axis=-1)
+    sign = jax.random.bernoulli(ks, 0.5, shape)
+    val = jnp.where(sign, -mag, mag)
+    if value_sparsity_p > 0.0:
+        zero = jax.random.bernoulli(kz, value_sparsity_p, shape)
+        val = jnp.where(zero, 0, val)
+    return val

@@ -1,0 +1,80 @@
+"""Gradient compression for cross-pod all-reduce: int8 + error feedback.
+
+The multi-pod recipe replicates params across pods and all-reduces gradients
+over the "pod" axis (DESIGN.md §4).  At 2+ pods over DCI, grad bytes dominate
+the inter-pod collective term; blockwise-int8 quantization halves bf16 wire
+bytes (4x vs fp32 grads; int8 + 1 f32 scale per 128-block).  Error feedback (Seide et al., 2014;
+Karimireddy et al., 2019) accumulates the quantization residual locally so
+the compression bias vanishes over steps — the property tests assert the
+contraction property directly.
+
+Note the symmetry with the paper: quantizing gradients to int8 exposes the
+same sign-magnitude bit sparsity BitParticle exploits — ``examples/
+estimate_deployment.py`` prices gradient traffic on the modeled hardware.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+QMAX = 127.0
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    return jnp.pad(x.reshape(-1), (0, pad)), n
+
+
+def compress(g) -> Tuple[jax.Array, jax.Array, tuple]:
+    """g (any shape, float) -> (int8 codes, f32 per-block scales, meta)."""
+    flat, n = _pad_to_block(g.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / QMAX
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -QMAX, QMAX).astype(jnp.int8)
+    return q, scale, (g.shape, n)
+
+
+def decompress(q, scale, meta):
+    shape, n = meta
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return flat.reshape(shape)
+
+
+def compress_tree_with_feedback(grads, error_state):
+    """(grads + carried error) -> compressed tree + new error state.
+
+    Returns (compressed_grads, new_error_state).  ``compressed_grads`` is the
+    dequantized value actually contributed to the all-reduce, so callers just
+    psum/mean it; the residual stays in ``new_error_state``.
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s, meta = compress(corrected)
+        sent = decompress(q, s, meta)
+        return sent.astype(g.dtype), corrected - sent
+    out = jax.tree.map(one, grads, error_state)
+    sent = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    return sent, err
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_bytes(tree) -> int:
+    """Wire bytes if every leaf were int8+scales (for the roofline model)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = leaf.size
+        blocks = -(-n // BLOCK)
+        total += n + 4 * blocks
+    return total

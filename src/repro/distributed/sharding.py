@@ -1,0 +1,188 @@
+"""Logical-axis sharding: recipes mapping model-logical axes onto the mesh.
+
+The paper switches between two dataflows per layer shape (Section IV-A); at
+pod scale we switch between sharding *recipes* per workload shape:
+
+  train / prefill   batch -> ("pod", "data"); sequence -> "model"
+                    (Megatron-style sequence parallelism for the residual
+                    stream; KV is gathered inside attention); params
+                    2D-sharded (FSDP over "data" x TP over "model").
+  decode            batch -> ("pod", "data"); KV-cache seq -> "model"
+                    (split-KV decode: XLA partial-softmax-reduces over the
+                    sharded cache axis); params TP-sharded over "model".
+  decode_long       global_batch = 1: cache seq -> ("data", "model"),
+                    recurrent-state heads -> "model".
+
+Constraints are no-ops when no mesh is active (single-device tests) and skip
+mesh axes that don't exist (e.g. "pod" on the single-pod mesh), so the same
+model code runs everywhere.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+# logical activation axis -> preferred mesh axes (tuples tried in order)
+ACTIVATION_RULES = {
+    "train": {
+        "batch": ("pod", "data"),
+        "seq": ("model",),
+        "tokens_flat": ("pod", "data", "model"),
+        "kv_seq": (),            # gathered for attention
+        "experts": ("model",),
+        "cache_seq": ("model",),
+        "heads": (),
+        "embed": (),
+        "ffn": (),
+    },
+    "decode": {
+        "batch": ("pod", "data"),
+        "seq": (),
+        "tokens_flat": ("pod", "data"),
+        "kv_seq": ("model",),
+        "experts": ("model",),
+        "cache_seq": ("model",),
+        "heads": (),
+        "embed": (),
+        "ffn": ("model",),
+    },
+    "decode_long": {
+        "batch": (),
+        "seq": (),
+        "tokens_flat": (),
+        "kv_seq": ("data", "model"),
+        "experts": ("model",),
+        "cache_seq": ("data", "model"),
+        "heads": ("model",),
+        "embed": (),
+        "ffn": ("model",),
+    },
+}
+
+
+def _rules() -> Optional[dict]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def recipe(name: Optional[str]):
+    """Activate an activation-sharding recipe ("train" / "decode" / ...)."""
+    prev = _rules()
+    _STATE.rules = ACTIVATION_RULES[name] if name else None
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def _mesh_axes():
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return None
+    return dict(zip(mesh.axis_names, mesh.shape.values())) if hasattr(mesh.shape, "values") else dict(mesh.shape)
+
+
+def force_replicated(x):
+    """with_sharding_constraint to fully-replicated (no-op without a mesh).
+
+    Used to pin WHERE a reshard happens — e.g. gathering the int8-quantized
+    form of a weight instead of its bf16 original (quantized FSDP gathers).
+    """
+    if _mesh_axes() is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*([None] * x.ndim)))
+
+
+def shard(x, *logical_axes):
+    """with_sharding_constraint by logical axis names (None = replicated).
+
+    Axes are dropped silently when absent from the active mesh or when the
+    dimension size is not divisible by the mesh-axis product.
+    """
+    rules = _rules()
+    mesh = _mesh_axes()
+    if rules is None or mesh is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = []
+    used = set()
+    for dim, name in zip(x.shape, logical_axes):
+        if name is None:
+            spec.append(None)
+            continue
+        axes = tuple(a for a in rules.get(name, ()) if a in mesh and a not in used)
+        prod = int(np.prod([mesh[a] for a in axes])) if axes else 1
+        if axes and dim % prod == 0:
+            spec.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules
+# ---------------------------------------------------------------------------
+
+_EXPERT_RE = re.compile(r"experts|expert_")
+_SCAN_RE = re.compile(r"layers|blocks")
+
+
+def _divisible(dim: int, mesh: dict, axis: str) -> bool:
+    return axis in mesh and dim % mesh[axis] == 0
+
+
+def param_spec(path: str, leaf, recipe_name: str, mesh: dict) -> P:
+    """Partition spec for one parameter.
+
+    train: 2D — last dim over "model", second-to-last over "data" (FSDP x TP).
+    serve: 1D — last dim over "model" (weight-stationary TP).
+    Expert tensors (..., E, d_in, d_out): E over "model", d_in over "data"
+    (train only).  Scan-stacked leading layer dims stay replicated.  1D
+    params (norm scales, biases) are replicated.
+    """
+    shape = leaf.shape
+    ndim = len(shape)
+    spec = [None] * ndim
+    if ndim < 2:
+        return P(*spec)
+    is_expert = bool(_EXPERT_RE.search(path))
+    if is_expert and ndim >= 3:
+        e_ax = ndim - 3
+        if _divisible(shape[e_ax], mesh, "model"):
+            spec[e_ax] = "model"
+        if recipe_name == "train" and _divisible(shape[-2], mesh, "data"):
+            spec[-2] = "data"
+        return P(*spec)
+    if _divisible(shape[-1], mesh, "model"):
+        spec[-1] = "model"
+    if recipe_name == "train" and _divisible(shape[-2], mesh, "data"):
+        spec[-2] = "data"
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def param_specs(params, recipe_name: str, mesh) -> "jax.tree_util.PyTreeDef":
+    """PartitionSpec pytree matching ``params`` for the given recipe."""
+    mesh_axes = (dict(zip(mesh.axis_names, mesh.devices.shape))
+                 if hasattr(mesh, "devices") else dict(mesh.shape))
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: param_spec(_path_str(p), l, recipe_name, mesh_axes), params)
+
+
+def named_shardings(params, recipe_name: str, mesh):
+    specs = param_specs(params, recipe_name, mesh)
+    return jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  bitparticle_matmul/  fused W8A8 matmul, BitParticle exact + approximate
+                       (IR-group-drop) modes, int32 VMEM accumulators
+  wkv6/                chunked RWKV-6 WKV recurrence (VMEM-resident state)
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted
+wrapper) and ref.py (pure-jnp oracle); all are validated in interpret mode.
+"""

@@ -1,0 +1,2 @@
+from repro.kernels.bitparticle_matmul.ops import bp_matmul  # noqa: F401
+from repro.kernels.bitparticle_matmul import ref  # noqa: F401

@@ -1,0 +1,75 @@
+"""Jitted public wrapper around the BitParticle matmul Pallas kernel.
+
+Handles arbitrary leading batch dims, non-block-aligned shapes (zero padding
+— zeros contribute nothing in either exact or approx mode), scale plumbing,
+and the interpret-mode fallback used for CPU validation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitparticle_matmul.kernel import bp_matmul_kernel
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pick_block(dim: int, pref: int, align: int) -> int:
+    """Largest block <= pref that keeps padding small; always `align`-aligned
+    in spirit (interpret mode relaxes hardware tiling)."""
+    if dim >= pref:
+        return pref
+    return max(align, _round_up(dim, align))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("approx", "block_m", "block_n", "block_k", "interpret"),
+)
+def bp_matmul(a_q, w_q, scale_a=None, scale_w=None, *, approx: bool = False,
+              block_m: int = 256, block_n: int = 256, block_k: int = 256,
+              interpret: bool = False):
+    """BitParticle quantized matmul.
+
+    a_q: (..., K) int8 activations; w_q: (K, N) int8 weights.
+    scale_a: None | scalar | (...,) per-row f32; scale_w: None | (N,) f32.
+    Returns f32 (..., N) if any scale given (fused dequant), else int32.
+    """
+    *lead, k = a_q.shape
+    k2, n = w_q.shape
+    assert k == k2, (a_q.shape, w_q.shape)
+    m = 1
+    for d in lead:
+        m *= d
+    a2 = a_q.reshape(m, k)
+
+    fuse = scale_a is not None or scale_w is not None
+    if scale_a is None:
+        sa = jnp.ones((m, 1), jnp.float32)
+    else:
+        sa = jnp.broadcast_to(jnp.asarray(scale_a, jnp.float32).reshape(-1, 1)
+                              if jnp.ndim(scale_a) > 0 else
+                              jnp.full((m, 1), scale_a, jnp.float32), (m, 1))
+    sw = (jnp.ones((1, n), jnp.float32) if scale_w is None
+          else jnp.asarray(scale_w, jnp.float32).reshape(1, n))
+
+    bm = _pick_block(m, block_m, 8)
+    bn = _pick_block(n, block_n, 128)
+    bk = _pick_block(k, block_k, 128)
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+
+    a_pad = jnp.pad(a2, ((0, mp - m), (0, kp - k)))
+    w_pad = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
+    sa_pad = jnp.pad(sa, ((0, mp - m), (0, 0)), constant_values=1.0)
+    sw_pad = jnp.pad(sw, ((0, 0), (0, np_ - n)), constant_values=1.0)
+
+    out = bp_matmul_kernel(
+        a_pad, w_pad, sa_pad, sw_pad, approx=approx, fuse_dequant=fuse,
+        block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
+    )
+    return out[:m, :n].reshape(*lead, n)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the BitParticle matmul Pallas kernel.
+
+Two independent reference forms:
+
+  * the *algebraic* form (``bp_matmul_ref``) — the same low-particle
+    correction factorization the kernel uses, built on
+    :mod:`repro.core.bp_matmul`;
+  * the *elementwise* form (``bp_matmul_elementwise_oracle``) — literally
+    multiplies every (a, w) pair through the 4x4 IR-matrix reconstruction of
+    :mod:`repro.core.bitparticle` and sums over K.  O(M*K*N) memory: small
+    shapes only, used to cross-validate the algebraic form in tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import bitparticle as bp
+from repro.core import bp_matmul
+
+
+def bp_matmul_ref(a_q, w_q, mode: str = "bp_exact"):
+    """int32 reference: (M, K) int8 x (K, N) int8 -> (M, N) int32."""
+    return bp_matmul.bp_matmul_int(a_q, w_q, mode)
+
+
+def bp_matmul_elementwise_oracle(a_q, w_q, mode: str = "bp_exact"):
+    """Bit-faithful elementwise oracle (hardware IR reconstruction per MAC)."""
+    mul = bp.multiply_exact if mode == "bp_exact" else bp.multiply_approx
+    prods = mul(a_q[:, :, None], w_q[None, :, :])  # (M, K, N) int32
+    return jnp.sum(prods, axis=1)
+
+
+def bp_matmul_dequant_ref(a_q, w_q, scale_a, scale_w, mode: str = "bp_exact"):
+    """f32 reference with the fused dequant epilogue.
+
+    scale_a: (M, 1) per-row activation scales; scale_w: (1, N) per-channel.
+    """
+    acc = bp_matmul_ref(a_q, w_q, mode).astype(jnp.float32)
+    return acc * scale_a * scale_w

@@ -1,0 +1,2 @@
+from repro.kernels.wkv6.ops import wkv6  # noqa: F401
+from repro.kernels.wkv6 import ref  # noqa: F401

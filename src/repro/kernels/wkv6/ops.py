@@ -1,0 +1,31 @@
+"""Public wrapper for the WKV6 kernel: model-layout plumbing + padding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import wkv6_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, log_w, u, state, *, chunk: int = 64,
+         interpret: bool = False):
+    """Model-layout entry point, drop-in for rwkv6.wkv_chunked.
+
+    r/k/v/log_w (B, S, H, N); u (H, N); state (B, H, N, N) f32.
+    Returns (out (B, S, H, N) f32, state (B, H, N, N) f32).
+    """
+    B, S, H, N = r.shape
+    pad = (-S) % chunk
+    rows = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))
+                             ).transpose(0, 2, 1, 3).reshape(B * H, S + pad, N)
+    # zero-padded tail: k rows are 0 => no state contribution; log_w 0 =>
+    # decay 1 => state passes through unchanged; outputs beyond S sliced off
+    out, s = wkv6_kernel(rows(r), rows(k), rows(v), rows(log_w),
+                         jnp.tile(u, (B, 1)), state.reshape(B * H, N, N),
+                         chunk=chunk, interpret=interpret)
+    out = out.reshape(B, H, S + pad, N).transpose(0, 2, 1, 3)[:, :S]
+    return out, s.reshape(B, H, N, N)

@@ -1,0 +1,31 @@
+"""Oracles for the WKV6 Pallas kernel: the model stack's step recurrence
+(:func:`repro.models.rwkv6.wkv_sequential`) reshaped to kernel layout.
+
+Kernel layout is rows R = batch*heads; the oracle maps rows onto the model's
+head dimension (B=1, H=R) so the per-row bonus vector u stays per-head."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import rwkv6
+
+
+def wkv6_ref(r, k, v, log_w, u, state):
+    """r/k/v/log_w (R, T, N); u (R, N); state (R, N, N) ->
+    (out (R, T, N), state_out (R, N, N))."""
+    R, T, N = r.shape
+    to_model = lambda t: t.transpose(1, 0, 2)[None]     # (1, T, R, N)
+    out, s = rwkv6.wkv_sequential(
+        to_model(r), to_model(k), to_model(v), to_model(log_w),
+        u, state[None])                                  # u: (H=R, N)
+    return out[0].transpose(1, 0, 2), s[0]
+
+
+def wkv6_chunked_ref(r, k, v, log_w, u, state, chunk: int = 32):
+    """Second, independent oracle via the chunk-parallel jnp form."""
+    to_model = lambda t: t.transpose(1, 0, 2)[None]
+    out, s = rwkv6.wkv_chunked(
+        to_model(r), to_model(k), to_model(v), to_model(log_w),
+        u, state[None], chunk=chunk)
+    return out[0].transpose(1, 0, 2), s[0]

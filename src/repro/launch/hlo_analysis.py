@@ -1,0 +1,244 @@
+"""Trip-count-aware analysis of optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, which
+undercounts layer-scanned models by ~num_layers.  This module re-derives
+per-device costs from ``compiled.as_text()`` honestly:
+
+  1. parse every computation and instruction (name -> shape),
+  2. build the call graph (while bodies, fusions, calls, conditionals) and
+     propagate execution multipliers — a while body's multiplier is its trip
+     count (recovered from the loop-condition's comparison constant) times
+     the multiplier of the enclosing computation,
+  3. count dot FLOPs (2 x numel(result) x contracted size) and collective
+     wire bytes (all-gather: result bytes; others: operand bytes) with those
+     multipliers applied.
+
+Validated in tests against closed-form FLOP counts of scanned models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"^\(?\s*([a-z]+[0-9]+|pred|token)\[([0-9,]*)\]")
+_OPCODE = re.compile(r"\}?\s*([\w\-]+)\(")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_CALL_ATTR = re.compile(r"(?:body|calls|to_apply|branch_computations)="
+                        r"\{?%?([\w\.\-,%\s]+?)\}?[,\s)]")
+_COND_ATTR = re.compile(r"condition=%?([\w\.\-]+)")
+_CONSTANT = re.compile(r"=\s*[su]\d+\[\]\s*constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_tuple(type_str: str) -> Tuple[Optional[str], Tuple[int, ...]]:
+    m = _SHAPE.match(type_str.strip())
+    if not m:
+        return None, ()
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return m.group(1), dims
+
+
+def _numel(dims) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    dtype: Optional[str]
+    dims: Tuple[int, ...]
+    opcode: str
+    text: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _numel(self.dims) * _DTYPE_BYTES.get(self.dtype or "", 4)
+
+
+@dataclasses.dataclass
+class HloModule:
+    computations: Dict[str, List[Instruction]]
+    entry: str
+    instr_index: Dict[str, Instruction]      # global name -> instruction
+
+
+def parse_module(text: str) -> HloModule:
+    computations: Dict[str, List[Instruction]] = {}
+    entry = ""
+    current: Optional[str] = None
+    for line in text.splitlines():
+        h = _COMP_HEADER.match(line)
+        if h:
+            current = h.group(2)
+            computations[current] = []
+            if h.group(1):
+                entry = current
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        dtype, dims = _shape_tuple(rest)
+        # opcode = first word followed by '(' after the type (skip tuple types)
+        after_type = rest
+        # drop the leading type expression (possibly a tuple) conservatively
+        op = ""
+        om = re.search(r"\)?\s([\w\-]+)\(", " " + after_type)
+        if om:
+            op = om.group(1)
+        computations[current].append(
+            Instruction(name, dtype, dims, op, line.strip()))
+    index = {}
+    for comp, instrs in computations.items():
+        for ins in instrs:
+            index[ins.name] = ins
+    return HloModule(computations, entry, index)
+
+
+def _trip_count(module: HloModule, cond_name: str) -> int:
+    """Largest scalar integer constant in the loop condition computation."""
+    best = 1
+    for ins in module.computations.get(cond_name, []):
+        for m in _CONSTANT.finditer(ins.text):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def computation_multipliers(module: HloModule) -> Dict[str, float]:
+    """Execution count of each computation relative to one entry execution."""
+    mult: Dict[str, float] = defaultdict(float)
+    mult[module.entry] = 1.0
+    # iterate to fixpoint over the call DAG (computations are defined before
+    # use in text order is not guaranteed, so sweep until stable)
+    for _ in range(64):
+        changed = False
+        for comp, instrs in module.computations.items():
+            m_parent = mult.get(comp, 0.0)
+            if m_parent == 0.0:
+                continue
+            for ins in instrs:
+                if " while(" in ins.text:
+                    body = re.search(r"body=%?([\w\.\-]+)", ins.text)
+                    cond = _COND_ATTR.search(ins.text)
+                    if body:
+                        trips = _trip_count(module, cond.group(1)) if cond else 1
+                        tgt = body.group(1)
+                        new = m_parent * trips
+                        if mult[tgt] < new:
+                            mult[tgt] = new
+                            changed = True
+                    if cond:
+                        new = m_parent * (_trip_count(module, cond.group(1)) + 1)
+                        if mult[cond.group(1)] < new:
+                            mult[cond.group(1)] = new
+                            changed = True
+                    continue
+                for attr in ("calls", "to_apply", "branch_computations"):
+                    mm = re.search(attr + r"=\{?%?([\w\.\-]+)", ins.text)
+                    if mm:
+                        tgt = mm.group(1)
+                        if tgt in module.computations and mult[tgt] < m_parent:
+                            mult[tgt] = m_parent
+                            changed = True
+        if not changed:
+            break
+    return dict(mult)
+
+
+def _dot_flops(module: HloModule, ins: Instruction) -> float:
+    """2 x numel(result) x contracted-dims size (batch dims cancel)."""
+    ops = _OPERANDS.findall(ins.text.split("dot(", 1)[1].split(")", 1)[0])
+    lhs = module.instr_index.get(ops[0]) if ops else None
+    cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.text)
+    k = 1
+    if lhs is not None and cdims:
+        for d in cdims.group(1).split(","):
+            if d:
+                k *= lhs.dims[int(d)] if int(d) < len(lhs.dims) else 1
+    return 2.0 * _numel(ins.dims) * k
+
+
+def _conv_flops(module: HloModule, ins: Instruction) -> float:
+    # rare here (no convolutions in the LM stack); approximate by result
+    return 2.0 * _numel(ins.dims)
+
+
+_OPNAME = re.compile(r'op_name="([^"]*)"')
+
+
+def analyze(text: str, top_k: int = 12) -> Dict[str, object]:
+    module = parse_module(text)
+    mult = computation_multipliers(module)
+    dot_flops = 0.0
+    dot_flops_int = 0.0     # int8 x int8 -> s32 contractions (2x MXU rate)
+    coll_bytes = {k: 0.0 for k in COLLECTIVES}
+    coll_counts = {k: 0.0 for k in COLLECTIVES}
+    contributors: Dict[str, float] = defaultdict(float)
+    loops = []
+    for comp, instrs in module.computations.items():
+        m = mult.get(comp, 0.0)
+        if m == 0.0:
+            continue
+        for ins in instrs:
+            if " dot(" in ins.text:
+                f = m * _dot_flops(module, ins)
+                if ins.dtype in ("s32", "s16", "s8"):
+                    dot_flops_int += f
+                else:
+                    dot_flops += f
+            elif " convolution(" in ins.text:
+                dot_flops += m * _conv_flops(module, ins)
+            elif " while(" in ins.text:
+                cond = _COND_ATTR.search(ins.text)
+                loops.append({"computation": comp,
+                              "trips": _trip_count(module, cond.group(1))
+                              if cond else 1, "multiplier": m})
+            else:
+                for kind in COLLECTIVES:
+                    if f" {kind}(" in ins.text or f" {kind}-start(" in ins.text:
+                        if kind == "all-gather":
+                            nbytes = ins.result_bytes
+                        else:
+                            ops = _OPERANDS.findall(
+                                ins.text.split("(", 1)[1].split(")", 1)[0])
+                            nbytes = sum(
+                                module.instr_index[o].result_bytes
+                                for o in ops if o in module.instr_index)
+                            nbytes = nbytes or ins.result_bytes
+                        coll_bytes[kind] += m * nbytes
+                        coll_counts[kind] += m
+                        op = _OPNAME.search(ins.text)
+                        label = (op.group(1)[:160] if op else ins.name)
+                        contributors[f"{kind} | {label}"] += m * nbytes
+                        break
+    top = sorted(contributors.items(), key=lambda kv: -kv[1])[:top_k]
+    return {
+        "dot_flops_int_per_device": dot_flops_int,
+        "dot_flops_per_device": dot_flops,
+        "collective_bytes": coll_bytes,
+        "collective_counts": coll_counts,
+        "top_collectives": [{"op": k, "bytes": v} for k, v in top],
+        "while_loops": loops,
+        "n_computations": len(module.computations),
+    }

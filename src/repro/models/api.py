@@ -1,0 +1,166 @@
+"""Unified model API: family dispatch + dry-run input specs.
+
+Every architecture exposes:
+    init(key, cfg) -> params
+    loss_fn(params, cfg, batch) -> (loss, metrics)          [train_step]
+    prefill(params, cfg, batch, cache_T) -> (logits, cache) [prefill_step]
+    decode_step(params, cfg, batch) -> (logits, cache)      [serve_step]
+
+``input_specs(cfg, shape)`` returns jax.ShapeDtypeStruct pytrees for every
+model input of that workload shape — the dry-run lowers against these, so no
+host allocation ever happens for the full-size configs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import causal_lm, encdec, rwkv_model, zamba_model
+from repro.models.layers import DTYPE
+
+_FAMILY_MODULES = {
+    "dense": causal_lm,
+    "moe": causal_lm,
+    "vlm": causal_lm,
+    "ssm": rwkv_model,
+    "hybrid": zamba_model,
+    "audio": encdec,
+}
+
+
+def module_for(cfg: ArchConfig):
+    return _FAMILY_MODULES[cfg.family]
+
+
+def init(key, cfg: ArchConfig):
+    return module_for(cfg).init(key, cfg)
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    return module_for(cfg).loss_fn(params, cfg, batch)
+
+
+def prefill(params, cfg: ArchConfig, batch, cache_T: int):
+    return module_for(cfg).prefill(params, cfg, batch, cache_T)
+
+
+def decode_step(params, cfg: ArchConfig, batch):
+    return module_for(cfg).decode_step(params, cfg, batch)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct stand-ins, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(d) for d in shape), dtype)
+
+
+def _tokens_spec(B, S):
+    return _sds((B, S), jnp.int32)
+
+
+def _vlm_extras(cfg, B, S):
+    return {
+        "vision_embeds": _sds((B, S, cfg.d_model), DTYPE),
+        "vision_mask": _sds((B, S), jnp.bool_),
+        "positions": _sds((3, B, S), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ArchConfig, B: int, cache_T: int):
+    """ShapeDtypeStruct pytree of the decode cache for this family."""
+    hd = cfg.resolved_head_dim
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv = (cfg.num_layers, B, cache_T, cfg.num_kv_heads, hd)
+        if cfg.kv_cache_int8:
+            sc = (cfg.num_layers, B, cache_T, cfg.num_kv_heads)
+            return {"k": _sds(kv, jnp.int8), "k_scale": _sds(sc, jnp.float32),
+                    "v": _sds(kv, jnp.int8), "v_scale": _sds(sc, jnp.float32)}
+        return {"k": _sds(kv, DTYPE), "v": _sds(kv, DTYPE)}
+    if cfg.family == "ssm":
+        d = cfg.d_model
+        n = cfg.rwkv_head_dim
+        h = d // n
+        L = cfg.num_layers
+        return {"wkv": _sds((L, B, h, n, n), jnp.float32),
+                "x_tm": _sds((L, B, d), DTYPE),
+                "x_cm": _sds((L, B, d), DTYPE)}
+    if cfg.family == "hybrid":
+        from repro.models import mamba2
+        n_sup = cfg.num_layers // cfg.attn_every
+        di = mamba2.d_inner(cfg)
+        conv_dim = di + 2 * cfg.ssm_state
+        h = mamba2.n_ssm_heads(cfg)
+        return {
+            "conv": _sds((n_sup, cfg.attn_every, B, cfg.ssm_conv_width - 1,
+                          conv_dim), DTYPE),
+            "ssm": _sds((n_sup, cfg.attn_every, B, h, cfg.ssm_head_dim,
+                         cfg.ssm_state), jnp.float32),
+            "k": _sds((n_sup, B, cache_T, cfg.num_kv_heads, hd), DTYPE),
+            "v": _sds((n_sup, B, cache_T, cfg.num_kv_heads, hd), DTYPE),
+        }
+    if cfg.family == "audio":
+        L = cfg.num_layers
+        src_T = max(cache_T // 4, 128)
+        kv = (L, B, cache_T, cfg.num_kv_heads, hd)
+        ckv = (L, B, src_T, cfg.num_kv_heads, hd)
+        return {"k": _sds(kv, DTYPE), "v": _sds(kv, DTYPE),
+                "cross_k": _sds(ckv, DTYPE), "cross_v": _sds(ckv, DTYPE)}
+    raise ValueError(cfg.family)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model-input ShapeDtypeStructs for one (arch x workload-shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {"tokens": _tokens_spec(B, S)}
+        if cfg.family == "vlm":
+            batch.update(_vlm_extras(cfg, B, S))
+        if cfg.family == "audio":
+            batch["src_embeds"] = _sds((B, S // 4, cfg.d_model), DTYPE)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": _tokens_spec(B, S)}
+        if cfg.family == "vlm":
+            batch.update(_vlm_extras(cfg, B, S))
+        if cfg.family == "audio":
+            batch["src_embeds"] = _sds((B, S // 4, cfg.d_model), DTYPE)
+        return batch
+    if shape.kind == "decode":
+        batch = {"tokens": _tokens_spec(B, 1),
+                 "cache": cache_specs(cfg, B, S),
+                 "cache_len": _sds((), jnp.int32)}
+        if cfg.family == "vlm":
+            pass  # decode positions derive from cache_len (text continuation)
+        return batch
+    raise ValueError(shape.kind)
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS: 6*N*D for training (N = params, active for MoE),
+    2*N*D for single forward; decode counts one token + attention reads."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + attention over the cache
+    tokens = shape.global_batch
+    attn_read = 0.0
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        hd = cfg.resolved_head_dim
+        attn_read = (4.0 * cfg.num_layers * cfg.num_heads * hd
+                     * shape.seq_len * tokens)
+    if cfg.family == "hybrid":
+        hd = cfg.resolved_head_dim
+        n_sup = cfg.num_layers // cfg.attn_every
+        attn_read = 4.0 * n_sup * cfg.num_heads * hd * shape.seq_len * tokens
+    return 2.0 * n_active * tokens + attn_read

@@ -1,0 +1,154 @@
+"""Attention: GQA projections, scan-based flash attention, split-KV decode.
+
+Two compute paths (DESIGN.md §4):
+
+  * ``flash_attention`` — train/prefill.  Online-softmax over KV chunks via
+    ``lax.scan``; peak memory is O(S x chunk) per head instead of O(S^2).
+    With the sequence-parallel recipe, Q stays sequence-sharded while K/V are
+    gathered (the ``kv_seq`` logical axis), giving context parallelism that
+    is agnostic to head counts.
+  * ``decode_attention`` — single-token decode against a (possibly
+    seq-sharded) KV cache; the softmax reductions over the sharded cache axis
+    lower to XLA partial reductions + cross-replica combines (split-KV /
+    flash-decoding on the mesh).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def init_attention(key, cfg):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": layers.init_dense(kq, d, cfg.num_heads * hd, bias=cfg.qkv_bias),
+        "wk": layers.init_dense(kk, d, cfg.num_kv_heads * hd, bias=cfg.qkv_bias),
+        "wv": layers.init_dense(kv, d, cfg.num_kv_heads * hd, bias=cfg.qkv_bias),
+        "wo": layers.init_dense(ko, cfg.num_heads * hd, d),
+    }
+
+
+def qkv_proj(params, x, cfg, mode):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = layers.dense(params["wq"], x, mode).reshape(B, S, cfg.num_heads, hd)
+    k = layers.dense(params["wk"], x, mode).reshape(B, S, cfg.num_kv_heads, hd)
+    v = layers.dense(params["wv"], x, mode).reshape(B, S, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset=0,
+                    chunk: int = 1024, kv_len: Optional[jax.Array] = None):
+    """q (B,S,H,D); k/v (B,T,KH,D).  Returns (B,S,H,D).
+
+    ``q_offset``: global position of q[0] (for chunked prefill continuation).
+    ``kv_len``: optional valid-length mask over T (padded caches).
+    """
+    B, S, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    n_chunks = T // chunk
+    scale = D ** -0.5
+    qr = (q.astype(jnp.float32) * scale).reshape(B, S, KH, G, D)
+
+    def body(carry, idx):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, idx * chunk, chunk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, 1)
+        s = jnp.einsum("bskgd,bckd->bskgc", qr, ks.astype(jnp.float32))
+        kpos = idx * chunk + jnp.arange(chunk)
+        mask = jnp.ones((S, chunk), bool)
+        if causal:
+            qpos = q_offset + jnp.arange(S)
+            mask &= qpos[:, None] >= kpos[None, :]
+        if kv_len is not None:
+            mask &= kpos[None, :] < kv_len
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bskgc,bckd->bskgd", p, vs.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((B, S, KH, G), NEG_INF, jnp.float32),
+            jnp.zeros((B, S, KH, G), jnp.float32),
+            jnp.zeros((B, S, KH, G, D), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, k_scale=None,
+                     v_scale=None):
+    """q (B,1,H,D) against cache (B,T,KH,D); positions <= cache_len valid
+    (the new token's K/V were already written at index ``cache_len``).
+
+    int8 KV cache support (per-token-per-head scales, EXACT factorization):
+        score[b,kh,g,t] = (q . k_q[t]) * k_scale[b,t,kh]
+        out = sum_t p[t] * v_scale[b,t,kh] * v_q[t]
+    """
+    B, _, H, D = q.shape
+    T, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    scale = D ** -0.5
+    qr = (q.astype(jnp.float32) * scale).reshape(B, KH, G, D)
+    s = jnp.einsum("bkgd,btkd->bkgt", qr, k_cache.astype(jnp.float32))
+    if k_scale is not None:
+        s = s * jnp.transpose(k_scale, (0, 2, 1))[:, :, None, :]
+    valid = jnp.arange(T) <= cache_len
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        p = p * jnp.transpose(v_scale, (0, 2, 1))[:, :, None, :]
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def quantize_kv(k, v):
+    """Per (batch, position, head) symmetric int8 quantization of K/V.
+
+    k/v (B, S, KH, D) -> (k_q int8, k_scale f32 (B,S,KH), v_q, v_scale)."""
+    def one(t):
+        amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+        s = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(t.astype(jnp.float32) / s[..., None]),
+                     -127, 127).astype(jnp.int8)
+        return q, s
+    kq, ks = one(k)
+    vq, vs = one(v)
+    return kq, ks, vq, vs
+
+
+def attention_block(params, x, cfg, mode, *, cos, sin, causal=True,
+                    cross_kv=None, cross_len=None):
+    """Full attention sub-block for train/prefill (returns out, (k, v)).
+
+    ``cross_kv``: (k, v) from an encoder — cross-attention (no RoPE on q? we
+    follow standard enc-dec: RoPE is not applied for cross attention)."""
+    B, S, _ = x.shape
+    q, k, v = qkv_proj(params, x, cfg, mode)
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = flash_attention(q, k, v, causal=False, kv_len=cross_len)
+    else:
+        if cos is not None:
+            q = layers.apply_rope(q, cos, sin)
+            k = layers.apply_rope(k, cos, sin)
+        k = shard(k, "batch", "kv_seq", "heads", None)
+        v = shard(v, "batch", "kv_seq", "heads", None)
+        out = flash_attention(q, k, v, causal=causal)
+    out = out.reshape(B, S, cfg.num_heads * cfg.resolved_head_dim)
+    return layers.dense(params["wo"], out, mode), (k, v)

@@ -1,0 +1,239 @@
+"""Decoder-only causal LM covering the dense / GQA / MoE / VLM families.
+
+Layer stack is a ``lax.scan`` over stacked layer params (compact HLO — a
+512-device SPMD compile sees one layer body) with activation checkpointing.
+The BitParticle matmul mode is plumbed through every dense contraction.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention, layers
+from repro.models.moe import init_moe, moe_ffn
+
+
+def init_layer(key, cfg):
+    ka, kf, kn1, kn2 = jax.random.split(key, 4)
+    p = {
+        "attn_norm": layers.init_rmsnorm(cfg.d_model),
+        "attn": attention.init_attention(ka, cfg),
+        "ffn_norm": layers.init_rmsnorm(cfg.d_model),
+    }
+    if cfg.num_experts:
+        p["moe"] = init_moe(kf, cfg)
+    else:
+        p["ffn"] = layers.init_ffn(kf, cfg.d_model, cfg.d_ff, cfg.ffn_type)
+    return p
+
+
+def init(key, cfg):
+    ke, kl, kh = jax.random.split(key, 3)
+    params = {
+        "embed": layers.init_embedding(ke, cfg.vocab_padded, cfg.d_model),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(
+            jax.random.split(kl, cfg.num_layers)),
+        "final_norm": layers.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.init_dense(kh, cfg.d_model,
+                                              cfg.vocab_padded)
+    return params
+
+
+def _angles(cfg, positions):
+    """positions: (B, S) or (3, B, S) for M-RoPE."""
+    hd = cfg.resolved_head_dim
+    if cfg.mrope_sections:
+        assert positions.ndim == 3
+        return layers.mrope_angles(positions, hd, cfg.rope_theta,
+                                   cfg.mrope_sections)
+    return layers.rope_angles(positions, hd, cfg.rope_theta)
+
+
+def _embed_inputs(params, cfg, batch):
+    tokens = batch["tokens"]
+    x = layers.embed(params["embed"], tokens)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        x = jnp.where(batch["vision_mask"][..., None],
+                      batch["vision_embeds"].astype(x.dtype), x)
+    B, S = tokens.shape
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[None], (3, B, S))
+    return x, positions
+
+
+def _block(lp, x, cfg, mode, cos, sin):
+    h = layers.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+    attn_out, kv = attention.attention_block(lp["attn"], h, cfg, mode,
+                                             cos=cos, sin=sin)
+    x = x + attn_out
+    h = layers.rms_norm(lp["ffn_norm"], x, cfg.norm_eps)
+    if cfg.num_experts:
+        f, aux = moe_ffn(lp["moe"], h, cfg, mode)
+    else:
+        f, aux = layers.ffn(lp["ffn"], h, cfg.ffn_type, mode), jnp.float32(0)
+    x = x + f
+    x = shard(x, "batch", "seq", None)
+    return x, kv, aux
+
+
+def forward(params, cfg, batch, *, return_cache: bool = False,
+            cache_T: Optional[int] = None):
+    """Returns (hidden (B,S,D), aux_loss, cache|None)."""
+    mode = cfg.matmul_mode
+    x, positions = _embed_inputs(params, cfg, batch)
+    x = shard(x, "batch", "seq", None)
+    cos, sin = _angles(cfg, positions)
+
+    def body(carry, lp):
+        y, kv, aux = _block(lp, carry, cfg, mode, cos, sin)
+        if return_cache:
+            k, v = kv
+            if cfg.kv_cache_int8:
+                k, ks_, v, vs_ = attention.quantize_kv(k, v)
+            if cache_T is not None and cache_T > k.shape[1]:
+                pad_t = cache_T - k.shape[1]
+                pad = [(0, 0), (0, pad_t), (0, 0), (0, 0)]
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+                if cfg.kv_cache_int8:
+                    spad = [(0, 0), (0, pad_t), (0, 0)]
+                    ks_, vs_ = jnp.pad(ks_, spad), jnp.pad(vs_, spad)
+            k = shard(k, "batch", "cache_seq", "heads", None)
+            v = shard(v, "batch", "cache_seq", "heads", None)
+            if cfg.kv_cache_int8:
+                return y, (k, ks_, v, vs_, aux)
+            return y, (k, v, aux)
+        return y, aux
+
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    if return_cache:
+        if cfg.kv_cache_int8:
+            x, (ks, kss, vs, vss, auxs) = jax.lax.scan(body, x,
+                                                       params["layers"])
+            cache = {"k": ks, "k_scale": kss, "v": vs, "v_scale": vss}
+        else:
+            x, (ks, vs, auxs) = jax.lax.scan(body, x, params["layers"])
+            cache = {"k": ks, "v": vs}
+    else:
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+        cache = None
+    x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, jnp.sum(auxs), cache
+
+
+def logits_from_hidden(params, cfg, x):
+    if cfg.tie_embeddings:
+        return layers.unembed(params["embed"], x)
+    return layers.dense(params["lm_head"], x, cfg.matmul_mode)
+
+
+def loss_fn(params, cfg, batch):
+    """Causal LM loss (next-token prediction; final position masked)."""
+    x, aux, _ = forward(params, cfg, batch)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    T = B * S
+    x2 = shard(x.reshape(T, -1), "tokens_flat", None)
+    logits = logits_from_hidden(params, cfg, x2).astype(jnp.float32)
+    logits = shard(logits, "tokens_flat", None)
+    # mask padded vocab region out of the softmax
+    vmask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+    logits = jnp.where(vmask[None, :], logits, -1e9)
+    targets = jnp.roll(tokens, -1, axis=1).reshape(T)
+    valid = jnp.ones((B, S), bool).at[:, -1].set(False)
+    if "loss_mask" in batch:
+        valid &= batch["loss_mask"]
+    valid = valid.reshape(T)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[:, None], axis=1)[:, 0]
+    nll = (lse - tgt) * valid
+    loss = nll.sum() / jnp.maximum(valid.sum(), 1)
+    metrics = {"ce_loss": loss, "aux_loss": aux,
+               "valid_tokens": valid.sum()}
+    return loss + 0.01 * aux, metrics
+
+
+def prefill(params, cfg, batch, cache_T: int):
+    """Run the prompt, return (last-position logits, KV cache padded to
+    cache_T)."""
+    x, _, cache = forward(params, cfg, batch, return_cache=True,
+                          cache_T=cache_T)
+    last = x[:, -1:, :]
+    logits = logits_from_hidden(params, cfg, last)[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cfg, batch):
+    """One-token decode.  batch: tokens (B,1), cache {k,v}: (L,B,T,KH,Dh),
+    cache_len: scalar int32.  Returns (logits (B,V), new cache)."""
+    mode = cfg.matmul_mode
+    tokens, cache, cache_len = batch["tokens"], batch["cache"], batch["cache_len"]
+    B = tokens.shape[0]
+    x = layers.embed(params["embed"], tokens)
+    x = shard(x, "batch", None, None)
+    pos = jnp.broadcast_to(cache_len[None, None], (B, 1))
+    if cfg.mrope_sections:
+        pos = jnp.broadcast_to(pos[None], (3, B, 1))
+    cos, sin = _angles(cfg, pos)
+    hd = cfg.resolved_head_dim
+
+    int8kv = cfg.kv_cache_int8
+
+    def body(x, layer_in):
+        if int8kv:
+            lp, kc, ksc, vc, vsc = layer_in
+        else:
+            lp, kc, vc = layer_in
+        h = layers.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+        q, k, v = attention.qkv_proj(lp["attn"], h, cfg, mode)
+        q = layers.apply_rope(q, cos, sin)
+        k = layers.apply_rope(k, cos, sin)
+        if int8kv:
+            k, ks_, v, vs_ = attention.quantize_kv(k, v)
+            ksc = jax.lax.dynamic_update_slice(ksc, ks_, (0, cache_len, 0))
+            vsc = jax.lax.dynamic_update_slice(vsc, vs_, (0, cache_len, 0))
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, cache_len, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, cache_len, 0, 0))
+        kc = shard(kc, "batch", "cache_seq", "heads", None)
+        vc = shard(vc, "batch", "cache_seq", "heads", None)
+        out = attention.decode_attention(
+            q, kc, vc, cache_len,
+            k_scale=ksc if int8kv else None,
+            v_scale=vsc if int8kv else None)
+        out = out.reshape(B, 1, cfg.num_heads * hd)
+        x = x + layers.dense(lp["attn"]["wo"], out, mode)
+        h = layers.rms_norm(lp["ffn_norm"], x, cfg.norm_eps)
+        if cfg.num_experts:
+            f, _ = moe_ffn(lp["moe"], h, cfg, mode)
+        else:
+            f = layers.ffn(lp["ffn"], h, cfg.ffn_type, mode)
+        x = x + f
+        if int8kv:
+            return x, (kc, ksc, vc, vsc)
+        return x, (kc, vc)
+
+    if int8kv:
+        xs = (params["layers"], cache["k"], cache["k_scale"],
+              cache["v"], cache["v_scale"])
+        x, (ks, kss, vs, vss) = jax.lax.scan(body, x, xs)
+        new_cache = {"k": ks, "k_scale": kss, "v": vs, "v_scale": vss}
+    else:
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"],
+                                             cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+    x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, x)[:, 0]
+    return logits, new_cache

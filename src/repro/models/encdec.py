@@ -1,0 +1,209 @@
+"""Encoder-decoder (seamless-m4t-medium): bidirectional encoder over
+precomputed modality-frontend embeddings (STUB per assignment) + causal
+decoder with cross-attention.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention, layers
+
+
+def _init_enc_layer(key, cfg):
+    ka, kf = jax.random.split(key)
+    return {
+        "attn_norm": layers.init_rmsnorm(cfg.d_model),
+        "attn": attention.init_attention(ka, cfg),
+        "ffn_norm": layers.init_rmsnorm(cfg.d_model),
+        "ffn": layers.init_ffn(kf, cfg.d_model, cfg.d_ff, cfg.ffn_type),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    ka, kc, kf = jax.random.split(key, 3)
+    return {
+        "attn_norm": layers.init_rmsnorm(cfg.d_model),
+        "attn": attention.init_attention(ka, cfg),
+        "cross_norm": layers.init_rmsnorm(cfg.d_model),
+        "cross": attention.init_attention(kc, cfg),
+        "ffn_norm": layers.init_rmsnorm(cfg.d_model),
+        "ffn": layers.init_ffn(kf, cfg.d_model, cfg.d_ff, cfg.ffn_type),
+    }
+
+
+def init(key, cfg):
+    ke, kenc, kdec, kh = jax.random.split(key, 4)
+    return {
+        "embed": layers.init_embedding(ke, cfg.vocab_padded, cfg.d_model),
+        "encoder": jax.vmap(lambda k: _init_enc_layer(k, cfg))(
+            jax.random.split(kenc, cfg.encoder_layers)),
+        "enc_norm": layers.init_rmsnorm(cfg.d_model),
+        "decoder": jax.vmap(lambda k: _init_dec_layer(k, cfg))(
+            jax.random.split(kdec, cfg.num_layers)),
+        "final_norm": layers.init_rmsnorm(cfg.d_model),
+        "lm_head": layers.init_dense(kh, cfg.d_model, cfg.vocab_padded),
+    }
+
+
+def encode(params, cfg, src_embeds):
+    """src_embeds (B, Se, D): precomputed frame embeddings (frontend stub)."""
+    mode = cfg.matmul_mode
+    B, Se, _ = src_embeds.shape
+    x = shard(src_embeds.astype(layers.DTYPE), "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+    cos, sin = layers.rope_angles(positions, cfg.resolved_head_dim,
+                                  cfg.rope_theta)
+
+    def body(x, lp):
+        h = layers.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+        out, _ = attention.attention_block(lp["attn"], h, cfg, mode,
+                                           cos=cos, sin=sin, causal=False)
+        x = x + out
+        h = layers.rms_norm(lp["ffn_norm"], x, cfg.norm_eps)
+        x = x + layers.ffn(lp["ffn"], h, cfg.ffn_type, mode)
+        return shard(x, "batch", "seq", None), None
+
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return layers.rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def cross_kv(params, cfg, enc_out):
+    """Precompute per-decoder-layer cross K/V: (L, B, Se, KH, Dh)."""
+    mode = cfg.matmul_mode
+    B, Se, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+
+    def body(_, lp):
+        k = layers.dense(lp["cross"]["wk"], enc_out, mode).reshape(
+            B, Se, cfg.num_kv_heads, hd)
+        v = layers.dense(lp["cross"]["wv"], enc_out, mode).reshape(
+            B, Se, cfg.num_kv_heads, hd)
+        return (), (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, (), params["decoder"])
+    return ks, vs
+
+
+def _decode_stack(params, cfg, x, cos, sin, cross_ks, cross_vs, *,
+                  return_cache=False, cache_T=0):
+    mode = cfg.matmul_mode
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+
+    def body(x, lin):
+        lp, ck, cv = lin
+        h = layers.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+        out, (k, v) = attention.attention_block(lp["attn"], h, cfg, mode,
+                                                cos=cos, sin=sin)
+        x = x + out
+        h = layers.rms_norm(lp["cross_norm"], x, cfg.norm_eps)
+        q = layers.dense(lp["cross"]["wq"], h, mode).reshape(
+            B, -1, cfg.num_heads, hd)
+        cout = attention.flash_attention(q, ck, cv, causal=False)
+        cout = cout.reshape(B, -1, cfg.num_heads * hd)
+        x = x + layers.dense(lp["cross"]["wo"], cout, mode)
+        h = layers.rms_norm(lp["ffn_norm"], x, cfg.norm_eps)
+        x = x + layers.ffn(lp["ffn"], h, cfg.ffn_type, mode)
+        x = shard(x, "batch", "seq", None)
+        if return_cache:
+            if cache_T > k.shape[1]:
+                pad = [(0, 0), (0, cache_T - k.shape[1]), (0, 0), (0, 0)]
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+            return x, (k, v)
+        return x, None
+
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    x, ys = jax.lax.scan(body, x, (params["decoder"], cross_ks, cross_vs))
+    return layers.rms_norm(params["final_norm"], x, cfg.norm_eps), ys
+
+
+def loss_fn(params, cfg, batch):
+    from repro.models.causal_lm import logits_from_hidden
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    enc_out = encode(params, cfg, batch["src_embeds"])
+    cks, cvs = cross_kv(params, cfg, enc_out)
+    x = layers.embed(params["embed"], tokens)
+    x = shard(x, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = layers.rope_angles(positions, cfg.resolved_head_dim,
+                                  cfg.rope_theta)
+    x, _ = _decode_stack(params, cfg, x, cos, sin, cks, cvs)
+    x2 = shard(x.reshape(B * S, -1), "tokens_flat", None)
+    logits = logits_from_hidden(params, cfg, x2).astype(jnp.float32)
+    vmask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+    logits = jnp.where(vmask[None, :], logits, -1e9)
+    targets = jnp.roll(tokens, -1, axis=1).reshape(B * S)
+    valid = jnp.ones((B, S), bool).at[:, -1].set(False).reshape(B * S)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[:, None], axis=1)[:, 0]
+    loss = ((lse - tgt) * valid).sum() / jnp.maximum(valid.sum(), 1)
+    return loss, {"ce_loss": loss, "valid_tokens": valid.sum()}
+
+
+def prefill(params, cfg, batch, cache_T: int):
+    """Encode source + run decoder prompt; cache = self KV + cross KV."""
+    from repro.models.causal_lm import logits_from_hidden
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    enc_out = encode(params, cfg, batch["src_embeds"])
+    cks, cvs = cross_kv(params, cfg, enc_out)
+    x = layers.embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = layers.rope_angles(positions, cfg.resolved_head_dim,
+                                  cfg.rope_theta)
+    x, ys = _decode_stack(params, cfg, x, cos, sin, cks, cvs,
+                          return_cache=True, cache_T=cache_T)
+    ks, vs = ys
+    logits = logits_from_hidden(params, cfg, x[:, -1:, :])[:, 0]
+    return logits, {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs}
+
+
+def decode_step(params, cfg, batch):
+    from repro.models.causal_lm import logits_from_hidden
+    mode = cfg.matmul_mode
+    tokens, cache, cache_len = batch["tokens"], batch["cache"], batch["cache_len"]
+    B = tokens.shape[0]
+    hd = cfg.resolved_head_dim
+    x = layers.embed(params["embed"], tokens)
+    pos = jnp.broadcast_to(cache_len[None, None], (B, 1))
+    cos, sin = layers.rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
+
+    def body(x, lin):
+        lp, kc, vc, ck, cv = lin
+        h = layers.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+        q, k, v = attention.qkv_proj(lp["attn"], h, cfg, mode)
+        q = layers.apply_rope(q, cos, sin)
+        k = layers.apply_rope(k, cos, sin)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, cache_len, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, cache_len, 0, 0))
+        kc = shard(kc, "batch", "cache_seq", "heads", None)
+        vc = shard(vc, "batch", "cache_seq", "heads", None)
+        out = attention.decode_attention(q, kc, vc, cache_len)
+        x = x + layers.dense(lp["attn"]["wo"],
+                             out.reshape(B, 1, cfg.num_heads * hd), mode)
+        h = layers.rms_norm(lp["cross_norm"], x, cfg.norm_eps)
+        q = layers.dense(lp["cross"]["wq"], h, mode).reshape(
+            B, 1, cfg.num_heads, hd)
+        cout = attention.decode_attention(q, ck, cv, ck.shape[1] - 1)
+        x = x + layers.dense(lp["cross"]["wo"],
+                             cout.reshape(B, 1, cfg.num_heads * hd), mode)
+        h = layers.rms_norm(lp["ffn_norm"], x, cfg.norm_eps)
+        x = x + layers.ffn(lp["ffn"], h, cfg.ffn_type, mode)
+        return x, (kc, vc)
+
+    xs = (params["decoder"], cache["k"], cache["v"],
+          cache["cross_k"], cache["cross_v"])
+    x, (ks, vs) = jax.lax.scan(body, x, xs)
+    x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, x)[:, 0]
+    return logits, {"k": ks, "v": vs,
+                    "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}

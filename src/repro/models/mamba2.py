@@ -1,0 +1,162 @@
+"""Mamba-2 (SSD) blocks for the Zamba2 hybrid backbone.  [arXiv:2405.21060]
+
+State-space duality form with scalar-per-head decay:
+
+    h_t = a_t h_{t-1} + dt_t (B_t (x) x_t)        h: (heads, P, N)
+    y_t = C_t . h_t + D x_t                        a_t = exp(-dt_t * A_head)
+
+``ssd_chunked`` is the matmul-parallel chunked evaluation (train/prefill);
+``ssd_step`` the O(1) recurrence (decode + oracle).  Short causal conv on
+(x, B, C) as in the reference implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def d_inner(cfg):
+    return 2 * cfg.d_model
+
+
+def n_ssm_heads(cfg):
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    di = d_inner(cfg)
+    n = cfg.ssm_state
+    h = n_ssm_heads(cfg)
+    ks = jax.random.split(key, 6)
+    conv_dim = di + 2 * n
+    return {
+        # projects to [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": layers.init_dense(ks[0], d, 2 * di + 2 * n + h),
+        "conv_w": layers.truncated_normal(ks[1], (cfg.ssm_conv_width, conv_dim),
+                                          conv_dim ** -0.5, jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),       # A = exp(A_log) in (0, inf)
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),
+        "norm": layers.init_rmsnorm(di),
+        "out_proj": layers.init_dense(ks[2], di, d),
+    }
+
+
+def _split(p, zxbcdt, cfg):
+    di, n, h = d_inner(cfg), cfg.ssm_state, n_ssm_heads(cfg)
+    z, x, B, C, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n],
+                               axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(x, w, b, state=None):
+    """x (B,S,C); w (W,C) depthwise causal conv.  ``state``: (B,W-1,C) carry
+    for streaming decode.  Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+            for i in range(W))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(W - 1):, :]
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def ssd_step(xh, Bt, Ct, dt, A, state):
+    """xh (B,H,P); Bt/Ct (B,N); dt (B,H); state (B,H,P,N)."""
+    a = jnp.exp(-dt * A)                                     # (B,H)
+    upd = (dt[..., None] * xh)[..., :, None] * Bt[:, None, None, :]
+    state = a[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+    return y, state
+
+
+def ssd_sequential(xh, Bseq, Cseq, dt, A, state):
+    """Step scan.  xh (B,S,H,P); Bseq/Cseq (B,S,N); dt (B,S,H)."""
+    def body(s, inp):
+        xt, bt, ct, dtt = inp
+        y, s = ssd_step(xt, bt, ct, dtt, A, s)
+        return s, y
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xh, Bseq, Cseq, dt))
+    state, ys = jax.lax.scan(body, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def ssd_chunked(xh, Bseq, Cseq, dt, A, state, chunk: int = 64):
+    """Chunked-parallel SSD, equal to ``ssd_sequential``.
+
+    Scalar-per-head log-decay lc makes the pairwise factor a (L, L) matrix
+    per head (no per-channel blowup): y_intra = (M ⊙ (C B^T)) (dt*x)."""
+    B, S, H, P = xh.shape
+    N = Bseq.shape[-1]
+    assert S % chunk == 0
+    L, nc = chunk, S // chunk
+    xs = (xh.astype(jnp.float32).reshape(B, nc, L, H, P),
+          Bseq.astype(jnp.float32).reshape(B, nc, L, N),
+          Cseq.astype(jnp.float32).reshape(B, nc, L, N),
+          dt.reshape(B, nc, L, H))
+    tri = jnp.tril(jnp.ones((L, L), bool))                  # j <= i
+
+    def body(s, inp):
+        xc, bc, cc, dtc = inp                               # (B,L,...)
+        la = -dtc * A                                       # (B,L,H) log a_t
+        lc = jnp.cumsum(la, axis=1)                         # lc_i = sum_{s<=i}
+        # cross-chunk: y_i += exp(lc_i) C_i . S_prev
+        y = jnp.einsum("bln,bhpn,blh->blhp", cc, s, jnp.exp(lc))
+        # intra-chunk: decay from j to i is exp(lc_i - lc_j) for j <= i
+        pair = jnp.exp(lc[:, :, None] - lc[:, None, :])     # (B,L,L,H)
+        pair = jnp.where(tri[None, :, :, None], pair, 0.0)
+        score = jnp.einsum("bln,bmn->blm", cc, bc)          # (B,L,L)
+        xdt = xc * dtc[..., None]                           # (B,L,H,P)
+        y = y + jnp.einsum("blm,blmh,bmhp->blhp", score, pair, xdt)
+        # state update
+        lc_end = lc[:, -1]                                  # (B,H)
+        bdec = jnp.exp(lc_end[:, None] - lc)                # (B,L,H)
+        s = (jnp.exp(lc_end)[..., None, None] * s
+             + jnp.einsum("blh,bln,blhp->bhpn", bdec, bc, xdt))
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in xs)
+    state, ys = jax.lax.scan(body, state, xs)
+    return jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P), state
+
+
+def mamba2_block(p, x, cfg, mode, *, conv_state=None, ssm_state=None,
+                 chunk: int = 64, single_step: bool = False):
+    """Full Mamba-2 mixer.  Returns (y, conv_state, ssm_state)."""
+    Bsz, S, _ = x.shape
+    di, n, h = d_inner(cfg), cfg.ssm_state, n_ssm_heads(cfg)
+    P = cfg.ssm_head_dim
+    z, xi, Bf, Cf, dt = _split(p, layers.dense(p["in_proj"], x, mode), cfg)
+    conv_in = jnp.concatenate([xi, Bf, Cf], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                        conv_state)
+    xi, Bf, Cf = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = jnp.exp(p["A_log"])
+    xh = xi.reshape(Bsz, S, h, P)
+    if ssm_state is None:
+        ssm_state = jnp.zeros((Bsz, h, P, n), jnp.float32)
+    if single_step:
+        y, ssm_state = ssd_step(xh[:, 0].astype(jnp.float32),
+                                Bf[:, 0].astype(jnp.float32),
+                                Cf[:, 0].astype(jnp.float32),
+                                dt[:, 0], A, ssm_state)
+        y = y[:, None]
+    elif S % chunk == 0 and S > 1:
+        y, ssm_state = ssd_chunked(xh, Bf, Cf, dt, A, ssm_state, chunk)
+    else:
+        y, ssm_state = ssd_sequential(xh.astype(jnp.float32),
+                                      Bf.astype(jnp.float32),
+                                      Cf.astype(jnp.float32), dt, A, ssm_state)
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+    y = layers.rms_norm(p["norm"], y) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(x.dtype)
+    return layers.dense(p["out_proj"], y, mode), conv_state, ssm_state

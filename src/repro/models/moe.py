@@ -1,0 +1,149 @@
+"""Mixture-of-Experts FFN: grouped, sort-based, capacity-bounded dispatch.
+
+Perf iteration #A (EXPERIMENTS.md §Perf): the original global sort-based
+dispatch scattered token rows into an expert-major buffer ACROSS the
+expert-parallel axis; GSPMD lowers cross-shard data-dependent scatter/gather
+as replicate+all-reduce (measured 1.1e13 B/device/step on moonshot train).
+
+The fix is GShard-style grouping: tokens reshape to (G, T_g, D) with the
+group axis sharded over the data axes, so top-k / sort / capacity / scatter
+are *batched per group* and therefore shard-local.  The only cross-shard
+movement is the (G, E, C_g, D) dispatch buffer resharding from G-sharded to
+E-sharded — exactly the expert-parallel all-to-all (T*k*cf*D bytes global,
+the information-theoretic minimum for capacity-based routing) — and back.
+
+Token-choice top-k with per-group capacity drops (GShard semantics); the
+grouped einsum's HLO FLOPs track active-expert FLOPs x capacity_factor.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers
+
+
+def init_moe(key, cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    p = {"router": layers.init_dense(kr, d, e, stddev=0.02)}
+    std_in, std_out = d ** -0.5, f ** -0.5
+    if cfg.ffn_type == "swiglu":
+        p["experts_gate"] = layers.truncated_normal(kg, (e, d, f), std_in)
+        p["experts_up"] = layers.truncated_normal(ku, (e, d, f), std_in)
+    else:
+        p["experts_up"] = layers.truncated_normal(ku, (e, d, f), std_in)
+    p["experts_down"] = layers.truncated_normal(kd, (e, f, d), std_out)
+    return p
+
+
+def _num_groups(n_tokens: int) -> int:
+    """Largest G in {512..1} dividing T with T/G >= 64, falling back to
+    T/G >= 8 for small token counts (decode steps) so groups still align
+    with the data axes.
+
+    512 = the full production device count: groups shard over
+    (pod, data, model) during dispatch, so the G-major -> E-major reshard is
+    a pure all-to-all (each device trades its G-shards for E-shards)."""
+    for g in (512, 256, 128, 64, 32, 16, 8, 4, 2):
+        if n_tokens % g == 0 and n_tokens // g >= 8:
+            return g
+    return 1
+
+
+def _capacity(tokens_per_group: int, cfg) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor
+            / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)  # pad to 8 for TPU-friendly shapes
+
+
+def _dispatch_indices(top_e, C, E):
+    """Per-group dispatch. top_e: (Tg, K) expert ids.
+
+    Returns (slot (Tg*K,) in [0, E*C] with E*C = dropped, token_of (Tg*K,)).
+    """
+    Tg, K = top_e.shape
+    flat_e = top_e.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(Tg * K, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos < C
+    slot = jnp.where(keep, sorted_e * C + pos, E * C)
+    return slot, order, keep
+
+
+def moe_ffn(params, x, cfg, mode="bf16"):
+    """x (B, S, D) -> (B, S, D), plus the load-balancing aux loss."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    T = B * S
+    G = _num_groups(T)
+    Tg = T // G
+    C = _capacity(Tg, cfg)
+    xg = x.reshape(G, Tg, D)
+    xg = shard(xg, "tokens_flat", None, None)        # groups over (pod, data)
+
+    router_logits = layers.dense(params["router"], xg,
+                                 "bf16").astype(jnp.float32)  # (G, Tg, E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)           # (G, Tg, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # --- load-balancing aux loss (Switch Transformer), over all tokens ----
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0 / (T * K))
+    aux_loss = E * jnp.sum(me * ce)
+
+    # --- per-group (shard-local) sort-based dispatch -----------------------
+    slot, order, keep = jax.vmap(
+        lambda te: _dispatch_indices(te, C, E))(top_e)        # (G, Tg*K)
+    token_of = order // K
+
+    def scatter_group(xt, sl, tok):
+        buf = jnp.zeros((E * C + 1, D), x.dtype).at[sl].set(xt[tok])
+        return buf[:-1]
+
+    buf = jax.vmap(scatter_group)(xg, slot, token_of)         # (G, E*C, D)
+    buf = buf.reshape(G, E, C, D)
+    buf = shard(buf, "tokens_flat", None, None, None)
+    # ---- the expert-parallel all-to-all: G stays sharded over the batch
+    # axes while E picks up the "model" axis — GSPMD lowers this exact
+    # split/concat signature as all-to-all, not all-gather
+    buf = shard(buf, "batch", "experts", None, None)
+
+    # --- grouped expert FFN (E sharded over "model") -----------------------
+    def emm(t, w):   # (G, E, C, a) x (E, a, b) -> (G, E, C, b)
+        return jnp.einsum("geca,eab->gecb", t, w.astype(t.dtype))
+
+    if cfg.ffn_type == "swiglu":
+        g = emm(buf, params["experts_gate"])
+        u = emm(buf, params["experts_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jax.nn.gelu(emm(buf, params["experts_up"]).astype(jnp.float32)
+                        ).astype(x.dtype)
+    out_buf = emm(h, params["experts_down"])                  # (G, E, C, D)
+    out_buf = shard(out_buf, "batch", "experts", None, None)
+    # ---- all-to-all back: E-major -> G-major ------------------------------
+    out_buf = shard(out_buf, "tokens_flat", None, None, None)
+    out_buf = out_buf.reshape(G, E * C, D)
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((G, 1, D), x.dtype)], axis=1)     # drop slot
+
+    # --- combine (shard-local gather per group) ----------------------------
+    weight = (top_p.reshape(G, Tg * K)[
+        jnp.arange(G)[:, None], order] * keep).astype(x.dtype)
+
+    def combine_group(ob, sl, od, wt):
+        gathered = ob[sl] * wt[:, None]                       # (Tg*K, D)
+        contrib = jnp.zeros((Tg * K, D), x.dtype).at[od].set(gathered)
+        return contrib.reshape(Tg, K, D).sum(axis=1)
+
+    out = jax.vmap(combine_group)(out_buf, slot, order, weight)
+    out = shard(out, "tokens_flat", None, None)
+    return out.reshape(B, S, D), aux_loss

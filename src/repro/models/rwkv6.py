@@ -1,0 +1,215 @@
+"""RWKV-6 "Finch": attention-free blocks with data-dependent decay.
+
+Per head (k-dim = v-dim = N):                        [arXiv:2404.05892]
+
+    out_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T,   w_t = exp(-exp(wx_t))
+
+with per-channel, *data-dependent* decay wx_t (the Finch contribution) and
+data-dependent token-shift interpolation (ddlerp with low-rank maa).
+
+Two equivalent evaluation paths:
+
+  * ``wkv_step`` — the O(1)-state recurrence: decode + oracle.
+  * ``wkv_chunked`` — chunked-parallel training/prefill form.  Within a
+    chunk the pairwise decay factor exp(lc_i - lc_{j+1}) (<= 1, numerically
+    safe) is materialized per (i, j, channel) tile; across chunks only the
+    (N x N) state is carried.  MACs live in einsums (MXU-friendly), the
+    chunk dim is scanned.
+
+BitParticle applicability: the r/k/v/g/o and channel-mix projections are
+quantizable dense layers; the state recurrence itself is fp elementwise
+mul-add, not an int8 GEMM (DESIGN.md §5 — priced as unquantized).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+MAA_RANK = 32
+DECAY_RANK = 64
+
+
+def init_time_mix(key, cfg):
+    d = cfg.d_model
+    n_heads = d // cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    p = {
+        "mu": layers.truncated_normal(ks[0], (5, d), 0.02, jnp.float32),
+        "maa_w1": layers.truncated_normal(ks[1], (d, 5 * MAA_RANK), 0.02),
+        "maa_w2": layers.truncated_normal(ks[2], (5, MAA_RANK, d), 0.02),
+        "decay_base": jnp.zeros((d,), jnp.float32) - 1.0,
+        "decay_w1": layers.truncated_normal(ks[3], (d, DECAY_RANK), 0.02),
+        "decay_w2": layers.truncated_normal(ks[4], (DECAY_RANK, d), 0.02),
+        "bonus_u": layers.truncated_normal(ks[5], (n_heads, cfg.rwkv_head_dim),
+                                           0.02, jnp.float32),
+        "wr": layers.init_dense(ks[6], d, d),
+        "wk": layers.init_dense(ks[7], d, d),
+        "wv": layers.init_dense(ks[8], d, d),
+        "wg": layers.init_dense(ks[9], d, d),
+        "wo": layers.init_dense(ks[10], d, d),
+        "ln_x": layers.init_layernorm(d),   # per-head group-norm on output
+    }
+    return p
+
+
+def init_channel_mix(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": layers.truncated_normal(k1, (d,), 0.02, jnp.float32),
+        "wk": layers.init_dense(k2, d, f),
+        "wv": layers.init_dense(k3, f, d),
+    }
+
+
+def _token_shift(x, x_prev):
+    """shift right by one along seq; position 0 sees x_prev (B, D)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p, x, xx):
+    """data-dependent lerp producing the 5 mixed inputs (r, k, v, w, g)."""
+    B, S, D = x.shape
+    base = x[None] + (xx - x)[None] * p["mu"][:, None, None, :]
+    dx = (xx - x)
+    low = jnp.tanh(jnp.einsum("bsd,dr->bsr", dx, p["maa_w1"].astype(x.dtype)))
+    low = low.reshape(B, S, 5, MAA_RANK)
+    delta = jnp.einsum("bsnr,nrd->nbsd", low, p["maa_w2"].astype(x.dtype))
+    return base.astype(x.dtype) + ((xx - x)[None] * delta).astype(x.dtype)
+
+
+def _decay_logits(p, xw):
+    """per-channel decay exponent wx (f32): w = exp(-exp(wx)), clipped for
+    numerical safety."""
+    low = jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["decay_w1"].astype(xw.dtype)))
+    wx = p["decay_base"] + jnp.einsum(
+        "bsr,rd->bsd", low.astype(jnp.float32), p["decay_w2"].astype(jnp.float32))
+    return jnp.clip(wx, -8.0, 2.0)
+
+
+def time_mix_inputs(p, x, x_prev, cfg, mode):
+    """shared preamble: projections r,k,v,g + per-channel log-decay."""
+    B, S, D = x.shape
+    N = cfg.rwkv_head_dim
+    H = D // N
+    xx = _token_shift(x, x_prev)
+    mr, mk, mv, mw, mg = _ddlerp(p, x, xx)
+    r = layers.dense(p["wr"], mr, mode).reshape(B, S, H, N)
+    k = layers.dense(p["wk"], mk, mode).reshape(B, S, H, N)
+    v = layers.dense(p["wv"], mv, mode).reshape(B, S, H, N)
+    g = layers.dense(p["wg"], mg, mode)
+    log_w = -jnp.exp(_decay_logits(p, mw))          # (B,S,D) f32, <= 0
+    log_w = log_w.reshape(B, S, H, N)
+    return r, k, v, g, log_w, x[:, -1, :]
+
+
+def _finalize(p, out, g, cfg, mode):
+    B, S, H, N = out.shape
+    y = layers.layer_norm(p["ln_x"], out.reshape(B, S, H * N))
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
+    return layers.dense(p["wo"], y, mode)
+
+
+def wkv_step(r, k, v, log_w, u, state):
+    """One-token recurrence.  r,k,v (B,H,N); log_w (B,H,N); state (B,H,N,N).
+    Returns (out (B,H,N), new_state)."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    kv = kf[..., :, None] * vf[..., None, :]             # (B,H,N,N)
+    out = jnp.einsum("bhk,bhkv->bhv", rf, state + u[..., :, None] * kv)
+    new_state = jnp.exp(log_w)[..., :, None] * state + kv
+    return out, new_state
+
+
+def wkv_sequential(r, k, v, log_w, u, state):
+    """Step-scan over the sequence (oracle / decode path).
+    r,k,v,log_w (B,S,H,N); state (B,H,N,N)."""
+    def body(s, inputs):
+        rt, kt, vt, wt = inputs
+        out, s = wkv_step(rt, kt, vt, wt, u, s)
+        return s, out
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, log_w))
+    state, outs = jax.lax.scan(body, state, xs)
+    return jnp.moveaxis(outs, 0, 1), state           # (B,S,H,N)
+
+
+def wkv_chunked(r, k, v, log_w, u, state, chunk: int = 64):
+    """Chunk-parallel evaluation, exactly equal to ``wkv_sequential``.
+
+    Within a chunk: lc_i = sum_{s<i} log_w_s (per channel).  The intra-chunk
+    pair term uses exp(lc_i - lc_{j+1}) for j < i (exponent <= 0: safe); the
+    cross-chunk term and state update factorize into einsums.
+    """
+    B, S, H, N = r.shape
+    assert S % chunk == 0, (S, chunk)
+    L = chunk
+    nc = S // L
+    rs = (r.astype(jnp.float32).reshape(B, nc, L, H, N),
+          k.astype(jnp.float32).reshape(B, nc, L, H, N),
+          v.astype(jnp.float32).reshape(B, nc, L, H, N),
+          log_w.reshape(B, nc, L, H, N))
+
+    tri = jnp.tril(jnp.ones((L, L), bool), k=-1)      # strict lower: j < i
+
+    def body(s, inputs):
+        rc, kc, vc, wc = inputs                       # (B,L,H,N)
+        lc = jnp.cumsum(wc, axis=1) - wc              # lc_i = sum_{s<i}
+        lc_end = lc[:, -1] + wc[:, -1]                # (B,H,N) full-chunk sum
+        # cross-chunk: out_i += (r_i * exp(lc_i)) . S_prev
+        r_dec = rc * jnp.exp(lc)
+        out = jnp.einsum("blhk,bhkv->blhv", r_dec, s)
+        # intra-chunk pairs: A[i,j] = sum_d r_i k_j exp(lc_i - lc_{j+1})
+        lcs = lc + wc                                  # lc_{j+1}
+        pair = jnp.exp(lc[:, :, None] - lcs[:, None, :, :, :])  # (B,L,L,H,N)
+        pair = jnp.where(tri[None, :, :, None, None], pair, 0.0)
+        A = jnp.einsum("blhd,bmhd,blmhd->blmh", rc, kc, pair)
+        out = out + jnp.einsum("blmh,bmhv->blhv", A, vc)
+        # current-token bonus: (r_i . u*k_i) v_i
+        bonus = jnp.einsum("blhd,hd,blhd->blh", rc, u, kc)
+        out = out + bonus[..., None] * vc
+        # state update: S = diag(exp(lc_end)) S + sum_j (k_j exp(lc_end-lc_{j+1})) v_j^T
+        k_dec = kc * jnp.exp(lc_end[:, None] - lcs)
+        s_new = jnp.exp(lc_end)[..., None] * s + jnp.einsum(
+            "blhk,blhv->bhkv", k_dec, vc)
+        return s_new, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in rs)
+    state, outs = jax.lax.scan(body, state, xs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, N)
+    return out, state
+
+
+#: route the WKV recurrence through the Pallas kernel
+#: (repro.kernels.wkv6) instead of the jnp chunked form.  "interpret"
+#: validates on CPU; "tpu" for real hardware.  Module-level switch so the
+#: whole arch flips without touching configs.
+WKV_IMPL = "jnp"   # "jnp" | "interpret" | "tpu"
+
+
+def time_mix(p, x, x_prev, wkv_state, cfg, mode, chunk: int = 64):
+    """Full time-mix sub-block over a sequence (train/prefill)."""
+    r, k, v, g, log_w, x_last = time_mix_inputs(p, x, x_prev, cfg, mode)
+    u = p["bonus_u"]
+    if WKV_IMPL != "jnp" and x.shape[1] % chunk == 0 and x.shape[1] > 1:
+        from repro.kernels.wkv6 import wkv6 as wkv6_pallas
+        out, new_state = wkv6_pallas(r, k, v, log_w, u, wkv_state,
+                                     chunk=chunk,
+                                     interpret=(WKV_IMPL == "interpret"))
+        out = out.astype(jnp.float32)
+    elif x.shape[1] % chunk == 0 and x.shape[1] > 1:
+        out, new_state = wkv_chunked(r, k, v, log_w, u, wkv_state, chunk)
+    else:
+        out, new_state = wkv_sequential(r, k, v, log_w, u, wkv_state)
+    y = _finalize(p, out.astype(x.dtype), g, cfg, mode)
+    return y, x_last, new_state
+
+
+def channel_mix(p, x, x_prev, mode):
+    xx = _token_shift(x, x_prev)
+    xk = x + (xx - x) * p["mu_k"].astype(x.dtype)
+    h = layers.dense(p["wk"], xk, mode)
+    h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    return layers.dense(p["wv"], h, mode), x[:, -1, :]

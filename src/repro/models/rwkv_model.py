@@ -1,0 +1,116 @@
+"""RWKV-6 causal LM (attention-free) — the assigned ``rwkv6-7b``.
+
+State cache (decode) per layer: WKV state (B, H, N, N) f32 plus the two
+token-shift carries (B, D).  Constant-size state => the natural long_500k
+architecture (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers, rwkv6
+
+
+def init_layer(key, cfg):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "ln1": layers.init_layernorm(cfg.d_model),
+        "tm": rwkv6.init_time_mix(k1, cfg),
+        "ln2": layers.init_layernorm(cfg.d_model),
+        "cm": rwkv6.init_channel_mix(k2, cfg),
+    }
+
+
+def init(key, cfg):
+    ke, kl, kh = jax.random.split(key, 3)
+    return {
+        "embed": layers.init_embedding(ke, cfg.vocab_padded, cfg.d_model),
+        "ln0": layers.init_layernorm(cfg.d_model),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(
+            jax.random.split(kl, cfg.num_layers)),
+        "final_norm": layers.init_layernorm(cfg.d_model),
+        "lm_head": layers.init_dense(kh, cfg.d_model, cfg.vocab_padded),
+    }
+
+
+def empty_state(cfg, batch_size: int):
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    h = d // n
+    L = cfg.num_layers
+    return {
+        "wkv": jnp.zeros((L, batch_size, h, n, n), jnp.float32),
+        "x_tm": jnp.zeros((L, batch_size, d), layers.DTYPE),
+        "x_cm": jnp.zeros((L, batch_size, d), layers.DTYPE),
+    }
+
+
+def _shard_state(state):
+    state["wkv"] = shard(state["wkv"], None, "batch", "heads", None, None)
+    return state
+
+
+def forward(params, cfg, batch, state=None, *, return_state: bool = False):
+    mode = cfg.matmul_mode
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    if state is None:
+        state = _shard_state(empty_state(cfg, B))
+    x = layers.embed(params["embed"], tokens)
+    x = layers.layer_norm(params["ln0"], x)
+    x = shard(x, "batch", "seq", None)
+
+    def body(x, layer_in):
+        lp, wkv, x_tm, x_cm = layer_in
+        h = layers.layer_norm(lp["ln1"], x)
+        y, x_tm_new, wkv_new = rwkv6.time_mix(lp["tm"], h, x_tm, wkv, cfg, mode)
+        x = x + y
+        h = layers.layer_norm(lp["ln2"], x)
+        y, x_cm_new = rwkv6.channel_mix(lp["cm"], h, x_cm, mode)
+        x = x + y
+        x = shard(x, "batch", "seq", None)
+        return x, (wkv_new, x_tm_new, x_cm_new)
+
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    x, (wkv, x_tm, x_cm) = jax.lax.scan(
+        body, x, (params["layers"], state["wkv"], state["x_tm"], state["x_cm"]))
+    x = layers.layer_norm(params["final_norm"], x)
+    new_state = {"wkv": wkv, "x_tm": x_tm, "x_cm": x_cm} if return_state else None
+    return x, jnp.float32(0.0), new_state
+
+
+def loss_fn(params, cfg, batch):
+    from repro.models.causal_lm import logits_from_hidden  # shared CE path
+    x, _, _ = forward(params, cfg, batch)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x2 = shard(x.reshape(B * S, -1), "tokens_flat", None)
+    logits = logits_from_hidden(params, cfg, x2).astype(jnp.float32)
+    vmask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+    logits = jnp.where(vmask[None, :], logits, -1e9)
+    targets = jnp.roll(tokens, -1, axis=1).reshape(B * S)
+    valid = jnp.ones((B, S), bool).at[:, -1].set(False).reshape(B * S)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[:, None], axis=1)[:, 0]
+    loss = ((lse - tgt) * valid).sum() / jnp.maximum(valid.sum(), 1)
+    return loss, {"ce_loss": loss, "valid_tokens": valid.sum()}
+
+
+def prefill(params, cfg, batch, cache_T: int = 0):
+    from repro.models.causal_lm import logits_from_hidden
+    x, _, state = forward(params, cfg, batch, return_state=True)
+    logits = logits_from_hidden(params, cfg, x[:, -1:, :])[:, 0]
+    return logits, state
+
+
+def decode_step(params, cfg, batch):
+    """batch: tokens (B,1), cache = rwkv state, cache_len unused (O(1) state)."""
+    from repro.models.causal_lm import logits_from_hidden
+    x, _, state = forward(params, cfg, {"tokens": batch["tokens"]},
+                          state=batch["cache"], return_state=True)
+    logits = logits_from_hidden(params, cfg, x)[:, 0]
+    return logits, state

@@ -1,0 +1,181 @@
+"""Zamba2 hybrid: Mamba-2 backbone + one SHARED attention(+FFN) block applied
+every ``attn_every`` layers with per-invocation input norm (DESIGN.md §7).
+
+Scan structure: outer scan over super-blocks (attn_every mamba layers + one
+shared-attn invocation); mamba params stacked (n_super, attn_every, ...),
+shared-attn params unstacked (closure), per-invocation norms stacked
+(n_super, ...).  Decode cache: conv + SSM states per mamba layer and a KV
+cache per shared-attn invocation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention, layers, mamba2
+
+
+def _n_super(cfg):
+    assert cfg.num_layers % cfg.attn_every == 0
+    return cfg.num_layers // cfg.attn_every
+
+
+def init(key, cfg):
+    ke, km, ka, kf, kn, kh = jax.random.split(key, 6)
+    n_sup, ae = _n_super(cfg), cfg.attn_every
+
+    def init_mamba_layer(k):
+        return {"norm": layers.init_rmsnorm(cfg.d_model),
+                "mixer": mamba2.init_mamba2(k, cfg)}
+
+    mamba_keys = jax.random.split(km, n_sup * ae).reshape(n_sup, ae, 2)
+    return {
+        "embed": layers.init_embedding(ke, cfg.vocab_padded, cfg.d_model),
+        "mamba": jax.vmap(jax.vmap(init_mamba_layer))(mamba_keys),
+        "shared_attn": attention.init_attention(ka, cfg),
+        "shared_ffn": layers.init_ffn(kf, cfg.d_model, cfg.d_ff, cfg.ffn_type),
+        "inv_norm": jax.vmap(lambda k: layers.init_rmsnorm(cfg.d_model))(
+            jax.random.split(kn, n_sup)),
+        "inv_ffn_norm": jax.vmap(lambda k: layers.init_rmsnorm(cfg.d_model))(
+            jax.random.split(kn, n_sup)),
+        "final_norm": layers.init_rmsnorm(cfg.d_model),
+        "lm_head": layers.init_dense(kh, cfg.d_model, cfg.vocab_padded),
+    }
+
+
+def empty_cache(cfg, batch_size: int, cache_T: int):
+    n_sup, ae = _n_super(cfg), cfg.attn_every
+    di = mamba2.d_inner(cfg)
+    conv_dim = di + 2 * cfg.ssm_state
+    h = mamba2.n_ssm_heads(cfg)
+    return {
+        "conv": jnp.zeros((n_sup, ae, batch_size, cfg.ssm_conv_width - 1,
+                           conv_dim), layers.DTYPE),
+        "ssm": jnp.zeros((n_sup, ae, batch_size, h, cfg.ssm_head_dim,
+                          cfg.ssm_state), jnp.float32),
+        "k": jnp.zeros((n_sup, batch_size, cache_T, cfg.num_kv_heads,
+                        cfg.resolved_head_dim), layers.DTYPE),
+        "v": jnp.zeros((n_sup, batch_size, cache_T, cfg.num_kv_heads,
+                        cfg.resolved_head_dim), layers.DTYPE),
+    }
+
+
+def forward(params, cfg, batch, *, return_cache: bool = False,
+            cache_T: int = 0):
+    mode = cfg.matmul_mode
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = layers.embed(params["embed"], tokens)
+    x = shard(x, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = layers.rope_angles(positions, cfg.resolved_head_dim,
+                                  cfg.rope_theta)
+
+    def mamba_body(x, lp):
+        h = layers.rms_norm(lp["norm"], x, cfg.norm_eps)
+        y, conv_s, ssm_s = mamba2.mamba2_block(lp["mixer"], h, cfg, mode)
+        x = x + y
+        x = shard(x, "batch", "seq", None)
+        return x, (conv_s, ssm_s)
+
+    def super_body(x, sp):
+        mp, inv_norm, inv_ffn_norm = sp
+        x, (conv_s, ssm_s) = jax.lax.scan(mamba_body, x, mp)
+        h = layers.rms_norm(inv_norm, x, cfg.norm_eps)
+        attn_out, (k, v) = attention.attention_block(
+            params["shared_attn"], h, cfg, mode, cos=cos, sin=sin)
+        x = x + attn_out
+        h = layers.rms_norm(inv_ffn_norm, x, cfg.norm_eps)
+        x = x + layers.ffn(params["shared_ffn"], h, cfg.ffn_type, mode)
+        x = shard(x, "batch", "seq", None)
+        if return_cache:
+            if cache_T > k.shape[1]:
+                pad = [(0, 0), (0, cache_T - k.shape[1]), (0, 0), (0, 0)]
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+            k = shard(k, "batch", "cache_seq", "heads", None)
+            v = shard(v, "batch", "cache_seq", "heads", None)
+            return x, (conv_s, ssm_s, k, v)
+        return x, None
+
+    super_body = jax.checkpoint(
+        super_body, policy=jax.checkpoint_policies.nothing_saveable)
+    xs = (params["mamba"], params["inv_norm"], params["inv_ffn_norm"])
+    x, ys = jax.lax.scan(super_body, x, xs)
+    x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    cache = None
+    if return_cache:
+        conv_s, ssm_s, ks, vs = ys
+        cache = {"conv": conv_s, "ssm": ssm_s, "k": ks, "v": vs}
+    return x, jnp.float32(0.0), cache
+
+
+def loss_fn(params, cfg, batch):
+    from repro.models.causal_lm import logits_from_hidden
+    x, _, _ = forward(params, cfg, batch)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x2 = shard(x.reshape(B * S, -1), "tokens_flat", None)
+    logits = logits_from_hidden(params, cfg, x2).astype(jnp.float32)
+    vmask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+    logits = jnp.where(vmask[None, :], logits, -1e9)
+    targets = jnp.roll(tokens, -1, axis=1).reshape(B * S)
+    valid = jnp.ones((B, S), bool).at[:, -1].set(False).reshape(B * S)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[:, None], axis=1)[:, 0]
+    loss = ((lse - tgt) * valid).sum() / jnp.maximum(valid.sum(), 1)
+    return loss, {"ce_loss": loss, "valid_tokens": valid.sum()}
+
+
+def prefill(params, cfg, batch, cache_T: int):
+    from repro.models.causal_lm import logits_from_hidden
+    x, _, cache = forward(params, cfg, batch, return_cache=True,
+                          cache_T=cache_T)
+    logits = logits_from_hidden(params, cfg, x[:, -1:, :])[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cfg, batch):
+    from repro.models.causal_lm import logits_from_hidden
+    mode = cfg.matmul_mode
+    tokens, cache, cache_len = batch["tokens"], batch["cache"], batch["cache_len"]
+    B = tokens.shape[0]
+    x = layers.embed(params["embed"], tokens)
+    pos = jnp.broadcast_to(cache_len[None, None], (B, 1))
+    cos, sin = layers.rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
+
+    def mamba_body(x, lin):
+        lp, conv_s, ssm_s = lin
+        h = layers.rms_norm(lp["norm"], x, cfg.norm_eps)
+        y, conv_s, ssm_s = mamba2.mamba2_block(
+            lp["mixer"], h, cfg, mode, conv_state=conv_s, ssm_state=ssm_s,
+            single_step=True)
+        return x + y, (conv_s, ssm_s)
+
+    def super_body(x, sin_):
+        mp, inv_norm, inv_ffn_norm, conv_s, ssm_s, kc, vc = sin_
+        x, (conv_s, ssm_s) = jax.lax.scan(mamba_body, x, (mp, conv_s, ssm_s))
+        h = layers.rms_norm(inv_norm, x, cfg.norm_eps)
+        q, k, v = attention.qkv_proj(params["shared_attn"], h, cfg, mode)
+        q = layers.apply_rope(q, cos, sin)
+        k = layers.apply_rope(k, cos, sin)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, cache_len, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, cache_len, 0, 0))
+        kc = shard(kc, "batch", "cache_seq", "heads", None)
+        vc = shard(vc, "batch", "cache_seq", "heads", None)
+        out = attention.decode_attention(q, kc, vc, cache_len)
+        out = out.reshape(B, 1, cfg.num_heads * cfg.resolved_head_dim)
+        x = x + layers.dense(params["shared_attn"]["wo"], out, mode)
+        h = layers.rms_norm(inv_ffn_norm, x, cfg.norm_eps)
+        x = x + layers.ffn(params["shared_ffn"], h, cfg.ffn_type, mode)
+        return x, (conv_s, ssm_s, kc, vc)
+
+    xs = (params["mamba"], params["inv_norm"], params["inv_ffn_norm"],
+          cache["conv"], cache["ssm"], cache["k"], cache["v"])
+    x, (conv_s, ssm_s, ks, vs) = jax.lax.scan(super_body, x, xs)
+    x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, x)[:, 0]
+    return logits, {"conv": conv_s, "ssm": ssm_s, "k": ks, "v": vs}

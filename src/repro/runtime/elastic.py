@@ -1,0 +1,30 @@
+"""Elastic re-scaling: restore any checkpoint onto a different mesh.
+
+Checkpoints are topology-free (host numpy per leaf); this module pairs them
+with fresh partition specs for the *new* mesh so a job preempted on one pod
+count resumes on another (growing or shrinking the fleet).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.distributed.sharding import named_shardings
+
+
+def restore_for_mesh(ckpt: CheckpointManager, step: int, like: Any,
+                     mesh, recipe_name: str = "train"):
+    """Restore ``like``-structured state, sharded for ``mesh``."""
+    shardings = named_shardings(like, recipe_name, mesh)
+    return ckpt.restore(step, like, shardings=shardings)
+
+
+def reshard(tree: Any, mesh, recipe_name: str = "train"):
+    """Live-reshard an in-memory state tree onto a new mesh (shrink/grow)."""
+    shardings = named_shardings(tree, recipe_name, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, shardings,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))

@@ -1,0 +1,99 @@
+"""AdamW with fp32 master params, global-norm clipping, cosine schedule.
+
+Built from scratch (no optax offline): states are a pytree mirroring params
+{m, v, master} so they shard with the same partition rules (FSDP).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_schedule(cfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = cfg.peak_lr * jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init_state(params) -> Dict[str, Any]:
+    # derive zeros from each param so every leaf owns a distinct buffer
+    # (identical zero constants can alias, which breaks jit donation)
+    zeros32 = lambda p: (p * 0).astype(jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        # +0.0 forces a fresh buffer: an already-f32 param would otherwise
+        # ALIAS its master (astype is a no-op), breaking donation downstream
+        "master": jax.tree.map(
+            lambda p: p.astype(jnp.float32) + 0.0, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def _decay_mask(path) -> bool:
+    """Decay 2D+ matrices; skip norms/biases/1D tables-of-scalars."""
+    name = "/".join(str(getattr(k, "key", k)) for k in path)
+    return not any(s in name for s in ("norm", "scale", "bias", "ln", "_b"))
+
+
+def apply_updates(cfg: OptimizerConfig, params, opt_state, grads):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    flat_paths = [p for p, _ in
+                  jax.tree_util.tree_flatten_with_path(params)[0]]
+    decay_flags = [_decay_mask(p) for p in flat_paths]
+    treedef = jax.tree.structure(params)
+    decay_tree = jax.tree.unflatten(treedef, decay_flags)
+
+    def upd(g, m, v, master, decay):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if decay:
+            u = u + cfg.weight_decay * master
+        master = master - lr * u
+        return m, v, master
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"],
+                       opt_state["master"], decay_tree)
+    m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    master = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype), master, params)
+    new_state = {"step": step, "m": m, "v": v, "master": master}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

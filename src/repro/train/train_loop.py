@@ -1,0 +1,186 @@
+"""Production training loop: jitted step (grad accumulation, donation,
+optional compressed-gradient path), on-device NaN/spike step rejection,
+checkpoint/resume, preemption-safe exit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.data.pipeline import DataConfig, PrefetchingLoader
+from repro.distributed import compression
+from repro.models import api
+from repro.runtime.fault_tolerance import PreemptionGuard, with_retries
+from repro.train import optimizer as opt_lib
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    total_steps: int = 200
+    grad_accum: int = 1
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    compress_grads: bool = False     # int8 + error-feedback cross-pod model
+    log_every: int = 10
+    spike_factor: float = 4.0        # reject loss > factor x running median
+    max_consecutive_skips: int = 8
+    optimizer: opt_lib.OptimizerConfig = opt_lib.OptimizerConfig()
+
+
+def make_train_step(arch_cfg, train_cfg: TrainConfig) -> Callable:
+    """Jitted (params, opt_state, err_state, batch, loss_median) -> step.
+
+    Step rejection happens ON DEVICE (jnp.where-select of old vs new state),
+    so buffer donation stays valid even for rejected steps: a non-finite or
+    spiking loss commits the ORIGINAL params/opt state.
+    """
+    accum = train_cfg.grad_accum
+    opt_cfg = train_cfg.optimizer
+
+    def loss_of(params, batch):
+        return api.loss_fn(params, arch_cfg, batch)
+
+    def compute_grads(params, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+            return loss, metrics, grads
+        def micro(carry, mb):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, mb)
+            acc_loss, acc_grads = carry
+            return (acc_loss + loss,
+                    jax.tree.map(jnp.add, acc_grads, grads)), metrics
+        micro_batches = jax.tree.map(
+            lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+            batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (loss, grads), metrics = jax.lax.scan(
+            micro, (jnp.float32(0), zeros), micro_batches)
+        grads = jax.tree.map(lambda g: g / accum, grads)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss / accum, metrics, grads
+
+    def step(params, opt_state, err_state, batch, loss_median):
+        loss, metrics, grads = compute_grads(params, batch)
+        new_err = err_state
+        if train_cfg.compress_grads:
+            # wire-format model of the cross-pod compressed all-reduce:
+            # quantize + error-feedback the contribution being reduced
+            grads, new_err = compression.compress_tree_with_feedback(
+                grads, err_state)
+        new_params, new_opt, opt_metrics = opt_lib.apply_updates(
+            opt_cfg, params, opt_state, grads)
+        commit = jnp.isfinite(loss)
+        commit &= jnp.where(loss_median > 0,
+                            loss <= train_cfg.spike_factor * loss_median,
+                            True)
+        sel = lambda new, old: jax.tree.map(
+            lambda n, o: jnp.where(commit, n, o), new, old)
+        params = sel(new_params, params)
+        opt_state = sel(new_opt, opt_state)
+        err_state = sel(new_err, err_state)
+        metrics = {**metrics, **opt_metrics, "loss": loss,
+                   "committed": commit.astype(jnp.float32)}
+        return params, opt_state, err_state, metrics
+
+    return jax.jit(step, donate_argnums=(0, 1, 2))
+
+
+class Trainer:
+    """Checkpointed, fault-tolerant driver around the jitted step."""
+
+    def __init__(self, arch_cfg, train_cfg: TrainConfig, data_cfg: DataConfig,
+                 init_key=None, install_signals: bool = False):
+        self.arch_cfg = arch_cfg
+        self.cfg = train_cfg
+        self.data_cfg = data_cfg
+        self.ckpt = CheckpointManager(train_cfg.ckpt_dir,
+                                      keep=train_cfg.ckpt_keep)
+        self.step_fn = make_train_step(arch_cfg, train_cfg)
+        key = init_key if init_key is not None else jax.random.PRNGKey(0)
+        self.params = api.init(key, arch_cfg)
+        self.opt_state = opt_lib.init_state(self.params)
+        self.err_state = (compression.init_error_state(self.params)
+                          if train_cfg.compress_grads else jnp.zeros((1,)))
+        self.start_step = 0
+        self.guard = PreemptionGuard(install=install_signals)
+        self.loss_history: list[float] = []
+        self.total_skips = 0
+        self._maybe_resume()
+
+    # -- checkpoint plumbing -------------------------------------------------
+    def _state_tree(self):
+        return {"params": self.params, "opt": self.opt_state,
+                "err": self.err_state}
+
+    def _maybe_resume(self):
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return
+        restored = with_retries(
+            lambda: self.ckpt.restore(latest, self._state_tree()))
+        self.params = restored["params"]
+        self.opt_state = restored["opt"]
+        self.err_state = restored["err"]
+        self.start_step = latest
+        log.info("resumed from step %d", latest)
+
+    def save(self, step: int, blocking: bool = False):
+        with_retries(lambda: self.ckpt.save(step, self._state_tree(),
+                                            blocking=blocking))
+
+    # -- main loop -------------------------------------------------------------
+    def run(self, on_metrics: Optional[Callable[[int, Dict], None]] = None):
+        loader = PrefetchingLoader(self.data_cfg, start_step=self.start_step,
+                                   q_depth=2)
+        history = []
+        consecutive_skips = 0
+        try:
+            step = self.start_step
+            while step < self.cfg.total_steps and not self.guard.requested:
+                batch = {k: jnp.asarray(v) for k, v in next(loader).items()}
+                median = (float(np.median(self.loss_history[-32:]))
+                          if len(self.loss_history) >= 16 else 0.0)
+                t0 = time.perf_counter()
+                self.params, self.opt_state, self.err_state, metrics = (
+                    self.step_fn(self.params, self.opt_state, self.err_state,
+                                 batch, jnp.float32(median)))
+                loss = float(metrics["loss"])
+                committed = bool(metrics["committed"] > 0)
+                if committed:
+                    self.loss_history.append(loss)
+                    consecutive_skips = 0
+                else:
+                    self.total_skips += 1
+                    consecutive_skips += 1
+                    log.warning("step rejected (loss=%s)", loss)
+                    if consecutive_skips > self.cfg.max_consecutive_skips:
+                        raise RuntimeError(
+                            "too many consecutive rejected steps; "
+                            "restore from an earlier checkpoint")
+                step += 1
+                metrics["step_time_s"] = time.perf_counter() - t0
+                history.append((step, loss))
+                if on_metrics and step % self.cfg.log_every == 0:
+                    on_metrics(step, {k: float(v) for k, v in metrics.items()
+                                      if jnp.ndim(v) == 0})
+                if step % self.cfg.ckpt_every == 0:
+                    self.save(step)
+            self.save(step, blocking=True)
+            return step, history
+        finally:
+            loader.close()
+            self.ckpt.wait()

@@ -1,0 +1,36 @@
+"""Approximation-depth ablation invariants (benchmarks/ablation_drop_groups):
+error/skip monotonicity and the paper-point identities."""
+
+import pytest
+
+from benchmarks.ablation_drop_groups import run
+
+
+@pytest.fixture(scope="module")
+def result():
+    return run()
+
+
+def test_paper_points(result):
+    rows = {r["dropped_groups"]: r for r in result["rows"]}
+    assert rows[0]["max_abs_error"] == 0           # exact is exact
+    assert rows[2]["max_abs_error"] == 81          # paper bound
+    assert rows[1]["max_abs_error"] == 9           # group {0} alone
+
+
+def test_monotone_tradeoff(result):
+    rows = result["rows"]
+    errs = [r["mean_rel_error"] for r in rows]
+    cycles = [r["avg_cycles_bs0.65"] for r in rows]
+    skipped = [r["skipped_calc_frac"] for r in rows]
+    mse = [r["layer_logit_rel_mse"] for r in rows]
+    assert all(a <= b + 1e-12 for a, b in zip(errs, errs[1:]))
+    assert all(a >= b - 1e-9 for a, b in zip(cycles, cycles[1:]))
+    assert all(a <= b + 1e-12 for a, b in zip(skipped, skipped[1:]))
+    assert all(a <= b + 1e-12 for a, b in zip(mse, mse[1:]))
+
+
+def test_knee_is_at_the_paper_choice(result):
+    # dropping a third group blows error up far faster than it saves cycles
+    assert result["third_group_error_blowup"] > 4
+    assert result["third_group_cycle_gain"] < 0.2

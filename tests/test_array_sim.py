@@ -1,0 +1,131 @@
+"""Quasi-sync MAC-array simulator: invariants + paper-claim trend tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.array_sim import ArrayConfig, SimResult, build_op_costs, run_experiment, simulate
+
+SMALL = dict(rows=4, cols=8)
+
+
+def _cfg(E, Q, **kw):
+    return ArrayConfig(E=E, Q=Q, **{**SMALL, **kw})
+
+
+def _rand_costs(rng, cfg, steps, p_zero=0.0):
+    c = rng.integers(1, 5, size=(cfg.rows, cfg.cols, steps)).astype(np.int32)
+    if p_zero:
+        c[rng.random(c.shape) < p_zero] = 0
+    return c
+
+
+class TestInvariants:
+    def test_strict_sync_equals_analytic(self):
+        # E0Q0: the whole array advances in lock-step; cycles = sum of
+        # per-step global maxima.
+        rng = np.random.default_rng(0)
+        cfg = _cfg(0, 0)
+        costs = _rand_costs(rng, cfg, 50)
+        res = simulate(costs, cfg)
+        want = int(np.maximum(costs.max(axis=(0, 1)), 1).sum())
+        assert res.cycles == want
+
+    @given(st.integers(0, 10_000), st.sampled_from([0, 1, 3]),
+           st.sampled_from([0, 1, 2]), st.floats(0.0, 0.5))
+    @settings(max_examples=20, deadline=None)
+    def test_bounds_and_conservation(self, seed, E, Q, p_zero):
+        rng = np.random.default_rng(seed)
+        cfg = _cfg(E, Q)
+        costs = _rand_costs(rng, cfg, 30, p_zero)
+        res = simulate(costs, cfg)
+        # every op must execute somewhere: cycles >= busiest PE's total work
+        assert res.cycles >= costs.sum(axis=-1).max()
+        # a column accepts at most one step per cycle
+        assert res.cycles >= 30
+        assert 0.0 <= res.pe_utilization <= 1.0
+        assert res.max_observed_divergence <= max(E, 0)
+        # total busy cycles == total work (nothing lost or duplicated)
+        busy = res.pe_utilization * res.cycles * cfg.rows * cfg.cols
+        assert abs(busy - costs.sum()) < 1e-6
+
+    def test_all_zero_costs_run_one_cycle_per_step(self):
+        cfg = _cfg(3, 2)
+        costs = np.zeros((cfg.rows, cfg.cols, 20), np.int32)
+        res = simulate(costs, cfg)
+        assert res.cycles == 20 and res.pe_utilization == 0.0
+
+    def test_divergence_bound_is_tight_when_one_column_stalls(self):
+        cfg = _cfg(2, 1)
+        costs = np.ones((cfg.rows, cfg.cols, 30), np.int32)
+        costs[:, 0, :] = 4   # column 0 is 4x slower
+        res = simulate(costs, cfg)
+        assert res.max_observed_divergence == 2
+
+
+class TestPaperTrends:
+    """Section IV-B3 conclusions, on the real generator (reduced sizes)."""
+
+    @pytest.fixture(scope="class")
+    def grid(self):
+        out = {}
+        for E, Q in [(0, 0), (0, 2), (3, 0), (3, 2)]:
+            out[(E, Q)] = run_experiment(
+                0, ArrayConfig(E=E, Q=Q), n_steps=160, bit_sparsity=0.7)
+        return out
+
+    def test_elasticity_improves_utilization(self, grid):
+        base = grid[(0, 0)].pe_utilization
+        assert grid[(0, 2)].pe_utilization > base   # intra-group alone helps
+        assert grid[(3, 0)].pe_utilization > base   # inter-group alone helps
+        best = grid[(3, 2)].pe_utilization
+        assert best > grid[(0, 2)].pe_utilization
+        assert best > grid[(3, 0)].pe_utilization   # combining is best
+
+    def test_intra_group_beats_inter_group_at_typical_sparsity(self, grid):
+        # paper: for bs in [0.5, 0.8], EuQy(intra) > EuQ0(inter)
+        assert grid[(0, 2)].pe_utilization > grid[(3, 0)].pe_utilization
+
+    def test_cycles_per_step_improves(self, grid):
+        assert (grid[(3, 2)].avg_cycles_per_step
+                < grid[(0, 0)].avg_cycles_per_step)
+
+    def test_zero_filtering_reduces_cycles_per_step(self):
+        slow = run_experiment(1, ArrayConfig(E=3, Q=2, zero_filter=False),
+                              n_steps=160, bit_sparsity=0.65,
+                              a_value_sparsity=0.6)
+        fast = run_experiment(1, ArrayConfig(E=3, Q=2, zero_filter=True),
+                              n_steps=160, bit_sparsity=0.65,
+                              a_value_sparsity=0.6)
+        assert fast.avg_cycles_per_step < slow.avg_cycles_per_step
+
+    def test_higher_bit_sparsity_is_faster(self):
+        lo = run_experiment(2, ArrayConfig(E=3, Q=2), 120, bit_sparsity=0.5)
+        hi = run_experiment(2, ArrayConfig(E=3, Q=2), 120, bit_sparsity=0.9)
+        assert hi.avg_cycles_per_step < lo.avg_cycles_per_step
+
+
+class TestCostBuilder:
+    def test_shapes_and_range(self):
+        cfg = ArrayConfig(E=3, Q=2)
+        import jax
+        costs = build_op_costs(jax.random.PRNGKey(0), cfg, 40, 0.6)
+        assert costs.shape == (16, 32, 40)
+        assert costs.min() >= 1 and costs.max() <= 4
+
+    def test_zero_filter_zeroes_value_sparse_ops(self):
+        cfg = ArrayConfig(E=3, Q=2, zero_filter=True)
+        import jax
+        costs = build_op_costs(jax.random.PRNGKey(0), cfg, 40, 0.6,
+                               a_value_sparsity=0.5)
+        assert (costs == 0).mean() > 0.3
+
+    def test_weight_shared_across_columns(self):
+        # row-r step-s weight identical for all columns => if a weight is
+        # zero, with zero_filter every column's op at that (r, s) is free.
+        cfg = ArrayConfig(E=0, Q=0, zero_filter=True)
+        import jax
+        costs = build_op_costs(jax.random.PRNGKey(3), cfg, 60, 0.5,
+                               w_value_sparsity=0.9)
+        zero_rows = (costs == 0).all(axis=1)   # (R, S) — same across cols
+        assert zero_rows.any()

@@ -1,0 +1,293 @@
+"""Exhaustive + property tests for the BitParticle MAC emulation.
+
+The magnitude space is only 7 bits, so core claims are verified EXHAUSTIVELY
+over all 128x128 magnitude pairs (and all 255x255 signed pairs where cheap).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitparticle as bp
+from repro.core import bp_matmul, quant, sparsity
+
+
+def _all_magnitude_pairs():
+    a = np.arange(128).repeat(128)
+    w = np.tile(np.arange(128), 128)
+    return jnp.asarray(a), jnp.asarray(w)
+
+
+# ---------------------------------------------------------------------------
+# Structure
+# ---------------------------------------------------------------------------
+
+class TestStructure:
+    def test_groups_partition_all_16_positions(self):
+        ids = sorted(i for g in bp.GROUP_IDS for i in g)
+        assert ids == list(range(16))
+
+    def test_group_sets_partition_groups(self):
+        assert sorted(bp.GROUP_SET0 + bp.GROUP_SET1) == list(range(7))
+
+    def test_paper_named_groups(self):
+        # Section III-A: group 3-6-9-12, group 7-10-13, group 2-5-8, etc.
+        assert bp.GROUP_IDS[3] == (3, 6, 9, 12)
+        assert bp.GROUP_IDS[4] == (7, 10, 13)
+        assert bp.GROUP_IDS[2] == (2, 5, 8)
+        assert bp.GROUP_IDS[1] == (1, 4)
+        assert bp.GROUP_IDS[0] == (0,)
+        assert bp.GROUP_IDS[6] == (15,)
+
+    def test_particlize_roundtrip_exhaustive(self):
+        mags = jnp.arange(128)
+        assert (bp.unparticlize(bp.particlize(mags)) == mags).all()
+
+    def test_particle_widths(self):
+        p = np.asarray(bp.particlize(jnp.arange(128)))
+        assert p[:, :3].max() == 3 and p[:, 3].max() == 1
+
+
+# ---------------------------------------------------------------------------
+# Exact product reconstruction (the central "faithfulness" proof)
+# ---------------------------------------------------------------------------
+
+class TestExactProduct:
+    def test_magnitude_product_exhaustive(self):
+        ma, mw = _all_magnitude_pairs()
+        got = bp.magnitude_product_from_irs(ma, mw)
+        assert (got == ma * mw).all()
+
+    def test_signed_product_exhaustive(self):
+        vals = jnp.arange(-127, 128)
+        a = vals[:, None]
+        w = vals[None, :]
+        assert (bp.multiply_exact(a, w) == a * w).all()
+
+    def test_ir_value_set(self):
+        ma, mw = _all_magnitude_pairs()
+        irs = np.asarray(bp.ir_matrix(ma, mw))
+        assert set(np.unique(irs)) <= set(bp.IR_VALUE_SET)
+
+    def test_ir_encode3_roundtrip(self):
+        vals = jnp.asarray(bp.IR_VALUE_SET)
+        codes = bp.ir_encode3(vals)
+        assert codes.max() <= 7  # fits in 3 bits
+        assert (bp.ir_decode3(codes) == vals).all()
+
+
+# ---------------------------------------------------------------------------
+# Cycle model
+# ---------------------------------------------------------------------------
+
+class TestCycles:
+    def test_cycles_bounds_exhaustive(self):
+        ma, mw = _all_magnitude_pairs()
+        c = np.asarray(bp.mac_cycles(ma, mw))
+        assert c.min() >= 1 and c.max() <= bp.MAX_CYCLES
+
+    def test_zero_operand_single_cycle(self):
+        assert int(bp.mac_cycles(0, 127)) == 1
+        assert int(bp.mac_cycles(127, 0)) == 1
+
+    def test_worst_case_is_four(self):
+        # all magnitude bits set on both operands -> group 3-6-9-12 full.
+        assert int(bp.mac_cycles(127, 127)) == 4
+
+    def test_approx_cycles_never_exceed_exact(self):
+        ma, mw = _all_magnitude_pairs()
+        ce = np.asarray(bp.mac_cycles(ma, mw, approx=False))
+        ca = np.asarray(bp.mac_cycles(ma, mw, approx=True))
+        assert (ca <= ce).all()
+
+
+# ---------------------------------------------------------------------------
+# Cycle-by-cycle datapath (selection + concatenation + 13-bit adder)
+# ---------------------------------------------------------------------------
+
+class TestDatapath:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_assembly_matches_product_random(self, seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(500):
+            a = int(rng.integers(-127, 128))
+            w = int(rng.integers(-127, 128))
+            prod, pps, cycles = bp.assemble_partial_products(a, w)
+            assert prod == a * w
+            assert len(pps) == cycles <= bp.MAX_CYCLES
+            n_pps = sum(1 for s0, s1 in pps for v in (s0, s1) if v)
+            assert n_pps <= bp.MAX_PARTIAL_PRODUCTS
+            for s0, s1 in pps:
+                assert 0 <= s0 < (1 << 13) and 0 <= s1 < (1 << 13)  # 13-bit PPs
+
+    def test_assembly_cycles_match_model(self):
+        rng = np.random.default_rng(3)
+        a = rng.integers(-127, 128, size=200)
+        w = rng.integers(-127, 128, size=200)
+        model = np.asarray(bp.mac_cycles(jnp.asarray(a), jnp.asarray(w)))
+        for i in range(200):
+            _, _, cyc = bp.assemble_partial_products(int(a[i]), int(w[i]))
+            assert cyc == model[i]
+
+    def test_worst_case_pp_count_is_seven(self):
+        _, pps, cycles = bp.assemble_partial_products(127, 127)
+        assert cycles == 4
+        n_pps = sum(1 for s0, s1 in pps for v in (s0, s1) if v)
+        assert n_pps == 7  # matches a conventional 7-bit multiplier
+
+
+# ---------------------------------------------------------------------------
+# Approximate variant
+# ---------------------------------------------------------------------------
+
+class TestApprox:
+    def test_approx_identity_exhaustive(self):
+        vals = jnp.arange(-127, 128)
+        a, w = vals[:, None], vals[None, :]
+        approx = bp.multiply_approx(a, w)
+        corr = bp.approx_correction(a, w)
+        assert (approx == a * w - corr).all()
+
+    def test_approx_error_bound_exhaustive(self):
+        # dropped: a0*w0 + 4*(a0*w1 + a1*w0) <= 9 + 4*(9+9) = 81
+        vals = jnp.arange(-127, 128)
+        a, w = vals[:, None], vals[None, :]
+        err = np.abs(np.asarray(bp.multiply_approx(a, w) - a * w))
+        assert err.max() == 81
+        assert abs(np.asarray(bp.approx_correction(a, w))).max() == 81
+
+    def test_approx_drops_low_groups_only(self):
+        ma, mw = _all_magnitude_pairs()
+        got = bp.magnitude_product_from_irs(ma, mw, bp.APPROX_DROPPED_GROUPS)
+        irs = np.asarray(bp.ir_matrix(ma, mw))
+        diag = np.add.outer(np.arange(4), np.arange(4))
+        want = (irs * np.where(diag >= 2, 1 << (2 * diag), 0)).sum((-2, -1))
+        assert (np.asarray(got) == want).all()
+
+
+# ---------------------------------------------------------------------------
+# Skipped-calculations metric (Fig. 11 foundations)
+# ---------------------------------------------------------------------------
+
+class TestSkipped:
+    def test_ordering_at_high_sparsity(self):
+        key = jax.random.PRNGKey(0)
+        a = sparsity.sample_with_bit_sparsity(key, (20000,), 0.7)
+        w = sparsity.sample_with_bit_sparsity(jax.random.PRNGKey(1), (20000,), 0.7)
+        ideal = float(jnp.mean(bp.skipped_calculations(a, w, "ideal")))
+        serial = float(jnp.mean(bp.skipped_calculations(a, w, "bit_serial")))
+        exact = float(jnp.mean(bp.skipped_calculations(a, w, "bp_exact")))
+        approx = float(jnp.mean(bp.skipped_calculations(a, w, "bp_approx")))
+        # paper Fig. 11: ideal >= bp_approx >= bp_exact >= bit_serial at bs >= 0.52
+        assert ideal >= approx >= exact >= serial
+
+    def test_ideal_zero_operand(self):
+        assert float(bp.skipped_calculations(0, 127, "ideal")) == 1.0
+
+    def test_dense_operands_skip_nothing(self):
+        assert float(bp.skipped_calculations(127, 127, "ideal")) == 0.0
+        assert float(bp.skipped_calculations(127, 127, "bp_exact")) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Quantization
+# ---------------------------------------------------------------------------
+
+class TestQuant:
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_quant_range_and_roundtrip(self, seed):
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (64,)) * jax.random.uniform(key, ()) * 10
+        q, s = quant.quantize_per_tensor(x)
+        assert np.abs(np.asarray(q)).max() <= 127
+        err = np.abs(np.asarray(quant.dequantize(q, s) - x))
+        assert err.max() <= float(s) / 2 + 1e-6
+
+    def test_per_channel_shapes(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
+        q, s = quant.quantize_per_channel(x, channel_axis=-1)
+        assert q.shape == (32, 16) and s.shape == (1, 16)
+
+    def test_fake_quant_ste(self):
+        x = jnp.linspace(-2.0, 2.0, 64)
+        s = jnp.asarray(1.0 / 127)
+        g = jax.grad(lambda v: jnp.sum(quant.fake_quant(v, s)))(x)
+        assert np.allclose(np.asarray(g), np.where(np.abs(x) <= 1.0, 1.0, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Integer matmul backends (the jnp reference the Pallas kernel must match)
+# ---------------------------------------------------------------------------
+
+class TestBpMatmul:
+    @given(st.integers(0, 2**32 - 1), st.sampled_from([1, 3, 8]),
+           st.sampled_from([4, 17, 64]), st.sampled_from([2, 5, 16]))
+    @settings(max_examples=25, deadline=None)
+    def test_exact_equals_int_matmul(self, seed, m, k, n):
+        key = jax.random.PRNGKey(seed)
+        a = jax.random.randint(key, (m, k), -127, 128)
+        w = jax.random.randint(jax.random.fold_in(key, 1), (k, n), -127, 128)
+        got = bp_matmul.bp_matmul_int(a, w, "bp_exact")
+        assert (np.asarray(got) == np.asarray(a) @ np.asarray(w)).all()
+
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_approx_matches_elementwise_oracle(self, seed):
+        key = jax.random.PRNGKey(seed)
+        m, k, n = 5, 19, 7
+        a = jax.random.randint(key, (m, k), -127, 128)
+        w = jax.random.randint(jax.random.fold_in(key, 1), (k, n), -127, 128)
+        got = bp_matmul.bp_matmul_int(a, w, "bp_approx")
+        # oracle: elementwise IR-reconstruction products, summed over K
+        prod = bp.multiply_approx(a[:, :, None], w[None, :, :])
+        want = jnp.sum(prod, axis=1)
+        assert (np.asarray(got) == np.asarray(want)).all()
+
+    def test_dense_apply_modes_close(self):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (4, 32), jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (32, 8), jnp.float32) / 6
+        y = bp_matmul.dense_apply(x, w, "bf16")
+        y_e = bp_matmul.dense_apply(x, w, "bp_exact")
+        y_a = bp_matmul.dense_apply(x, w, "bp_approx")
+        y_q = bp_matmul.dense_apply(x, w, "qat")
+        assert np.allclose(y, y_e, atol=0.15)
+        assert np.allclose(y_e, y_a, atol=0.05)   # approx error is tiny
+        assert np.allclose(y, y_q, atol=0.15)
+
+    def test_quantized_matmul_grad_flows_to_x(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 8)) / 4
+        def loss(xx):
+            return jnp.sum(bp_matmul.dense_apply(xx, w, "bp_exact") ** 2)
+        g = jax.grad(loss)(x)
+        assert np.isfinite(np.asarray(g)).all() and float(jnp.abs(g).max()) > 0
+
+
+# ---------------------------------------------------------------------------
+# Sparsity statistics
+# ---------------------------------------------------------------------------
+
+class TestSparsity:
+    def test_generator_hits_target(self):
+        key = jax.random.PRNGKey(0)
+        for bs in (0.5, 0.7, 0.9):
+            x = sparsity.sample_with_bit_sparsity(key, (50000,), bs)
+            got = float(sparsity.bit_sparsity_sign_magnitude(x))
+            assert abs(got - bs) < 0.01
+
+    def test_sign_magnitude_sparser_than_twos_complement(self):
+        # paper Fig. 1's motivation: gaussian-ish small negatives have dense
+        # 2's-complement patterns but sparse magnitudes.
+        x = jax.random.normal(jax.random.PRNGKey(2), (20000,))
+        q, _ = quant.quantize_per_tensor(x)
+        sm = float(sparsity.bit_sparsity_sign_magnitude(q))
+        tc = float(sparsity.bit_sparsity_twos_complement(q))
+        assert sm > tc
+
+    def test_value_sparsity(self):
+        x = jnp.asarray([0, 0, 1, -3])
+        assert float(sparsity.value_sparsity(x)) == 0.5

@@ -1,0 +1,49 @@
+"""Every shipped example must run end-to-end (subprocess smoke tests)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _run(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable] + args, capture_output=True,
+                         text=True, timeout=timeout, env=env, cwd=ROOT)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_quickstart():
+    out = _run(["examples/quickstart.py"])
+    assert "product=-5301 (check: -5301)" in out
+    assert "kernel == jnp reference: True" in out
+
+
+@pytest.mark.slow
+def test_serve_lm():
+    out = _run(["examples/serve_lm.py", "--tokens", "6", "--batch", "2"])
+    assert "tokens/s" in out and "deployment estimate" in out
+
+
+@pytest.mark.slow
+def test_train_lm_runs_and_resumes(tmp_path):
+    d = str(tmp_path / "ckpt")
+    out1 = _run(["examples/train_lm.py", "--steps", "8", "--ckpt-dir", d,
+                 "--fresh"])
+    assert "done at step 8" in out1
+    out2 = _run(["examples/train_lm.py", "--steps", "12", "--ckpt-dir", d])
+    assert "resumed from checkpoint at step 8" in out2
+    assert "done at step 12" in out2
+
+
+@pytest.mark.slow
+def test_estimate_deployment():
+    out = _run(["examples/estimate_deployment.py", "--arch", "qwen2-1.5b"])
+    assert "mean weight bit sparsity" in out
+    assert "bp_approx" in out

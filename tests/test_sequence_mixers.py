@@ -1,0 +1,173 @@
+"""Equivalence tests: chunked-parallel vs step-recurrent sequence mixers,
+flash vs direct attention, MoE dispatch vs dense loop oracle."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_arch
+from repro.models import attention, moe, rwkv6, mamba2
+
+jax.config.update("jax_default_matmul_precision", "float32")
+
+
+class TestRWKV6:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=8, deadline=None)
+    def test_chunked_equals_sequential(self, seed):
+        key = jax.random.PRNGKey(seed)
+        B, S, H, N = 2, 128, 3, 16
+        ks = jax.random.split(key, 6)
+        r, k, v = (jax.random.normal(ks[i], (B, S, H, N)) for i in range(3))
+        log_w = -jnp.exp(jax.random.normal(ks[3], (B, S, H, N)) - 1.0)
+        u = jax.random.normal(ks[4], (H, N))
+        state = jax.random.normal(ks[5], (B, H, N, N))
+        out_c, st_c = rwkv6.wkv_chunked(r, k, v, log_w, u, state, chunk=32)
+        out_s, st_s = rwkv6.wkv_sequential(r, k, v, log_w, u, state)
+        np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_s),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(st_c), np.asarray(st_s),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_state_streaming_equivalence(self):
+        # processing [0:64] then [64:128] == processing [0:128]
+        key = jax.random.PRNGKey(0)
+        B, S, H, N = 1, 128, 2, 8
+        ks = jax.random.split(key, 5)
+        r, k, v = (jax.random.normal(ks[i], (B, S, H, N)) for i in range(3))
+        log_w = -jnp.exp(jax.random.normal(ks[3], (B, S, H, N)))
+        u = jax.random.normal(ks[4], (H, N))
+        s0 = jnp.zeros((B, H, N, N))
+        out_full, _ = rwkv6.wkv_chunked(r, k, v, log_w, u, s0, chunk=32)
+        o1, s1 = rwkv6.wkv_chunked(r[:, :64], k[:, :64], v[:, :64],
+                                   log_w[:, :64], u, s0, chunk=32)
+        o2, _ = rwkv6.wkv_chunked(r[:, 64:], k[:, 64:], v[:, 64:],
+                                  log_w[:, 64:], u, s1, chunk=32)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                                   np.asarray(out_full), atol=1e-4, rtol=1e-4)
+
+
+class TestMamba2:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=8, deadline=None)
+    def test_ssd_chunked_equals_sequential(self, seed):
+        key = jax.random.PRNGKey(seed)
+        B, S, H, P, N = 2, 128, 3, 8, 16
+        ks = jax.random.split(key, 6)
+        xh = jax.random.normal(ks[0], (B, S, H, P))
+        Bs = jax.random.normal(ks[1], (B, S, N))
+        Cs = jax.random.normal(ks[2], (B, S, N))
+        dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+        A = jnp.exp(jax.random.normal(ks[4], (H,)) * 0.3)
+        state = jax.random.normal(ks[5], (B, H, P, N)) * 0.1
+        y_c, s_c = mamba2.ssd_chunked(xh, Bs, Cs, dt, A, state, chunk=32)
+        y_s, s_s = mamba2.ssd_sequential(xh, Bs, Cs, dt, A, state)
+        np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_s),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_s),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_conv_streaming(self):
+        key = jax.random.PRNGKey(1)
+        w = jax.random.normal(key, (4, 6))
+        b = jnp.zeros((6,))
+        x = jax.random.normal(jax.random.fold_in(key, 1), (2, 20, 6))
+        y_full, _ = mamba2._causal_conv(x, w, b)
+        st = None
+        outs = []
+        for t in range(20):
+            y, st = mamba2._causal_conv(x[:, t:t + 1], w, b, st)
+            outs.append(y)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                                   np.asarray(y_full), atol=1e-5, rtol=1e-5)
+
+
+class TestAttention:
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]))
+    @settings(max_examples=8, deadline=None)
+    def test_flash_equals_direct(self, seed, kv_heads):
+        key = jax.random.PRNGKey(seed)
+        B, S, H, D = 2, 64, 4, 16
+        q = jax.random.normal(key, (B, S, H, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, kv_heads, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, kv_heads, D))
+        out = attention.flash_attention(q, k, v, causal=True, chunk=16)
+        # direct reference
+        G = H // kv_heads
+        qr = q.reshape(B, S, kv_heads, G, D) * D ** -0.5
+        s = jnp.einsum("bskgd,btkd->bskgt", qr, k)
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        want = jnp.einsum("bskgt,btkd->bskgd", p, v).reshape(B, S, H, D)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_decode_matches_flash_last_position(self):
+        key = jax.random.PRNGKey(3)
+        B, T, H, D = 2, 32, 4, 16
+        q = jax.random.normal(key, (B, 1, H, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, 2, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, 2, D))
+        got = attention.decode_attention(q, k, v, jnp.int32(T - 1))
+        want = attention.flash_attention(q, k, v, causal=True,
+                                         q_offset=T - 1, chunk=8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_kv_len_masking(self):
+        key = jax.random.PRNGKey(4)
+        B, S, H, D = 1, 8, 2, 8
+        q = jax.random.normal(key, (B, S, H, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, 16, 2, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, 16, 2, D))
+        # padding beyond kv_len must not affect the result
+        out1 = attention.flash_attention(q, k, v, causal=False, chunk=8,
+                                         kv_len=jnp.int32(10))
+        k2 = k.at[:, 10:].set(99.0)
+        v2 = v.at[:, 10:].set(-99.0)
+        out2 = attention.flash_attention(q, k2, v2, causal=False, chunk=8,
+                                         kv_len=jnp.int32(10))
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   atol=1e-6)
+
+
+class TestMoE:
+    def test_matches_dense_loop_oracle(self):
+        cfg = get_arch("granite-moe-1b-a400m").reduced().replace(
+            capacity_factor=8.0)  # no drops
+        key = jax.random.PRNGKey(0)
+        params = moe.init_moe(key, cfg)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model),
+                              jnp.float32)
+        out, aux = moe.moe_ffn(params, x, cfg, "bf16")
+        # oracle: explicit per-token loop
+        from repro.models import layers as L
+        xt = x.reshape(-1, cfg.d_model)
+        logits = xt @ params["router"]["w"].astype(jnp.float32)
+        probs = jax.nn.softmax(logits, -1)
+        top_p, top_e = jax.lax.top_k(probs, cfg.top_k)
+        top_p = top_p / top_p.sum(-1, keepdims=True)
+        want = np.zeros_like(np.asarray(xt))
+        for t in range(xt.shape[0]):
+            for j in range(cfg.top_k):
+                e = int(top_e[t, j])
+                h_g = np.asarray(xt[t] @ params["experts_gate"][e].astype(jnp.float32))
+                h_u = np.asarray(xt[t] @ params["experts_up"][e].astype(jnp.float32))
+                h = (h_g / (1 + np.exp(-h_g))) * h_u
+                o = h @ np.asarray(params["experts_down"][e], np.float32)
+                want[t] += float(top_p[t, j]) * o
+        np.testing.assert_allclose(np.asarray(out.reshape(-1, cfg.d_model),
+                                              np.float32),
+                                   want, atol=0.08, rtol=0.08)
+        assert float(aux) > 0
+
+    def test_capacity_drops_tokens_gracefully(self):
+        cfg = get_arch("granite-moe-1b-a400m").reduced().replace(
+            capacity_factor=0.25)
+        params = moe.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+        out, _ = moe.moe_ffn(params, x, cfg, "bf16")
+        assert np.isfinite(np.asarray(out, np.float32)).all()

@@ -1,0 +1,255 @@
+"""Substrate tests: data pipeline, optimizer, checkpointing, compression,
+quasi-sync distributed training, fault tolerance, trainer resume."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.configs.base import get_arch
+from repro.data.pipeline import DataConfig, PrefetchingLoader, make_batch
+from repro.distributed import compression
+from repro.distributed.quasi_sync import (BoundedStalenessTrainer,
+                                          ClusterConfig, cluster_utilization)
+from repro.train import optimizer as opt_lib
+from repro.train.train_loop import TrainConfig, Trainer, make_train_step
+
+
+class TestDataPipeline:
+    def test_deterministic_addressing(self):
+        cfg = DataConfig(vocab_size=128, seq_len=32, global_batch=4)
+        a = make_batch(cfg, 7)
+        b = make_batch(cfg, 7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        c = make_batch(cfg, 8)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+    def test_host_sharding_partitions_global_batch(self):
+        kw = dict(vocab_size=128, seq_len=16, global_batch=8, num_hosts=2)
+        h0 = make_batch(DataConfig(**kw, host_id=0), 3)
+        h1 = make_batch(DataConfig(**kw, host_id=1), 3)
+        assert h0["tokens"].shape == (4, 16)
+        assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+    def test_prefetcher_resumes_from_step(self):
+        cfg = DataConfig(vocab_size=64, seq_len=8, global_batch=2)
+        loader = PrefetchingLoader(cfg, start_step=5)
+        got = next(loader)
+        loader.close()
+        np.testing.assert_array_equal(got["tokens"], make_batch(cfg, 5)["tokens"])
+
+    def test_tokens_in_range_and_mask(self):
+        cfg = DataConfig(vocab_size=100, seq_len=64, global_batch=2,
+                         pad_fraction=0.2)
+        b = make_batch(cfg, 0)
+        assert b["tokens"].min() >= 0 and b["tokens"].max() < 100
+        assert 0.05 < (~b["loss_mask"]).mean() < 0.4
+
+
+class TestOptimizer:
+    def test_quadratic_convergence(self):
+        cfg = opt_lib.OptimizerConfig(peak_lr=0.1, warmup_steps=5,
+                                      total_steps=200, weight_decay=0.0)
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        state = opt_lib.init_state(params)
+        loss = lambda p: jnp.sum(p["w"] ** 2)
+        for _ in range(200):
+            g = jax.grad(loss)(params)
+            params, state, m = opt_lib.apply_updates(cfg, params, state, g)
+        assert float(loss(params)) < 1e-3
+
+    def test_schedule_shape(self):
+        cfg = opt_lib.OptimizerConfig(peak_lr=1.0, warmup_steps=10,
+                                      total_steps=100, min_lr_ratio=0.1)
+        lrs = [float(opt_lib.lr_schedule(cfg, jnp.int32(s)))
+               for s in [0, 5, 10, 55, 100]]
+        assert lrs[0] == 0.0 and abs(lrs[1] - 0.5) < 1e-6
+        assert abs(lrs[2] - 1.0) < 1e-6
+        assert lrs[2] > lrs[3] > lrs[4] >= 0.1 - 1e-6
+
+    def test_grad_clipping_bounds_update(self):
+        cfg = opt_lib.OptimizerConfig(peak_lr=1e-3, warmup_steps=0,
+                                      total_steps=10, clip_norm=1.0)
+        params = {"w": jnp.zeros((4,))}
+        state = opt_lib.init_state(params)
+        huge = {"w": jnp.full((4,), 1e9)}
+        _, _, m = opt_lib.apply_updates(cfg, params, state, huge)
+        assert float(m["grad_norm"]) > 1e8  # reported pre-clip
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+        tree = {"a": jnp.arange(6.0).reshape(2, 3),
+                "b": {"c": jnp.asarray([1, 2, 3], jnp.int32)}}
+        for s in (1, 2, 3):
+            mgr.save(s, jax.tree.map(lambda x: x + s, tree))
+        assert mgr.all_steps() == [2, 3]  # gc keeps newest 2
+        got = mgr.restore(3, tree)
+        np.testing.assert_allclose(np.asarray(got["a"]),
+                                   np.asarray(tree["a"]) + 3)
+
+    def test_corruption_detected(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        tree = {"a": jnp.ones((4,))}
+        mgr.save(1, tree)
+        # corrupt the array file
+        d = os.path.join(str(tmp_path), "step_000000001")
+        fname = [f for f in os.listdir(d) if f.endswith(".npy")][0]
+        arr = np.load(os.path.join(d, fname))
+        arr[0] = 999.0
+        np.save(os.path.join(d, fname), arr)
+        with pytest.raises(IOError):
+            mgr.restore(1, tree)
+
+    def test_partial_tmp_dirs_ignored(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        os.makedirs(os.path.join(str(tmp_path), "step_000000009.tmp"))
+        assert mgr.latest_step() is None
+
+
+class TestCompression:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_roundtrip_error_bound(self, seed):
+        g = jax.random.normal(jax.random.PRNGKey(seed), (300,)) * 5
+        q, s, meta = compression.compress(g)
+        back = compression.decompress(q, s, meta)
+        blockmax = np.abs(np.asarray(g)).max()
+        assert float(jnp.abs(back - g).max()) <= blockmax / 127.0 + 1e-6
+
+    def test_error_feedback_contraction(self):
+        # over many steps, sum(sent) ~= sum(true grads): bias vanishes
+        key = jax.random.PRNGKey(0)
+        grads = [{"w": jax.random.normal(jax.random.fold_in(key, i), (64,))}
+                 for i in range(50)]
+        err = compression.init_error_state(grads[0])
+        total_sent = jnp.zeros((64,))
+        total_true = jnp.zeros((64,))
+        for g in grads:
+            sent, err = compression.compress_tree_with_feedback(g, err)
+            total_sent += sent["w"]
+            total_true += g["w"]
+        resid = float(jnp.abs(total_sent - total_true).max())
+        # residual equals the final carried error, bounded by one quant step
+        assert resid <= float(jnp.abs(err["w"]).max()) + 1e-5
+
+    def test_wire_bytes_halved_vs_bf16(self):
+        tree = {"w": jnp.zeros((1024, 1024), jnp.bfloat16)}
+        wire = compression.compressed_bytes(tree)
+        assert wire < 0.55 * 1024 * 1024 * 2   # int8 + per-128 scales
+        tree32 = {"w": jnp.zeros((1024, 1024), jnp.float32)}
+        assert wire < 0.3 * 1024 * 1024 * 4    # 4x vs fp32 grads
+
+
+class TestQuasiSyncCluster:
+    def test_elasticity_improves_fleet_utilization(self):
+        base = ClusterConfig(workers_per_group=4, n_groups=8, E=0, Q=0,
+                             straggler_sigma=0.4, mean_round_ms=20)
+        eq = ClusterConfig(workers_per_group=4, n_groups=8, E=3, Q=2,
+                           straggler_sigma=0.4, mean_round_ms=20)
+        u0 = cluster_utilization(base, n_rounds=60).pe_utilization
+        u1 = cluster_utilization(eq, n_rounds=60).pe_utilization
+        assert u1 > u0 + 0.03
+
+    def test_zero_skip_reduces_time(self):
+        a = ClusterConfig(workers_per_group=2, n_groups=4, E=3, Q=2,
+                          zero_skip_fraction=0.0, mean_round_ms=10)
+        b = ClusterConfig(workers_per_group=2, n_groups=4, E=3, Q=2,
+                          zero_skip_fraction=0.5, mean_round_ms=10)
+        ca = cluster_utilization(a, n_rounds=50).cycles
+        cb = cluster_utilization(b, n_rounds=50).cycles
+        assert cb < ca
+
+    def test_bounded_staleness_converges_like_sync(self):
+        target = jnp.asarray([1.0, -2.0, 3.0])
+        def grad_fn(p, batch):
+            return {"w": 2 * (p["w"] - target)}
+        def update_fn(p, g):
+            return {"w": p["w"] - 0.05 * g["w"]}
+        # sync baseline
+        p_sync = {"w": jnp.zeros(3)}
+        for _ in range(120):
+            p_sync = update_fn(p_sync, grad_fn(p_sync, None))
+        # quasi-sync with staleness up to 3
+        tr = BoundedStalenessTrainer(grad_fn, update_fn, {"w": jnp.zeros(3)},
+                                     E=3, n_groups=4, seed=0)
+        for _ in range(120):
+            tr.step([None] * 4)
+        err_sync = float(jnp.abs(p_sync["w"] - target).max())
+        err_qs = float(jnp.abs(tr.params["w"] - target).max())
+        assert err_qs < max(5 * err_sync, 1e-2)
+
+    def test_version_buffer_depth_bound(self):
+        tr = BoundedStalenessTrainer(lambda p, b: p, lambda p, g: p,
+                                     {"w": jnp.zeros(1)}, E=2, n_groups=2)
+        for _ in range(10):
+            tr.step([None, None])
+        assert len(tr.history) == 3  # E + 1
+
+
+class TestTrainerEndToEnd:
+    def _mini(self, tmp_path, total_steps=6, **kw):
+        arch = get_arch("qwen2-1.5b").reduced().replace(
+            num_layers=2, d_model=64, d_ff=128, vocab_size=256, head_dim=16)
+        tc = TrainConfig(total_steps=total_steps, ckpt_every=3,
+                         ckpt_dir=str(tmp_path), log_every=100,
+                         optimizer=opt_lib.OptimizerConfig(
+                             peak_lr=1e-3, warmup_steps=2, total_steps=total_steps),
+                         **kw)
+        dc = DataConfig(vocab_size=256, seq_len=32, global_batch=4)
+        return arch, tc, dc
+
+    def test_loss_decreases_and_resumes(self, tmp_path):
+        arch, tc, dc = self._mini(tmp_path, total_steps=6)
+        tr = Trainer(arch, tc, dc)
+        end_step, hist = tr.run()
+        assert end_step == 6
+        assert tr.ckpt.latest_step() == 6
+        # resume continues from saved step
+        tr2 = Trainer(arch, tc._replace_total(12) if hasattr(tc, "_replace_total")
+                      else TrainConfig(**{**tc.__dict__, "total_steps": 12}), dc)
+        assert tr2.start_step == 6
+        end2, _ = tr2.run()
+        assert end2 == 12
+
+    def test_spike_rejection_keeps_params(self):
+        arch, tc, dc = self._mini("/tmp/unused_ckpt_dir_spike")
+        step_fn = make_train_step(arch, tc)
+        import jax
+        from repro.models import api as mapi
+        params = mapi.init(jax.random.PRNGKey(0), arch)
+        opt_state = opt_lib.init_state(params)
+        batch = {"tokens": jnp.ones((4, 32), jnp.int32)}
+        # snapshot to host first: the step donates its input buffers
+        l0 = np.asarray(jax.tree.leaves(params)[0], np.float32)
+        # absurdly low median forces rejection
+        p2, o2, _, m = step_fn(params, opt_state, jnp.zeros((1,)), batch,
+                               jnp.float32(1e-9))
+        assert float(m["committed"]) == 0.0
+        l2 = np.asarray(jax.tree.leaves(p2)[0], np.float32)
+        np.testing.assert_array_equal(l0, l2)
+
+    def test_grad_accum_matches_full_batch(self):
+        arch, tc, dc = self._mini("/tmp/unused2", total_steps=1)
+        from repro.models import api as mapi
+        params = mapi.init(jax.random.PRNGKey(0), arch)
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32),
+                                              0, 256)}
+        tc1 = TrainConfig(**{**tc.__dict__, "grad_accum": 1})
+        tc2 = TrainConfig(**{**tc.__dict__, "grad_accum": 2})
+        s1 = make_train_step(arch, tc1)
+        s2 = make_train_step(arch, tc2)
+        o = opt_lib.init_state(params)
+        p1, *_ = s1(params, o, jnp.zeros((1,)), batch, jnp.float32(0))
+        # params/opt were donated — re-init deterministically for the 2nd run
+        params = mapi.init(jax.random.PRNGKey(0), arch)
+        o = opt_lib.init_state(params)
+        p2, *_ = s2(params, o, jnp.zeros((1,)), batch, jnp.float32(0))
+        a = np.asarray(jax.tree.leaves(p1)[0], np.float32)
+        b = np.asarray(jax.tree.leaves(p2)[0], np.float32)
+        np.testing.assert_allclose(a, b, atol=2e-2, rtol=2e-2)
