@@ -1,29 +1,35 @@
-"""End-to-end serving driver: batched requests against a small qwen2-family
-model with BitParticle W8A8 weights and an int8 KV cache.
+"""End-to-end serving driver: a stream of requests with Poisson arrivals
+against a small qwen2-family model with BitParticle W8A8 weights and an int8
+KV cache, served by the quasi-sync continuous-batching engine.
 
-    PYTHONPATH=src python examples/serve_lm.py [--tokens 24] [--batch 4]
+    PYTHONPATH=src python examples/serve_lm.py [--tokens 24] [--requests 8]
+    PYTHONPATH=src python examples/serve_lm.py --mode bf16 --lead-window 0
 """
 
 import argparse
-import time
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import get_arch
-from repro.core import cost_model as cm
-from repro.core import sparsity
 from repro.models import api
 from repro.models.layers import quantize_dense_params
-from repro.serving.engine import ServeConfig, ServingEngine
+from repro.serving import (Request, SchedulerConfig, ServeConfig,
+                           ServingEngine)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--tokens", type=int, default=24,
+                    help="max new tokens per request")
+    ap.add_argument("--rate", type=float, default=0.3,
+                    help="Poisson arrivals per decode step")
+    ap.add_argument("--lead-window", type=int, default=4,
+                    help="admission lead window E (0 = sync every step)")
+    ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--mode", default="bp_exact",
                     choices=["bf16", "bp_exact", "bp_approx"])
     args = ap.parse_args()
@@ -41,35 +47,59 @@ def main():
 
     engine = ServingEngine(cfg, params,
                            ServeConfig(max_new_tokens=args.tokens,
-                                       temperature=0.8))
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 2,
-                                 cfg.vocab_size)
-    # warmup (compile)
-    engine.generate({"tokens": prompts[:, :8]})
-    res = engine.generate({"tokens": prompts})
-    print(f"prefill: {res.prefill_s*1e3:.1f} ms for "
-          f"{args.batch}x{args.prompt_len} tokens")
-    print(f"decode:  {res.steps} steps, "
-          f"{res.decode_tokens_per_s:.1f} tokens/s (batch={args.batch})")
-    print(f"sample continuation (request 0): {res.tokens[0][:12].tolist()}")
+                                       temperature=args.temperature))
+
+    rng = np.random.default_rng(0)
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1),
+                           (args.requests, args.prompt_len), 2,
+                           cfg.vocab_size), np.int32)
+    lo = min(max(1, args.tokens // 4), args.tokens)
+    max_news = rng.integers(lo, args.tokens + 1, size=args.requests)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    requests = [Request(prompt=prompts[i], max_new_tokens=int(max_news[i]),
+                        arrival_time=float(arrivals[i]))
+                for i in range(args.requests)]
+
+    # warmup (compile prefill + vector-cache_len decode)
+    engine.serve([Request(prompt=prompts[0], max_new_tokens=2)],
+                 n_slots=args.slots,
+                 cache_T=args.prompt_len + args.tokens
+                 + engine.serve_cfg.cache_margin)
+
+    report = engine.serve(
+        requests, n_slots=args.slots,
+        cache_T=args.prompt_len + args.tokens + engine.serve_cfg.cache_margin,
+        sched_cfg=SchedulerConfig(lead_window=args.lead_window))
+
+    print(f"\nserved {args.requests} requests on {args.slots} slots "
+          f"(E={args.lead_window}, Poisson rate {args.rate}/step)")
+    print(f"prefill: {report.prefill_s*1e3:.1f} ms across "
+          f"{report.n_syncs} admission syncs")
+    print(f"decode:  {report.steps} batched steps, "
+          f"{report.decode_tokens_per_s:.1f} tokens/s, "
+          f"{report.slot_utilization*100:.0f}% slot utilization, "
+          f"max position divergence {report.max_divergence}")
+    for r in report.results[:4]:
+        print(f"  req {r.request_id}: {len(r.tokens)} tokens "
+              f"(ttft {r.ttft_steps:.0f} steps, "
+              f"latency {r.latency_steps:.0f} steps, {r.finish_reason}) "
+              f"head: {r.tokens[:8].tolist()}")
 
     # ---- BitParticle deployment estimate ----------------------------------
-    if args.mode != "bf16":
-        w_leaves = [l for l in jax.tree.leaves(params)
-                    if hasattr(l, "dtype") and l.dtype == jnp.int8]
-        bs = float(np.mean([float(sparsity.bit_sparsity_sign_magnitude(w))
-                            for w in w_leaves[:8]]))
-        cyc = cm.modeled_avg_cycles(
-            "bp_exact" if args.mode == "bp_exact" else "bp_approx", bs,
-            n=50_000)
-        e = cm.mac_energy_pj(args.mode if args.mode != "bf16" else "bp_exact",
-                             bs)
-        print(f"\nBitParticle deployment estimate (modeled 45nm array):")
-        print(f"  weight bit sparsity (sign-magnitude): {bs:.3f}")
-        print(f"  avg cycles/MAC: {cyc:.2f}   energy/MAC: {e:.2f} pJ")
-        print(f"  vs AdaS unit:  {cm.mac_energy_pj('adas', bs):.2f} pJ;  "
-              f"vs BitWave: {cm.mac_energy_pj('bitwave', bs):.2f} pJ")
+    if report.deployment is not None:
+        d = report.deployment
+        print(f"\nBitParticle deployment estimate (modeled 45nm array, "
+              f"{d['mode']}):")
+        print(f"  mean weight bit sparsity (sign-magnitude): "
+              f"{d['mean_bit_sparsity']:.3f}")
+        print(f"  mean cycles/MAC: {d['mean_cycles_per_mac']:.2f}   "
+              f"mean energy/MAC: {d['mean_mac_energy_pj']:.2f} pJ")
+        for e in d["per_layer"][:6]:
+            name = f"layer {e['layer']}" if e["layer"] >= 0 else "unstacked"
+            print(f"    {name}: bs={e['bit_sparsity']:.3f} "
+                  f"cycles={e['avg_cycles_per_mac']:.2f} "
+                  f"energy={e['mac_energy_pj']:.2f} pJ")
 
 
 if __name__ == "__main__":

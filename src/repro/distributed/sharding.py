@@ -85,7 +85,12 @@ def recipe(name: Optional[str]):
 
 
 def _mesh_axes():
-    mesh = jax.sharding.get_abstract_mesh()
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        mesh = get_abstract()
+    else:  # jax < 0.5: the thread-local physical mesh set by `with Mesh(...)`
+        from jax.interpreters import pxla
+        mesh = pxla.thread_resources.env.physical_mesh
     if mesh is None or mesh.empty:
         return None
     return dict(zip(mesh.axis_names, mesh.shape.values())) if hasattr(mesh.shape, "values") else dict(mesh.shape)

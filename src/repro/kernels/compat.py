@@ -1,0 +1,9 @@
+"""Version shims shared by the Pallas kernels."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 named this TPUCompilerParams; newer releases renamed it
+try:
+    CompilerParams = pltpu.CompilerParams
+except AttributeError:
+    CompilerParams = pltpu.TPUCompilerParams

@@ -115,6 +115,48 @@ def cache_specs(cfg: ArchConfig, B: int, cache_T: int):
     raise ValueError(cfg.family)
 
 
+# ---------------------------------------------------------------------------
+# Slot-granular cache surgery (continuous-batching serving)
+# ---------------------------------------------------------------------------
+
+def cache_batch_axes(cfg: ArchConfig):
+    """Pytree (same structure as ``cache_specs``) giving the slot/batch axis
+    of every decode-cache leaf.  The hybrid family stacks mamba states as
+    (n_super, attn_every, B, ...) so its batch axis differs per leaf."""
+    if cfg.family == "hybrid":
+        return {"conv": 2, "ssm": 2, "k": 1, "v": 1}
+    return jax.tree.map(lambda _: 1, cache_specs(cfg, 1, 8))
+
+
+def zeros_cache(cfg: ArchConfig, n_slots: int, cache_T: int):
+    """Concrete all-zeros decode cache for an ``n_slots``-wide slot pool."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, n_slots, cache_T))
+
+
+def slot_insert(cfg: ArchConfig, pool_cache, src_cache, slot, src_index=0):
+    """Write request ``src_index`` of ``src_cache`` (a prefill cache of batch
+    size >= 1, padded to the pool's cache_T) into slot ``slot`` of the pooled
+    cache.  ``slot``/``src_index`` may be traced (one jit covers all slots)."""
+    axes = cache_batch_axes(cfg)
+
+    def put(pool, src, ax):
+        row = jax.lax.dynamic_index_in_dim(src, src_index, axis=ax,
+                                           keepdims=False)
+        return jax.lax.dynamic_update_index_in_dim(
+            pool, row.astype(pool.dtype), slot, axis=ax)
+
+    return jax.tree.map(put, pool_cache, src_cache, axes)
+
+
+def slot_extract(cfg: ArchConfig, pool_cache, slot):
+    """Pull slot ``slot`` out of the pooled cache as a batch-1 cache."""
+    axes = cache_batch_axes(cfg)
+    return jax.tree.map(
+        lambda pool, ax: jax.lax.dynamic_slice_in_dim(pool, slot, 1, axis=ax),
+        pool_cache, axes)
+
+
 def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
     """Model-input ShapeDtypeStructs for one (arch x workload-shape) cell."""
     B, S = shape.global_batch, shape.seq_len

@@ -96,6 +96,10 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, k_scale=None,
     """q (B,1,H,D) against cache (B,T,KH,D); positions <= cache_len valid
     (the new token's K/V were already written at index ``cache_len``).
 
+    ``cache_len`` may be a scalar (whole batch at one position — static
+    serving) or a (B,) vector of per-slot positions (continuous batching,
+    where each slot decodes at its own depth).
+
     int8 KV cache support (per-token-per-head scales, EXACT factorization):
         score[b,kh,g,t] = (q . k_q[t]) * k_scale[b,t,kh]
         out = sum_t p[t] * v_scale[b,t,kh] * v_q[t]
@@ -108,13 +112,39 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, k_scale=None,
     s = jnp.einsum("bkgd,btkd->bkgt", qr, k_cache.astype(jnp.float32))
     if k_scale is not None:
         s = s * jnp.transpose(k_scale, (0, 2, 1))[:, :, None, :]
-    valid = jnp.arange(T) <= cache_len
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    cache_len = jnp.asarray(cache_len)
+    if cache_len.ndim == 0:
+        valid = (jnp.arange(T) <= cache_len)[None, None, None, :]
+    else:
+        valid = (jnp.arange(T)[None, :] <= cache_len[:, None])[:, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     if v_scale is not None:
         p = p * jnp.transpose(v_scale, (0, 2, 1))[:, :, None, :]
     out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
     return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def decode_positions(cache_len, B):
+    """(B, 1) RoPE positions for a decode step from a scalar (whole batch at
+    one depth) or (B,) per-slot ``cache_len``."""
+    cache_len = jnp.asarray(cache_len)
+    if cache_len.ndim == 0:
+        return jnp.broadcast_to(cache_len[None, None], (B, 1))
+    return cache_len[:, None]
+
+
+def write_kv(cache, new, cache_len):
+    """Write ``new`` (B, 1, ...) into ``cache`` (B, T, ...) at position
+    ``cache_len`` — scalar (one dynamic_update_slice for the whole batch) or
+    (B,) vector (per-slot scatter, continuous batching)."""
+    cache_len = jnp.asarray(cache_len)
+    if cache_len.ndim == 0:
+        idx = (0, cache_len) + (0,) * (cache.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype),
+                                            idx)
+    B = cache.shape[0]
+    return cache.at[jnp.arange(B), cache_len].set(new[:, 0].astype(cache.dtype))
 
 
 def quantize_kv(k, v):

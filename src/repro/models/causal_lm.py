@@ -176,13 +176,15 @@ def prefill(params, cfg, batch, cache_T: int):
 
 def decode_step(params, cfg, batch):
     """One-token decode.  batch: tokens (B,1), cache {k,v}: (L,B,T,KH,Dh),
-    cache_len: scalar int32.  Returns (logits (B,V), new cache)."""
+    cache_len: scalar int32 (whole batch at one depth) or (B,) int32
+    (per-slot depths, continuous batching).  Returns (logits (B,V), cache)."""
     mode = cfg.matmul_mode
-    tokens, cache, cache_len = batch["tokens"], batch["cache"], batch["cache_len"]
+    tokens, cache = batch["tokens"], batch["cache"]
+    cache_len = jnp.asarray(batch["cache_len"])
     B = tokens.shape[0]
     x = layers.embed(params["embed"], tokens)
     x = shard(x, "batch", None, None)
-    pos = jnp.broadcast_to(cache_len[None, None], (B, 1))
+    pos = attention.decode_positions(cache_len, B)
     if cfg.mrope_sections:
         pos = jnp.broadcast_to(pos[None], (3, B, 1))
     cos, sin = _angles(cfg, pos)
@@ -201,12 +203,10 @@ def decode_step(params, cfg, batch):
         k = layers.apply_rope(k, cos, sin)
         if int8kv:
             k, ks_, v, vs_ = attention.quantize_kv(k, v)
-            ksc = jax.lax.dynamic_update_slice(ksc, ks_, (0, cache_len, 0))
-            vsc = jax.lax.dynamic_update_slice(vsc, vs_, (0, cache_len, 0))
-        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
-                                          (0, cache_len, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
-                                          (0, cache_len, 0, 0))
+            ksc = attention.write_kv(ksc, ks_, cache_len)
+            vsc = attention.write_kv(vsc, vs_, cache_len)
+        kc = attention.write_kv(kc, k, cache_len)
+        vc = attention.write_kv(vc, v, cache_len)
         kc = shard(kc, "batch", "cache_seq", "heads", None)
         vc = shard(vc, "batch", "cache_seq", "heads", None)
         out = attention.decode_attention(

@@ -168,11 +168,12 @@ def prefill(params, cfg, batch, cache_T: int):
 def decode_step(params, cfg, batch):
     from repro.models.causal_lm import logits_from_hidden
     mode = cfg.matmul_mode
-    tokens, cache, cache_len = batch["tokens"], batch["cache"], batch["cache_len"]
+    tokens, cache = batch["tokens"], batch["cache"]
+    cache_len = jnp.asarray(batch["cache_len"])
     B = tokens.shape[0]
     hd = cfg.resolved_head_dim
     x = layers.embed(params["embed"], tokens)
-    pos = jnp.broadcast_to(cache_len[None, None], (B, 1))
+    pos = attention.decode_positions(cache_len, B)
     cos, sin = layers.rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
 
     def body(x, lin):
@@ -181,10 +182,8 @@ def decode_step(params, cfg, batch):
         q, k, v = attention.qkv_proj(lp["attn"], h, cfg, mode)
         q = layers.apply_rope(q, cos, sin)
         k = layers.apply_rope(k, cos, sin)
-        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
-                                          (0, cache_len, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
-                                          (0, cache_len, 0, 0))
+        kc = attention.write_kv(kc, k, cache_len)
+        vc = attention.write_kv(vc, v, cache_len)
         kc = shard(kc, "batch", "cache_seq", "heads", None)
         vc = shard(vc, "batch", "cache_seq", "heads", None)
         out = attention.decode_attention(q, kc, vc, cache_len)

@@ -1,0 +1,27 @@
+"""Quasi-synchronous serving subsystem (continuous batching).
+
+Request-level mirror of the paper's quasi-sync MAC array: slots ~
+synchronization groups, the admission queue ~ operand queues, and the
+scheduler's lead window ~ the inter-group elasticity parameter E.
+See docs/serving.md for the full correspondence.
+"""
+
+from repro.serving.cache_manager import CacheManager
+from repro.serving.engine import (GenerationResult, RequestResult,
+                                  ServeConfig, ServeReport, ServingEngine)
+from repro.serving.queue import Request, RequestQueue, RequestState
+from repro.serving.scheduler import QuasiSyncScheduler, SchedulerConfig
+
+__all__ = [
+    "CacheManager",
+    "GenerationResult",
+    "QuasiSyncScheduler",
+    "Request",
+    "RequestQueue",
+    "RequestResult",
+    "RequestState",
+    "ServeConfig",
+    "ServeReport",
+    "ServingEngine",
+    "SchedulerConfig",
+]

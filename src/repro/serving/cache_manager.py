@@ -1,0 +1,104 @@
+"""Slot-based cache manager: fixed-capacity per-slot KV / recurrent state.
+
+Owns ONE pooled decode cache of ``n_slots`` slots (the batch axis of every
+cache leaf, located via ``api.cache_batch_axes``) plus the per-slot sequence
+positions.  Works for every family on the ``models/api.py`` surface —
+attention KV caches (dense/moe/vlm/audio) and O(1) recurrent state
+(RWKV/Zamba) alike, because slot surgery is expressed as pytree ops over the
+family's own cache structure.
+
+A slot is the serving analogue of one PE-column (synchronization group) in
+the quasi-sync array: it owns private state and advances at its own sequence
+position while the pool steps as one batched unit.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+
+
+class CacheManager:
+    def __init__(self, cfg, n_slots: int, cache_T: int):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.cache_T = cache_T
+        self.cache = api.zeros_cache(cfg, n_slots, cache_T)
+        self.lengths = np.zeros(n_slots, np.int32)   # per-slot seq position
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self._occupied = np.zeros(n_slots, bool)
+        # One compiled insert covers every (slot, src_index) pair; recompiles
+        # only per distinct prefill batch shape.
+        self._insert = jax.jit(
+            lambda pool, src, slot, i: api.slot_insert(cfg, pool, src, slot, i))
+
+    # -- slot accounting ----------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def fits(self, prompt_len: int, max_new_tokens: int) -> bool:
+        """Does prompt + generation fit in one slot's capacity?"""
+        return prompt_len + max_new_tokens <= self.cache_T
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("no free slot")
+        slot = self._free.pop()
+        self._occupied[slot] = True
+        return slot
+
+    def free(self, slot: int):
+        if not self._occupied[slot]:
+            raise ValueError(f"slot {slot} is not occupied")
+        self._occupied[slot] = False
+        self.lengths[slot] = 0
+        self._free.append(slot)
+
+    # -- cache surgery ------------------------------------------------------
+
+    def insert(self, slot: int, src_cache, length: int, src_index: int = 0):
+        """Install request ``src_index`` of a prefill cache (padded to this
+        pool's cache_T) into ``slot`` and set its sequence position."""
+        if not self._occupied[slot]:
+            raise ValueError(f"slot {slot} must be alloc()ed before insert")
+        self.cache = self._insert(self.cache, src_cache,
+                                  jnp.int32(slot), jnp.int32(src_index))
+        self.lengths[slot] = length
+
+    def update(self, new_cache):
+        """Adopt the cache returned by a batched decode step."""
+        self.cache = new_cache
+
+    def advance(self, slots):
+        """Bump the sequence position of the given slots by one token."""
+        for s in slots:
+            self.lengths[s] += 1
+
+    def cache_len_vector(self) -> jnp.ndarray:
+        """(n_slots,) per-slot positions for ``decode_step``.  Free slots sit
+        at 0: their writes land in a region fully overwritten by the next
+        ``insert`` (prefill caches are padded to cache_T), so they never
+        leak into an admitted request."""
+        return jnp.asarray(self.lengths)
+
+    # -- introspection ------------------------------------------------------
+
+    def divergence(self) -> int:
+        """Spread of active-slot positions (the quasi-sync E analogue)."""
+        active = self.lengths[self._occupied]
+        if active.size == 0:
+            return 0
+        return int(active.max() - active.min())

@@ -1,23 +1,36 @@
-"""Batched serving engine: prefill + decode loop with per-request state.
+"""Serving engine: static batched generation + quasi-sync continuous batching.
 
-Serves batched requests against any of the 10 architectures (KV caches for
-attention families, recurrent state for RWKV/Zamba).  Supports greedy and
-temperature sampling, per-sequence EOS early-exit masks, and reports
-BitParticle deployment estimates (per-layer bit sparsity -> modeled
-cycles/energy) when a quantized matmul mode is active.
+Two paths over the same ``models/api.py`` init/prefill/decode surface:
+
+  * ``generate(batch)`` — the original static path: one prefill, then the
+    whole batch decodes in lock-step until every sequence finishes.
+  * ``serve(requests)`` — continuous batching: a slot pool (``CacheManager``)
+    decodes with per-slot sequence positions, finished sequences are evicted
+    mid-flight, and waiting requests are admitted into freed slots under the
+    ``QuasiSyncScheduler``'s bounded lead window (the paper's inter-group
+    elasticity E, one level up).  Greedy outputs are token-identical to the
+    static path; throughput on heterogeneous-length workloads is not.
+
+Supports all 10 architectures (KV caches for attention families, recurrent
+state for RWKV/Zamba), greedy and temperature sampling, per-sequence EOS
+early exit, and BitParticle deployment estimates (per-layer bit sparsity ->
+modeled cycles/energy) when a quantized matmul mode is active.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.models import api
+from repro.serving.cache_manager import CacheManager
+from repro.serving.queue import Request, RequestQueue, RequestState
+from repro.serving.scheduler import QuasiSyncScheduler, SchedulerConfig
 
 
 @dataclasses.dataclass
@@ -41,29 +54,81 @@ class GenerationResult:
         return n / max(self.decode_s, 1e-9)
 
 
+@dataclasses.dataclass
+class RequestResult:
+    request_id: int
+    tokens: np.ndarray                # generated tokens (incl. EOS if hit)
+    prompt_len: int
+    arrival_time: float
+    ttft_steps: Optional[float]       # decode-step clock
+    latency_steps: Optional[float]
+    finish_reason: str
+
+
+@dataclasses.dataclass
+class ServeReport:
+    results: List[RequestResult]
+    prefill_s: float
+    decode_s: float
+    steps: int                        # batched decode steps executed
+    n_syncs: int                      # admission (prefill) syncs
+    n_rejected: int
+    total_new_tokens: int
+    slot_utilization: float           # mean occupied-slot fraction per step
+    max_divergence: int               # max spread of per-slot positions
+    deployment: Optional[dict] = None # BitParticle per-layer cycle/energy
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        if self.steps == 0:        # everything finished at prefill
+            return 0.0
+        return self.total_new_tokens / max(self.decode_s, 1e-9)
+
+    def tokens_by_request(self) -> Dict[int, np.ndarray]:
+        return {r.request_id: r.tokens for r in self.results}
+
+
 class ServingEngine:
-    def __init__(self, arch_cfg, params, serve_cfg: ServeConfig = ServeConfig()):
+    def __init__(self, arch_cfg, params, serve_cfg: Optional[ServeConfig] = None):
         self.cfg = arch_cfg
         self.params = params
-        self.serve = serve_cfg
+        self.serve_cfg = ServeConfig() if serve_cfg is None else serve_cfg
         self._prefill = jax.jit(
             lambda p, b, t: api.prefill(p, self.cfg, b, t),
             static_argnums=(2,))
         self._decode = jax.jit(lambda p, b: api.decode_step(p, self.cfg, b))
+        # batched per-request sampling for the continuous path: always called
+        # at the full (n_slots, ...) shape so each compiles exactly once
+        self._fold_vec = jax.jit(jax.vmap(jax.random.fold_in))
+        self._sample_vec = jax.jit(
+            lambda keys, logits: jax.vmap(jax.random.categorical)(keys, logits))
+        self._deployment_cache: Dict[int, Optional[dict]] = {}
 
     def _sample(self, logits, key):
-        if self.serve.temperature <= 0:
+        if self.serve_cfg.temperature <= 0:
             return jnp.argmax(logits, axis=-1)
-        return jax.random.categorical(key, logits / self.serve.temperature,
+        return jax.random.categorical(key, logits / self.serve_cfg.temperature,
                                       axis=-1)
 
-    def generate(self, batch: dict, key=None) -> GenerationResult:
-        """batch: {"tokens": (B, S_prompt) [, "src_embeds", vision...]}."""
+    # ------------------------------------------------------------------
+    # Static path (original behavior)
+    # ------------------------------------------------------------------
+
+    def generate(self, batch: dict, key=None, *,
+                 max_new_tokens: Optional[int] = None,
+                 cache_T: Optional[int] = None) -> GenerationResult:
+        """batch: {"tokens": (B, S_prompt) [, "src_embeds", vision...]}.
+
+        ``max_new_tokens``/``cache_T`` override the config per call; pinning
+        ``cache_T`` across calls keeps one compiled decode shape (outputs are
+        unaffected — the padded cache region is masked)."""
         key = jax.random.PRNGKey(0) if key is None else key
         prompt = batch["tokens"]
         B, S = prompt.shape
-        max_new = self.serve.max_new_tokens
-        cache_T = S + max_new + self.serve.cache_margin
+        max_new = (self.serve_cfg.max_new_tokens if max_new_tokens is None
+                   else max_new_tokens)
+        if cache_T is None:
+            cache_T = S + max_new + self.serve_cfg.cache_margin
 
         t0 = time.perf_counter()
         logits, cache = self._prefill(self.params, batch, cache_T)
@@ -75,8 +140,8 @@ class ServingEngine:
         tok = self._sample(logits, key)
         for i in range(max_new):
             out.append(tok)
-            if self.serve.eos_id is not None:
-                done = done | (tok == self.serve.eos_id)
+            if self.serve_cfg.eos_id is not None:
+                done = done | (tok == self.serve_cfg.eos_id)
                 if bool(done.all()):
                     break
             step = {"tokens": tok[:, None], "cache": cache,
@@ -84,10 +149,240 @@ class ServingEngine:
             logits, cache = self._decode(self.params, step)
             key = jax.random.fold_in(key, i)
             tok = self._sample(logits, key)
-            if self.serve.eos_id is not None:
-                tok = jnp.where(done, self.serve.eos_id, tok)
+            if self.serve_cfg.eos_id is not None:
+                tok = jnp.where(done, self.serve_cfg.eos_id, tok)
         jax.block_until_ready(out[-1])
         t2 = time.perf_counter()
         return GenerationResult(tokens=np.stack([np.asarray(t) for t in out], 1),
                                 prefill_s=t1 - t0, decode_s=t2 - t1,
                                 steps=len(out))
+
+    # ------------------------------------------------------------------
+    # Continuous batching (quasi-sync path)
+    # ------------------------------------------------------------------
+
+    def _request_key(self, req: Request, n: int):
+        base = jax.random.fold_in(jax.random.PRNGKey(0), req.request_id)
+        return jax.random.fold_in(base, n)
+
+    def _finished(self, req: Request, token: int) -> Optional[str]:
+        eos = self.serve_cfg.eos_id
+        if eos is not None and token == eos:
+            return "eos"
+        if len(req.tokens) >= req.max_new_tokens:
+            return "length"
+        return None
+
+    def serve(self, requests: Sequence[Request], *, n_slots: int = 8,
+              cache_T: Optional[int] = None,
+              sched_cfg: Optional[SchedulerConfig] = None,
+              extras: Optional[Dict[int, dict]] = None) -> ServeReport:
+        """Continuously-batched generation over a request stream.
+
+        ``requests``: ``serving.queue.Request`` objects; ``arrival_time`` is
+        interpreted on the decode-step clock (request i becomes visible once
+        ``step >= arrival_time``), which makes runs deterministic and
+        replayable.  ``extras`` optionally maps request_id -> extra prefill
+        inputs (e.g. ``src_embeds`` for the audio family); per-request
+        arrays are stacked on a new leading batch axis, so model inputs
+        whose batch axis is not leading (the vlm family's M-RoPE
+        ``positions``, shaped (3, B, S)) cannot ride through ``extras``.
+        """
+        requests = sorted(requests, key=lambda r: (r.arrival_time, r.request_id))
+        if cache_T is None:
+            need = [r.prompt_len + r.max_new_tokens for r in requests] or [1]
+            cache_T = max(need) + self.serve_cfg.cache_margin
+        cm = CacheManager(self.cfg, n_slots, cache_T)
+        rq = RequestQueue(max_waiting=(sched_cfg or SchedulerConfig()).max_waiting)
+        sched = QuasiSyncScheduler(rq, cm, sched_cfg)
+
+        arrivals = list(requests)
+        active: Dict[int, Request] = {}           # slot -> request
+        last_tok = np.zeros(n_slots, np.int32)    # per-slot last sampled token
+        slot_keys = np.zeros((n_slots, 2), np.uint32)  # per-slot PRNG base
+        now = 0.0
+        prefill_s = 0.0
+        t_decode = 0.0
+
+        def submit_arrivals():
+            while arrivals and arrivals[0].arrival_time <= now:
+                req = arrivals.pop(0)
+                if not cm.fits(req.prompt_len, req.max_new_tokens):
+                    rq.reject(req, now)
+                    continue
+                rq.submit(req, now)
+
+        def admit(group: List[Request]):
+            nonlocal prefill_s
+            for req in group:
+                req.transition(RequestState.PREFILL)
+                req.admitted_at = now
+            batch = {"tokens": np.stack([r.prompt for r in group])}
+            if extras:
+                keys = sorted({k for r in group
+                               for k in (extras.get(r.request_id) or {})})
+                if "positions" in keys:
+                    raise NotImplementedError(
+                        "M-RoPE 'positions' is (3, B, S) — extras are "
+                        "stacked on a leading batch axis and cannot "
+                        "express it")
+                for k in keys:
+                    missing = [r.request_id for r in group
+                               if k not in (extras.get(r.request_id) or {})]
+                    if missing:
+                        raise ValueError(
+                            f"prefill group mixes requests with and without "
+                            f"extra input {k!r} (missing for {missing})")
+                    batch[k] = np.stack(
+                        [np.asarray(extras[r.request_id][k]) for r in group])
+            t0 = time.perf_counter()
+            logits, cache = self._prefill(self.params, batch, cache_T)
+            logits.block_until_ready()
+            prefill_s += time.perf_counter() - t0
+            for j, req in enumerate(group):
+                tok = int(np.asarray(
+                    self._sample(logits[j:j + 1], self._request_key(req, 0)))[0])
+                req.tokens.append(tok)
+                req.first_token_at = now
+                reason = self._finished(req, tok)
+                if reason is not None:
+                    req.finish(now, reason)
+                    continue
+                slot = cm.alloc()
+                cm.insert(slot, cache, req.prompt_len, src_index=j)
+                req.slot = slot
+                req.transition(RequestState.DECODE)
+                active[slot] = req
+                last_tok[slot] = tok
+                if self.serve_cfg.temperature > 0:
+                    slot_keys[slot] = np.asarray(jax.random.fold_in(
+                        jax.random.PRNGKey(0), req.request_id))
+
+        submit_arrivals()
+        while arrivals or len(rq) or active:
+            for group in sched.plan_admissions():
+                admit(group)
+            if not active:
+                if not arrivals and not len(rq):
+                    break
+                if not len(rq) and arrivals:
+                    # idle: jump the virtual clock to the next arrival
+                    now = max(now, arrivals[0].arrival_time)
+                    submit_arrivals()
+                continue
+
+            step = {"tokens": jnp.asarray(last_tok[:, None]),
+                    "cache": cm.cache,
+                    "cache_len": cm.cache_len_vector()}
+            t0 = time.perf_counter()
+            logits, new_cache = self._decode(self.params, step)
+            logits.block_until_ready()
+            t_decode += time.perf_counter() - t0
+            cm.update(new_cache)
+            cm.advance(list(active.keys()))
+            sched.observe_decode_step()
+            now += 1.0
+
+            slots = list(active.keys())
+            if self.serve_cfg.temperature <= 0:
+                toks_np = np.asarray(jnp.argmax(logits, axis=-1))
+            else:
+                # fixed (n_slots, ...) shapes: one fold + one sample dispatch
+                # per step, free-slot rows sampled and discarded
+                counts = np.zeros(n_slots, np.uint32)
+                for s in slots:
+                    counts[s] = len(active[s].tokens)
+                keys = self._fold_vec(jnp.asarray(slot_keys),
+                                      jnp.asarray(counts))
+                toks_np = np.asarray(self._sample_vec(
+                    keys, logits / self.serve_cfg.temperature))
+            for slot in slots:
+                req = active[slot]
+                tok = int(toks_np[slot])
+                req.tokens.append(tok)
+                last_tok[slot] = tok
+                reason = self._finished(req, tok)
+                if reason is not None:
+                    del active[slot]
+                    cm.free(slot)
+                    req.finish(now, reason)
+            submit_arrivals()
+
+        results = [
+            RequestResult(
+                request_id=r.request_id,
+                tokens=np.asarray(r.tokens, np.int64),
+                prompt_len=r.prompt_len,
+                arrival_time=r.arrival_time,
+                ttft_steps=r.ttft,
+                latency_steps=r.latency,
+                finish_reason=r.finish_reason or "unknown",
+            )
+            for r in sorted(requests, key=lambda r: r.request_id)
+        ]
+        total_new = sum(len(r.tokens) for r in results
+                        if r.finish_reason != "rejected")
+        return ServeReport(
+            results=results,
+            prefill_s=prefill_s,
+            decode_s=t_decode,
+            steps=sched.n_decode_steps,
+            n_syncs=sched.n_syncs,
+            n_rejected=rq.n_rejected,
+            total_new_tokens=total_new,
+            slot_utilization=sched.slot_utilization,
+            max_divergence=sched.max_divergence,
+            deployment=self.deployment_estimate(),
+        )
+
+    # ------------------------------------------------------------------
+    # BitParticle deployment estimate
+    # ------------------------------------------------------------------
+
+    def deployment_estimate(self, n_mc: int = 20_000) -> Optional[dict]:
+        """Per-layer modeled cycles/energy of the quantized weights on the
+        BitParticle array (None unless a bp_* matmul mode is active).
+        Cached: it depends only on the immutable params."""
+        mode = self.cfg.matmul_mode
+        if mode not in ("bp_exact", "bp_approx"):
+            return None
+        if n_mc in self._deployment_cache:
+            return self._deployment_cache[n_mc]
+        from repro.core import cost_model as cost
+        from repro.core.sparsity import bit_sparsity_sign_magnitude
+
+        L = self.cfg.num_layers
+        per_layer_bs: Dict[int, List[float]] = {}
+        for leaf in jax.tree.leaves(self.params):
+            if not (hasattr(leaf, "dtype") and leaf.dtype == jnp.int8):
+                continue
+            if leaf.ndim >= 2 and leaf.shape[0] == L:
+                for l in range(L):
+                    per_layer_bs.setdefault(l, []).append(
+                        float(bit_sparsity_sign_magnitude(leaf[l])))
+            else:
+                per_layer_bs.setdefault(-1, []).append(
+                    float(bit_sparsity_sign_magnitude(leaf)))
+        if not per_layer_bs:
+            return None
+        layers = []
+        for l in sorted(per_layer_bs):
+            bs = float(np.mean(per_layer_bs[l]))
+            layers.append({
+                "layer": l,          # -1 = non-stacked weights (e.g. lm_head)
+                "bit_sparsity": bs,
+                "avg_cycles_per_mac": cost.modeled_avg_cycles(mode, bs, n=n_mc),
+                "mac_energy_pj": cost.mac_energy_pj(mode, bs),
+            })
+        mean_bs = float(np.mean([e["bit_sparsity"] for e in layers]))
+        est = {
+            "mode": mode,
+            "per_layer": layers,
+            "mean_bit_sparsity": mean_bs,
+            "mean_cycles_per_mac": float(
+                np.mean([e["avg_cycles_per_mac"] for e in layers])),
+            "mean_mac_energy_pj": float(
+                np.mean([e["mac_energy_pj"] for e in layers])),
+        }
+        self._deployment_cache[n_mc] = est
+        return est

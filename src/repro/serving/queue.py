@@ -1,0 +1,140 @@
+"""Request lifecycle + bounded admission queue for the serving subsystem.
+
+Each request walks a strict state machine
+
+    WAITING -> PREFILL -> DECODE -> DONE
+
+(PREFILL may jump straight to DONE when the first sampled token already
+terminates the request).  The ``RequestQueue`` is the serving analogue of the
+quasi-sync array's per-PE operand queue: a bounded FIFO that decouples
+arrivals from the lock-step decode batch.  Submissions beyond ``max_waiting``
+are rejected (admission control) rather than growing latency unboundedly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import List, Optional
+
+import numpy as np
+
+_REQUEST_IDS = itertools.count()
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+_ALLOWED = {
+    RequestState.WAITING: {RequestState.PREFILL, RequestState.DONE},
+    RequestState.PREFILL: {RequestState.DECODE, RequestState.DONE},
+    RequestState.DECODE: {RequestState.DONE},
+    RequestState.DONE: set(),
+}
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its lifecycle bookkeeping.
+
+    Times are in scheduler-clock units (decode steps) so that runs are
+    deterministic and replayable; wall-clock throughput is measured by the
+    engine separately.
+    """
+
+    prompt: np.ndarray                       # (S,) int32 prompt tokens
+    max_new_tokens: int = 32
+    arrival_time: float = 0.0
+    request_id: int = dataclasses.field(
+        default_factory=lambda: next(_REQUEST_IDS))
+    state: RequestState = RequestState.WAITING
+    slot: Optional[int] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    admitted_at: Optional[float] = None      # prefill (admission sync) time
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    finish_reason: Optional[str] = None      # "eos" | "length" | "rejected"
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.arrival_time
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.arrival_time
+
+    def transition(self, new_state: RequestState):
+        if new_state not in _ALLOWED[self.state]:
+            raise ValueError(
+                f"request {self.request_id}: illegal transition "
+                f"{self.state.value} -> {new_state.value}")
+        self.state = new_state
+
+    def finish(self, now: float, reason: str):
+        self.transition(RequestState.DONE)
+        self.finished_at = now
+        self.finish_reason = reason
+        self.slot = None
+
+
+class RequestQueue:
+    """Bounded FIFO of WAITING requests (admission control at submit)."""
+
+    def __init__(self, max_waiting: Optional[int] = None):
+        if max_waiting is not None and max_waiting < 1:
+            raise ValueError("max_waiting must be >= 1 (or None)")
+        self.max_waiting = max_waiting
+        self._waiting: List[Request] = []
+        self.n_rejected = 0
+
+    def __len__(self) -> int:
+        return len(self._waiting)
+
+    @property
+    def waiting(self) -> List[Request]:
+        return list(self._waiting)
+
+    def reject(self, request: Request, now: float):
+        """Mark a request rejected (admission control) and count it."""
+        self.n_rejected += 1
+        request.finish(now, "rejected")
+
+    def submit(self, request: Request, now: float = 0.0) -> bool:
+        """Enqueue; returns False (and marks the request rejected) when the
+        queue is at capacity."""
+        if request.state is not RequestState.WAITING:
+            raise ValueError(f"cannot submit request in state {request.state}")
+        if self.max_waiting is not None and len(self._waiting) >= self.max_waiting:
+            self.reject(request, now)
+            return False
+        self._waiting.append(request)
+        return True
+
+    def pop(self, k: int) -> List[Request]:
+        """Dequeue up to ``k`` requests in FIFO order."""
+        popped, self._waiting = self._waiting[:k], self._waiting[k:]
+        return popped
+
+    def oldest_wait(self, now: float) -> float:
+        """Queueing delay of the head request (0 when empty)."""
+        if not self._waiting:
+            return 0.0
+        return now - self._waiting[0].arrival_time

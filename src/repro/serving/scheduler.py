@@ -1,0 +1,101 @@
+"""Quasi-synchronous continuous-batching scheduler.
+
+The paper's MAC array lets synchronization groups drift up to E steps apart
+(inter-group elasticity) so heterogeneous-latency work units stop wasting
+lock-step capacity.  Serving has the same problem one level up: a static
+batch decodes until its *slowest* request finishes while finished slots burn
+compute and arrivals wait for a full drain.
+
+This scheduler is the request-level mirror of the array schedule:
+
+  * slots ~ synchronization groups — each advances at its own sequence
+    position (per-slot ``cache_len``), evicted the moment it finishes;
+  * the admission queue ~ per-PE operand queues (depth = ``max_waiting``);
+  * ``lead_window`` ~ the paper's E: an admissible request (arrived + free
+    slot) may be deferred at most E decode steps so that several admissions
+    share one prefill sync, exactly as the array's weight buffer holds E+1
+    weight versions to amortize group re-sync.  E = 0 degenerates to
+    admit-immediately (sync every step); E -> inf with ``n_slots`` arrivals
+    degenerates to static batching.
+
+The scheduler is pure policy: it never touches device state.  The engine
+asks it each iteration what to admit; prefills, eviction, and decode are the
+engine's job.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.serving.cache_manager import CacheManager
+from repro.serving.queue import Request, RequestQueue
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    lead_window: int = 4          # E: max decode steps an admission may wait
+    max_waiting: int = 256        # admission-queue depth (Q analogue)
+    max_prefill_batch: int = 8    # admissions fused into one prefill call
+
+
+class QuasiSyncScheduler:
+    def __init__(self, queue: RequestQueue, cache_mgr: CacheManager,
+                 cfg: SchedulerConfig = None):
+        self.queue = queue
+        self.cache_mgr = cache_mgr
+        self.cfg = cfg if cfg is not None else SchedulerConfig()
+        self.pending_wait = 0     # decode steps the current admissible set waited
+        self.n_syncs = 0
+        self.n_decode_steps = 0
+        self.occupancy_sum = 0.0
+        self.max_divergence = 0
+
+    # -- policy -------------------------------------------------------------
+
+    def plan_admissions(self) -> List[List[Request]]:
+        """Decide which WAITING requests to admit *now*.
+
+        Returns prefill groups (same prompt length, fused into one prefill
+        call), or [] to keep decoding and let admissible requests wait —
+        bounded by the lead window E.
+        """
+        admissible = min(len(self.queue), self.cache_mgr.n_free)
+        if admissible == 0:
+            self.pending_wait = 0
+            return []
+        batch_empty = self.cache_mgr.n_active == 0
+        fills_all_slots = admissible >= self.cache_mgr.n_free
+        if not (batch_empty or fills_all_slots
+                or self.pending_wait >= self.cfg.lead_window):
+            # elastic deferral: keep the batch running, admissions ride the
+            # next sync (<= E steps away)
+            self.pending_wait += 1
+            return []
+        self.pending_wait = 0
+        self.n_syncs += 1
+        admits = self.queue.pop(admissible)
+        groups: Dict[int, List[Request]] = {}
+        for req in admits:
+            groups.setdefault(req.prompt_len, []).append(req)
+        out = []
+        for _, reqs in sorted(groups.items()):
+            for i in range(0, len(reqs), self.cfg.max_prefill_batch):
+                out.append(reqs[i:i + self.cfg.max_prefill_batch])
+        return out
+
+    # -- metrics ------------------------------------------------------------
+
+    def observe_decode_step(self):
+        self.n_decode_steps += 1
+        self.occupancy_sum += self.cache_mgr.n_active / self.cache_mgr.n_slots
+        self.max_divergence = max(self.max_divergence,
+                                  self.cache_mgr.divergence())
+
+    @property
+    def slot_utilization(self) -> float:
+        """Mean fraction of occupied slots per decode step — the serving
+        analogue of the array simulator's PE utilization."""
+        if self.n_decode_steps == 0:
+            return 0.0
+        return self.occupancy_sum / self.n_decode_steps

@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.array_sim import ArrayConfig, SimResult, build_op_costs, run_experiment, simulate

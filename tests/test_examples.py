@@ -27,8 +27,10 @@ def test_quickstart():
 
 @pytest.mark.slow
 def test_serve_lm():
-    out = _run(["examples/serve_lm.py", "--tokens", "6", "--batch", "2"])
+    out = _run(["examples/serve_lm.py", "--tokens", "6", "--requests", "2",
+                "--prompt-len", "8", "--slots", "2"])
     assert "tokens/s" in out and "deployment estimate" in out
+    assert "slot utilization" in out
 
 
 @pytest.mark.slow

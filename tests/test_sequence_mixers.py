@@ -5,6 +5,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import get_arch

@@ -1,0 +1,302 @@
+"""Continuous-batching serving subsystem: token-exactness vs the static
+engine under greedy decoding, eviction/admission edge cases, recurrent-state
+architectures, and the scheduler/queue/cache-manager state machines."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch
+from repro.models import api
+from repro.serving import (CacheManager, Request, RequestQueue, RequestState,
+                           SchedulerConfig, ServeConfig, ServingEngine)
+
+jax.config.update("jax_default_matmul_precision", "float32")
+
+
+def _dense_cfg():
+    return get_arch("qwen2-1.5b").reduced().replace(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=128, head_dim=16)
+
+
+def _engine(cfg, max_new=8, eos=None, seed=0):
+    params = api.init(jax.random.PRNGKey(seed), cfg)
+    return ServingEngine(cfg, params,
+                         ServeConfig(max_new_tokens=max_new, temperature=0.0,
+                                     eos_id=eos))
+
+
+def _prompts(cfg, B, S, seed=1):
+    return np.asarray(
+        jax.random.randint(jax.random.PRNGKey(seed), (B, S), 2,
+                           cfg.vocab_size), np.int32)
+
+
+def _assert_matches_static(engine, prompts, max_news, report):
+    static = engine.generate({"tokens": jnp.asarray(prompts)},
+                             max_new_tokens=int(max(max_news)))
+    results = sorted(report.results, key=lambda r: r.request_id)
+    for i, r in enumerate(results):
+        want = np.asarray(static.tokens[i][:max_news[i]])
+        assert len(r.tokens) == len(want), (i, r.tokens, want)
+        np.testing.assert_array_equal(r.tokens, want, err_msg=f"request {i}")
+
+
+# ---------------------------------------------------------------------------
+# Token exactness
+# ---------------------------------------------------------------------------
+
+class TestTokenExactness:
+    def test_simultaneous_arrivals_match_static(self):
+        cfg = _dense_cfg()
+        engine = _engine(cfg)
+        prompts = _prompts(cfg, 4, 6)
+        reqs = [Request(prompt=prompts[i], max_new_tokens=8) for i in range(4)]
+        report = engine.serve(reqs, n_slots=4)
+        _assert_matches_static(engine, prompts, [8] * 4, report)
+
+    def test_staggered_arrivals_and_hetero_lengths_match_static(self):
+        cfg = _dense_cfg()
+        engine = _engine(cfg)
+        prompts = _prompts(cfg, 5, 6)
+        max_news = [8, 3, 8, 5, 1]
+        reqs = [Request(prompt=prompts[i], max_new_tokens=max_news[i],
+                        arrival_time=float(i)) for i in range(5)]
+        report = engine.serve(reqs, n_slots=2,
+                              sched_cfg=SchedulerConfig(lead_window=2))
+        _assert_matches_static(engine, prompts, max_news, report)
+
+    def test_arrival_order_does_not_change_outputs(self):
+        cfg = _dense_cfg()
+        engine = _engine(cfg)
+        prompts = _prompts(cfg, 4, 5)
+        base = None
+        for order_seed in (0, 1):
+            rng = np.random.default_rng(order_seed)
+            arrivals = rng.permutation(4).astype(float)
+            reqs = [Request(prompt=prompts[i], max_new_tokens=6,
+                            arrival_time=float(arrivals[i]))
+                    for i in range(4)]
+            report = engine.serve(reqs, n_slots=2)
+            toks = [r.tokens for r in
+                    sorted(report.results, key=lambda r: r.request_id)]
+            if base is None:
+                base = toks
+            else:
+                for a, b in zip(base, toks):
+                    np.testing.assert_array_equal(a, b)
+
+    def test_lead_window_does_not_change_outputs(self):
+        cfg = _dense_cfg()
+        engine = _engine(cfg)
+        prompts = _prompts(cfg, 4, 6)
+        reqs_of = lambda: [Request(prompt=prompts[i], max_new_tokens=6,
+                                   arrival_time=float(2 * i))
+                           for i in range(4)]
+        reports = [engine.serve(reqs_of(), n_slots=2,
+                                sched_cfg=SchedulerConfig(lead_window=E))
+                   for E in (0, 3)]
+        for r0, r3 in zip(*(sorted(r.results, key=lambda x: x.request_id)
+                            for r in reports)):
+            np.testing.assert_array_equal(r0.tokens, r3.tokens)
+        _assert_matches_static(engine, prompts, [6] * 4, reports[0])
+
+    def test_heterogeneous_prompt_lengths(self):
+        # static lock-step cannot even express this; compare per-request
+        cfg = _dense_cfg()
+        engine = _engine(cfg)
+        lens = [3, 7, 5]
+        prompts = [_prompts(cfg, 1, L, seed=L)[0] for L in lens]
+        reqs = [Request(prompt=p, max_new_tokens=5, arrival_time=float(i))
+                for i, p in enumerate(prompts)]
+        report = engine.serve(reqs, n_slots=2)
+        for i, r in enumerate(sorted(report.results,
+                                     key=lambda r: r.request_id)):
+            solo = engine.generate({"tokens": jnp.asarray(prompts[i][None])},
+                                   max_new_tokens=5)
+            np.testing.assert_array_equal(r.tokens, np.asarray(solo.tokens[0]))
+
+
+# ---------------------------------------------------------------------------
+# Eviction / admission edge cases
+# ---------------------------------------------------------------------------
+
+class TestEdgeCases:
+    def test_all_eos_batch(self):
+        # every request's first greedy token is forced to be EOS: the batch
+        # finishes at prefill, no decode step runs, no slot leaks
+        cfg = _dense_cfg()
+        engine = _engine(cfg)
+        prompts = _prompts(cfg, 3, 4)
+        first = np.asarray(engine.generate(
+            {"tokens": jnp.asarray(prompts)}, max_new_tokens=1).tokens[:, 0])
+        # pick one first-token value as EOS and serve the requests that hit it
+        eos = int(first[0])
+        subset = [i for i in range(3) if first[i] == eos] or [0]
+        engine.serve_cfg.eos_id = eos
+        reqs = [Request(prompt=prompts[i], max_new_tokens=8) for i in subset]
+        report = engine.serve(reqs, n_slots=2)
+        for r in report.results:
+            assert r.finish_reason == "eos"
+            assert r.tokens.tolist() == [eos]
+        assert report.steps == 0  # finished at prefill, nothing decoded
+
+    def test_arrival_burst_larger_than_slot_count(self):
+        cfg = _dense_cfg()
+        engine = _engine(cfg)
+        B, n_slots = 7, 2
+        prompts = _prompts(cfg, B, 5)
+        reqs = [Request(prompt=prompts[i], max_new_tokens=4,
+                        arrival_time=0.0) for i in range(B)]
+        report = engine.serve(reqs, n_slots=n_slots)
+        assert all(r.finish_reason == "length" for r in report.results)
+        _assert_matches_static(engine, prompts, [4] * B, report)
+        # the pool never held more than n_slots at once
+        assert report.slot_utilization <= 1.0
+        assert report.n_syncs >= (B + n_slots - 1) // n_slots
+
+    def test_admission_control_rejects_beyond_queue_bound(self):
+        cfg = _dense_cfg()
+        engine = _engine(cfg)
+        prompts = _prompts(cfg, 6, 5)
+        reqs = [Request(prompt=prompts[i], max_new_tokens=4,
+                        arrival_time=0.0) for i in range(6)]
+        report = engine.serve(
+            reqs, n_slots=1,
+            sched_cfg=SchedulerConfig(lead_window=0, max_waiting=2))
+        rejected = [r for r in report.results if r.finish_reason == "rejected"]
+        served = [r for r in report.results if r.finish_reason == "length"]
+        assert report.n_rejected == len(rejected) > 0
+        assert len(served) + len(rejected) == 6
+        for r in rejected:
+            assert len(r.tokens) == 0
+
+    def test_oversized_request_rejected_not_wedged(self):
+        cfg = _dense_cfg()
+        engine = _engine(cfg)
+        prompts = _prompts(cfg, 2, 5)
+        ok = Request(prompt=prompts[0], max_new_tokens=4)
+        big = Request(prompt=prompts[1], max_new_tokens=4)
+        report = engine.serve([ok, big], n_slots=2, cache_T=5 + 4)
+        by_id = {r.request_id: r for r in report.results}
+        assert by_id[ok.request_id].finish_reason == "length"
+        assert by_id[big.request_id].finish_reason == "length"
+        # now an explicit cache too small for request 1's prompt+new
+        ok2 = Request(prompt=prompts[0], max_new_tokens=2)
+        big2 = Request(prompt=prompts[1], max_new_tokens=8)
+        report = engine.serve([ok2, big2], n_slots=2, cache_T=5 + 2)
+        by_id = {r.request_id: r for r in report.results}
+        assert by_id[ok2.request_id].finish_reason == "length"
+        assert by_id[big2.request_id].finish_reason == "rejected"
+
+    def test_idle_gap_between_arrivals(self):
+        # queue fully drains, then a late request arrives: clock must jump
+        cfg = _dense_cfg()
+        engine = _engine(cfg)
+        prompts = _prompts(cfg, 2, 5)
+        reqs = [Request(prompt=prompts[0], max_new_tokens=3, arrival_time=0.0),
+                Request(prompt=prompts[1], max_new_tokens=3,
+                        arrival_time=50.0)]
+        report = engine.serve(reqs, n_slots=2)
+        _assert_matches_static(engine, prompts, [3, 3], report)
+        late = sorted(report.results, key=lambda r: r.request_id)[1]
+        assert late.ttft_steps is not None and late.ttft_steps <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Recurrent-state architectures
+# ---------------------------------------------------------------------------
+
+class TestRecurrentFamilies:
+    def test_rwkv_continuous_matches_static(self):
+        cfg = get_arch("rwkv6-7b").reduced().replace(
+            num_layers=2, d_model=64, d_ff=128, vocab_size=128)
+        engine = _engine(cfg, max_new=5)
+        prompts = _prompts(cfg, 3, 6)
+        max_news = [5, 2, 4]
+        reqs = [Request(prompt=prompts[i], max_new_tokens=max_news[i],
+                        arrival_time=float(i)) for i in range(3)]
+        report = engine.serve(reqs, n_slots=2)
+        _assert_matches_static(engine, prompts, max_news, report)
+
+    def test_zamba_hybrid_continuous_matches_static(self):
+        cfg = get_arch("zamba2-2.7b").reduced()
+        cfg = cfg.replace(num_layers=2, attn_every=2, d_model=64, d_ff=128,
+                          vocab_size=128, head_dim=16)
+        engine = _engine(cfg, max_new=4)
+        prompts = _prompts(cfg, 3, 6)
+        max_news = [4, 2, 4]
+        reqs = [Request(prompt=prompts[i], max_new_tokens=max_news[i],
+                        arrival_time=float(i)) for i in range(3)]
+        report = engine.serve(reqs, n_slots=2)
+        _assert_matches_static(engine, prompts, max_news, report)
+
+
+# ---------------------------------------------------------------------------
+# Component state machines
+# ---------------------------------------------------------------------------
+
+class TestComponents:
+    def test_request_state_machine_rejects_illegal_transitions(self):
+        r = Request(prompt=np.arange(4))
+        with pytest.raises(ValueError):
+            r.transition(RequestState.DECODE)  # WAITING -> DECODE illegal
+        r.transition(RequestState.PREFILL)
+        r.transition(RequestState.DECODE)
+        r.finish(1.0, "length")
+        with pytest.raises(ValueError):
+            r.transition(RequestState.DECODE)  # DONE is terminal
+
+    def test_queue_fifo_and_bound(self):
+        q = RequestQueue(max_waiting=2)
+        rs = [Request(prompt=np.arange(3)) for _ in range(3)]
+        assert q.submit(rs[0], 0.0) and q.submit(rs[1], 0.0)
+        assert not q.submit(rs[2], 0.0)
+        assert rs[2].finish_reason == "rejected"
+        assert [r.request_id for r in q.pop(5)] == [rs[0].request_id,
+                                                    rs[1].request_id]
+        assert len(q) == 0
+
+    def test_cache_manager_slot_lifecycle(self):
+        cfg = _dense_cfg()
+        cm = CacheManager(cfg, n_slots=2, cache_T=8)
+        a = cm.alloc()
+        b = cm.alloc()
+        assert {a, b} == {0, 1} and cm.n_free == 0
+        with pytest.raises(RuntimeError):
+            cm.alloc()
+        cm.advance([a])
+        assert cm.divergence() == 1
+        cm.free(a)
+        assert cm.n_free == 1 and cm.lengths[a] == 0
+        with pytest.raises(ValueError):
+            cm.free(a)
+
+    def test_cache_manager_insert_roundtrip(self):
+        cfg = _dense_cfg()
+        params = api.init(jax.random.PRNGKey(0), cfg)
+        toks = _prompts(cfg, 1, 4)
+        _, src = api.prefill(params, cfg, {"tokens": jnp.asarray(toks)}, 8)
+        cm = CacheManager(cfg, n_slots=3, cache_T=8)
+        slot = cm.alloc()
+        cm.insert(slot, src, length=4)
+        got = api.slot_extract(cfg, cm.cache, slot)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(src)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_deployment_estimate_present_when_quantized(self):
+        from repro.models.layers import quantize_dense_params
+        cfg = _dense_cfg()
+        params = api.init(jax.random.PRNGKey(0), cfg)
+        qparams = quantize_dense_params(params)
+        qcfg = cfg.replace(matmul_mode="bp_exact", kv_cache_int8=True)
+        engine = ServingEngine(qcfg, qparams, ServeConfig(max_new_tokens=3))
+        est = engine.deployment_estimate(n_mc=2_000)
+        assert est is not None and est["mode"] == "bp_exact"
+        assert len(est["per_layer"]) >= cfg.num_layers
+        assert 0.0 < est["mean_bit_sparsity"] < 1.0
+        assert est["mean_cycles_per_mac"] >= 1.0
+        # bf16 engine reports no estimate
+        bf = ServingEngine(cfg, params, ServeConfig(max_new_tokens=3))
+        assert bf.deployment_estimate() is None
