@@ -1,0 +1,204 @@
+"""Decode-path latency microbenchmark: the repo's perf trajectory artifact.
+
+Measures prefill latency and per-step decode latency of the inference fast
+path across
+
+  * matmul modes   — bf16, bp_exact, bp_approx
+  * backends       — xla vs kernel_interpret (the Pallas kernel is only
+                     *compiled* on TPU; interpret mode exercises the same
+                     kernel program on CPU, so its absolute numbers are a
+                     correctness/coverage signal, not a speed claim)
+  * decode loops   — static fused (jitted multi-token lax.scan, sampling
+                     folded into the step) vs the pre-PR legacy loop (one
+                     jitted decode dispatch + a separate eager sampling
+                     dispatch per token) vs continuous serve()
+
+and writes everything to ``experiments/bench/BENCH_decode.json`` so each PR
+accumulates a comparable perf point.
+
+    PYTHONPATH=src python benchmarks/decode_latency.py --smoke
+    PYTHONPATH=src python benchmarks/decode_latency.py --max-new 64 --repeats 3
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+if __package__ in (None, ""):  # ran as a script: make `benchmarks.` importable
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import save_artifact
+
+
+def _legacy_generate(engine, batch, max_new, cache_T):
+    """The pre-PR static decode loop, reconstructed for comparison: one
+    jitted decode dispatch plus a separate eager argmax dispatch per token,
+    full (B, V) logits leaving the jitted step each time."""
+    prompt = batch["tokens"]
+    _, S = prompt.shape
+    t0 = time.perf_counter()
+    logits, cache = engine._prefill(engine.params, batch, cache_T)
+    logits.block_until_ready()
+    t1 = time.perf_counter()
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    for i in range(max_new - 1):
+        step = {"tokens": tok[:, None], "cache": cache,
+                "cache_len": jnp.int32(S + i)}
+        logits, cache = engine._decode(engine.params, step)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(out[-1])
+    t2 = time.perf_counter()
+    return t1 - t0, t2 - t1, len(out)
+
+
+def _time_static(engine, batch, max_new, cache_T, repeats, legacy=False):
+    """(prefill_s, decode_s, steps) — best-of-``repeats`` after a compile
+    warmup call."""
+    B = batch["tokens"].shape[0]
+
+    def once():
+        if legacy:
+            pf, dc, steps = _legacy_generate(engine, batch, max_new, cache_T)
+            return pf, dc, steps, B * steps
+        res = engine.generate(batch, max_new_tokens=max_new, cache_T=cache_T)
+        return res.prefill_s, res.decode_s, res.steps, res.tokens.size
+    once()                                   # compile warmup
+    runs = [once() for _ in range(repeats)]
+    best = min(runs, key=lambda r: r[1])
+    return best
+
+
+def _time_continuous(engine, prompts, max_new, repeats):
+    from repro.serving import Request
+    B = prompts.shape[0]
+    cache_T = prompts.shape[1] + max_new + engine.serve_cfg.cache_margin
+
+    def once():
+        reqs = [Request(prompt=prompts[i], max_new_tokens=max_new)
+                for i in range(B)]
+        rep = engine.serve(reqs, n_slots=B, cache_T=cache_T)
+        # total_new_tokens, not B*steps: the first token of every request
+        # comes from prefill, not a decode step
+        return rep.prefill_s, rep.decode_s, max(rep.steps, 1), \
+            rep.total_new_tokens
+    once()                                   # compile warmup
+    runs = [once() for _ in range(repeats)]
+    return min(runs, key=lambda r: r[1])
+
+
+def run(smoke: bool = False, max_new: int = None, repeats: int = None,
+        with_interpret: bool = True, decode_chunk: int = 8, seed: int = 0):
+    from repro.configs.base import get_arch
+    from repro.models import api
+    from repro.serving import ServeConfig, ServingEngine
+
+    if max_new is None:
+        # k*decode_chunk + 1: the fused path runs whole scan chunks (the
+        # first token comes from prefill), measuring steady-state decode
+        max_new = decode_chunk + 1 if smoke else 4 * decode_chunk + 1
+    if repeats is None:
+        repeats = 2 if smoke else 4
+    B = 2 if smoke else 4
+    prompt_len = 8 if smoke else 16
+
+    cfg0 = get_arch("qwen2-1.5b").reduced().replace(
+        num_layers=2 if smoke else 4, d_model=64 if smoke else 128,
+        d_ff=128 if smoke else 256, vocab_size=256, head_dim=16)
+    params = api.init(jax.random.PRNGKey(seed), cfg0)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed + 1), (B, prompt_len), 2, cfg0.vocab_size),
+        np.int32)
+    batch = {"tokens": jnp.asarray(prompts)}
+    cache_T = prompt_len + max_new + 8
+
+    cells = []
+    backends_of = {
+        "bf16": ["xla"],                     # no quantized contraction to fuse
+        "bp_exact": ["xla"] + (["kernel_interpret"] if with_interpret else []),
+        "bp_approx": ["xla"] + (["kernel_interpret"] if with_interpret else []),
+    }
+    for mode, backends in backends_of.items():
+        for backend in backends:
+            cfg = cfg0.replace(matmul_mode=mode, matmul_backend=backend)
+            engine = ServingEngine(
+                cfg, params, ServeConfig(max_new_tokens=max_new,
+                                         decode_chunk=decode_chunk))
+            for path, timing in (
+                ("static_fused",
+                 _time_static(engine, batch, max_new, cache_T, repeats)),
+                ("static_legacy",
+                 _time_static(engine, batch, max_new, cache_T, repeats,
+                              legacy=True)),
+                ("continuous",
+                 _time_continuous(engine, prompts, max_new, repeats)),
+            ):
+                prefill_s, decode_s, steps, n_tokens = timing
+                cells.append({
+                    "mode": mode, "backend": backend, "path": path,
+                    "prefill_s": prefill_s, "decode_s": decode_s,
+                    "steps": steps, "tokens": n_tokens,
+                    "per_step_ms": 1e3 * decode_s / max(steps, 1),
+                    "decode_tokens_per_s": n_tokens / max(decode_s, 1e-9),
+                })
+                c = cells[-1]
+                print(f"{mode:>9} {backend:>17} {path:>13}  "
+                      f"prefill {1e3 * prefill_s:7.1f} ms  "
+                      f"per-step {c['per_step_ms']:7.2f} ms  "
+                      f"{c['decode_tokens_per_s']:8.0f} tok/s")
+
+    # headline: fused-scan decode overhead vs the pre-PR per-token loop
+    speedups = {}
+    by = {(c["mode"], c["backend"], c["path"]): c for c in cells}
+    for (mode, backend, path), c in by.items():
+        if path != "static_fused":
+            continue
+        legacy = by.get((mode, backend, "static_legacy"))
+        if legacy:
+            speedups[f"{mode}/{backend}"] = (
+                legacy["per_step_ms"] / max(c["per_step_ms"], 1e-9))
+    for k, v in speedups.items():
+        print(f"static per-step speedup vs legacy loop [{k}]: {v:.2f}x")
+
+    payload = {
+        "bench": "decode_latency",
+        "jax_backend": jax.default_backend(),
+        "config": {"smoke": smoke, "B": B, "prompt_len": prompt_len,
+                   "max_new": max_new, "repeats": repeats,
+                   "decode_chunk": decode_chunk,
+                   "d_model": cfg0.d_model, "num_layers": cfg0.num_layers},
+        "cells": cells,
+        "static_per_step_speedup_vs_legacy": speedups,
+    }
+    path = save_artifact("BENCH_decode", payload)
+    print("wrote", path)
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", "--tiny", action="store_true",
+                    help="tiny model / few steps (CI CPU smoke)")
+    ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--decode-chunk", type=int, default=8)
+    ap.add_argument("--no-interpret", action="store_true",
+                    help="skip the kernel_interpret backend cells")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, max_new=args.max_new, repeats=args.repeats,
+        with_interpret=not args.no_interpret,
+        decode_chunk=args.decode_chunk, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

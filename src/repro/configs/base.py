@@ -53,6 +53,11 @@ class ArchConfig:
     mrope_sections: Tuple[int, ...] = ()
     # numerics / BitParticle backend: bf16 | qat | bp_exact | bp_approx
     matmul_mode: str = "bf16"
+    # quantized-matmul execution backend: auto | xla | kernel |
+    # kernel_interpret.  "auto" routes bp_* contractions through the fused
+    # Pallas kernel on TPU and the pure-XLA formulation elsewhere;
+    # "kernel_interpret" forces the kernel in interpret mode (CPU oracle).
+    matmul_backend: str = "auto"
     # int8 KV cache with per-token-per-head scales (serving memory term)
     kv_cache_int8: bool = False
 

@@ -17,12 +17,26 @@ Three modes, selectable per layer / per config:
                 int8 matmuls — the TPU-native formulation of the variant.
 
 The Pallas TPU kernel in ``repro.kernels.bitparticle_matmul`` fuses all
-contractions + dequant in one VMEM pass; this module is the pure-jnp (XLA)
-implementation used for training, dry-runs, and as the kernel oracle.
+contractions + dequant in one VMEM pass; this module holds both the pure-jnp
+(XLA) implementation — used for training, dry-runs, and as the kernel oracle
+— and the backend dispatch that routes inference-path contractions through
+the kernel.
+
+Backend selection (``matmul_backend`` on ``ArchConfig`` / this module):
+
+  ``auto``              fused Pallas kernel on TPU, pure XLA elsewhere.
+  ``kernel``            force the compiled Pallas kernel.
+  ``kernel_interpret``  force the kernel in interpret mode (CPU validation).
+  ``xla``               force the pure-jnp three-matmul formulation.
+
+The active backend is a trace-time choice: ``use_matmul_backend`` scopes it
+around a jit trace (the serving engine wraps every compiled entry point this
+way), ``set_matmul_backend`` moves the process-wide default.
 """
 
 from __future__ import annotations
 
+import contextlib
 from functools import partial
 
 import jax
@@ -31,6 +45,45 @@ import jax.numpy as jnp
 from repro.core import quant
 
 MODES = ("bf16", "qat", "bp_exact", "bp_approx")
+BACKENDS = ("auto", "xla", "kernel", "kernel_interpret")
+
+_matmul_backend = "auto"
+
+
+def set_matmul_backend(backend: str) -> str:
+    """Set the process-wide quantized-matmul backend; returns the previous
+    value.  Takes effect at trace time — already-compiled functions keep the
+    backend they were traced with."""
+    global _matmul_backend
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown matmul backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    prev = _matmul_backend
+    _matmul_backend = backend
+    return prev
+
+
+def get_matmul_backend() -> str:
+    return _matmul_backend
+
+
+@contextlib.contextmanager
+def use_matmul_backend(backend: str):
+    """Scope the quantized-matmul backend around a trace/call."""
+    prev = set_matmul_backend(backend)
+    try:
+        yield
+    finally:
+        set_matmul_backend(prev)
+
+
+def resolve_matmul_backend(backend: str = None) -> str:
+    """Concrete backend ("xla" | "kernel" | "kernel_interpret") for the
+    current default device."""
+    b = _matmul_backend if backend is None else backend
+    if b == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "xla"
+    return b
 
 
 def signed_low_particles(q):
@@ -83,6 +136,15 @@ def quantized_matmul(x, w, w_scale, mode: str):
 def _qmm_fwd_impl(x, w, w_scale, mode):
     x_scale = quant.compute_scale(x)
     x_q = quant.quantize(x, x_scale)
+    backend = resolve_matmul_backend()
+    if backend != "xla" and mode in ("bp_exact", "bp_approx"):
+        # fused Pallas path: quantize-scale plumbing + exact/approx
+        # contractions + dequant epilogue in one VMEM pass
+        from repro.kernels.bitparticle_matmul.ops import bp_matmul
+        out = bp_matmul(x_q, w, x_scale, w_scale,
+                        approx=(mode == "bp_approx"),
+                        interpret=(backend == "kernel_interpret"))
+        return out.astype(x.dtype)
     acc = bp_matmul_int(x_q, w, mode)
     return (acc.astype(jnp.float32) * (x_scale * w_scale)).astype(x.dtype)
 

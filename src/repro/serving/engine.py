@@ -2,14 +2,30 @@
 
 Two paths over the same ``models/api.py`` init/prefill/decode surface:
 
-  * ``generate(batch)`` — the original static path: one prefill, then the
-    whole batch decodes in lock-step until every sequence finishes.
+  * ``generate(batch)`` — the static path: one prefill, then the whole batch
+    decodes in lock-step until every sequence finishes.  The decode loop is
+    device-resident: a jitted multi-token ``lax.scan`` advances ``chunk``
+    tokens per dispatch with sampling (greedy argmax / temperature
+    categorical) fused into the step, so only ``(B,)`` tokens and done flags
+    cross to the host per chunk — never the full ``(B, V)`` logits.  EOS
+    early-exit is checked at chunk boundaries and the output is trimmed to
+    the exact step the per-token loop would have stopped at.
   * ``serve(requests)`` — continuous batching: a slot pool (``CacheManager``)
     decodes with per-slot sequence positions, finished sequences are evicted
     mid-flight, and waiting requests are admitted into freed slots under the
     ``QuasiSyncScheduler``'s bounded lead window (the paper's inter-group
-    elasticity E, one level up).  Greedy outputs are token-identical to the
-    static path; throughput on heterogeneous-length workloads is not.
+    elasticity E, one level up).  Sampling is fused into the jitted decode
+    step here too (one dispatch, ``(n_slots,)`` tokens to host).  Greedy
+    outputs are token-identical to the static path; throughput on
+    heterogeneous-length workloads is not.
+
+Inference fast path: when a ``bp_*`` matmul mode is active the engine
+pre-quantizes every dense kernel to int8 + per-channel scale once at
+construction (``quantize_dense_params``), so no call path under
+``serve``/``generate`` re-quantizes weights per decode step; and every
+compiled entry point is traced under the config's ``matmul_backend`` so the
+contractions route through the fused Pallas kernel on TPU
+(``core.bp_matmul`` dispatch).
 
 Supports all 10 architectures (KV caches for attention families, recurrent
 state for RWKV/Zamba), greedy and temperature sampling, per-sequence EOS
@@ -19,7 +35,9 @@ modeled cycles/energy) when a quantized matmul mode is active.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -27,7 +45,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import bp_matmul
 from repro.models import api
+from repro.models.layers import quantize_dense_params
 from repro.serving.cache_manager import CacheManager
 from repro.serving.queue import Request, RequestQueue, RequestState
 from repro.serving.scheduler import QuasiSyncScheduler, SchedulerConfig
@@ -39,6 +59,7 @@ class ServeConfig:
     temperature: float = 0.0          # 0 => greedy
     eos_id: Optional[int] = None
     cache_margin: int = 8             # extra cache slots beyond prompt+new
+    decode_chunk: int = 8             # tokens per jitted decode scan dispatch
 
 
 @dataclasses.dataclass
@@ -80,8 +101,12 @@ class ServeReport:
 
     @property
     def decode_tokens_per_s(self) -> float:
-        if self.steps == 0:        # everything finished at prefill
-            return 0.0
+        if self.steps == 0:
+            # everything finished at prefill: tokens were still generated
+            # (one per admitted request) — report them over total wall time
+            # instead of a blind 0.0
+            return self.total_new_tokens / max(self.prefill_s + self.decode_s,
+                                               1e-9)
         return self.total_new_tokens / max(self.decode_s, 1e-9)
 
     def tokens_by_request(self) -> Dict[int, np.ndarray]:
@@ -91,18 +116,37 @@ class ServeReport:
 class ServingEngine:
     def __init__(self, arch_cfg, params, serve_cfg: Optional[ServeConfig] = None):
         self.cfg = arch_cfg
-        self.params = params
         self.serve_cfg = ServeConfig() if serve_cfg is None else serve_cfg
-        self._prefill = jax.jit(
+        self.matmul_backend = getattr(arch_cfg, "matmul_backend", "auto")
+        if arch_cfg.matmul_mode in ("bp_exact", "bp_approx"):
+            # weight-resident fast path: quantize every dense kernel to int8 +
+            # per-channel scale ONCE, instead of per-channel re-quantizing the
+            # float weights on every forward inside the decode hot loop
+            # (idempotent — already-int8 params pass through untouched)
+            params = quantize_dense_params(params)
+        self.params = params
+        self._prefill = self._jit(
             lambda p, b, t: api.prefill(p, self.cfg, b, t),
             static_argnums=(2,))
-        self._decode = jax.jit(lambda p, b: api.decode_step(p, self.cfg, b))
-        # batched per-request sampling for the continuous path: always called
-        # at the full (n_slots, ...) shape so each compiles exactly once
-        self._fold_vec = jax.jit(jax.vmap(jax.random.fold_in))
-        self._sample_vec = jax.jit(
-            lambda keys, logits: jax.vmap(jax.random.categorical)(keys, logits))
+        self._decode = self._jit(lambda p, b: api.decode_step(p, self.cfg, b))
+        # fused decode+sample entry points, built lazily per (temperature,
+        # eos, chunk) so ``serve_cfg`` stays mutable between calls
+        self._decode_sample_jits: Dict[tuple, object] = {}
+        self._decode_scan_jits: Dict[tuple, object] = {}
         self._deployment_cache: Dict[int, Optional[dict]] = {}
+
+    def _jit(self, fn, **jit_kwargs):
+        """jax.jit with the config's matmul backend scoped around the trace,
+        so bp_* contractions route through the fused Pallas kernel / XLA
+        oracle as selected (``core.bp_matmul`` dispatch)."""
+        backend = self.matmul_backend
+
+        @functools.wraps(fn)
+        def traced(*args, **kwargs):
+            with bp_matmul.use_matmul_backend(backend):
+                return fn(*args, **kwargs)
+
+        return jax.jit(traced, **jit_kwargs)
 
     def _sample(self, logits, key):
         if self.serve_cfg.temperature <= 0:
@@ -111,7 +155,74 @@ class ServingEngine:
                                       axis=-1)
 
     # ------------------------------------------------------------------
-    # Static path (original behavior)
+    # Device-resident decode steps (sampling fused into the jitted step)
+    # ------------------------------------------------------------------
+
+    def _decode_sample_fn(self, temperature: float):
+        """Jitted (params, step, keys, counts) -> (tokens, new_cache) for the
+        continuous path: decode + per-slot sampling in ONE dispatch, so only
+        the (n_slots,) sampled tokens ever cross to the host — not the
+        (n_slots, V) logits."""
+        cache_key = (float(temperature),)
+        fn = self._decode_sample_jits.get(cache_key)
+        if fn is not None:
+            return fn
+
+        def step_fn(p, step, keys, counts):
+            logits, new_cache = api.decode_step(p, self.cfg, step)
+            if temperature <= 0:
+                tok = jnp.argmax(logits, axis=-1)
+            else:
+                ks = jax.vmap(jax.random.fold_in)(keys, counts)
+                tok = jax.vmap(jax.random.categorical)(ks,
+                                                       logits / temperature)
+            return tok.astype(jnp.int32), new_cache
+
+        fn = self._jit(step_fn)
+        self._decode_sample_jits[cache_key] = fn
+        return fn
+
+    def _decode_scan_fn(self, chunk: int, temperature: float,
+                        eos_id: Optional[int]):
+        """Jitted multi-token decode for the static path: a ``lax.scan`` over
+        ``chunk`` steps with sampling + EOS masking folded in.  Returns
+        (last_tok, cache, done, key, tokens (chunk, B)); only the sampled
+        tokens and done flags leave the device."""
+        cache_key = (int(chunk), float(temperature), eos_id)
+        fn = self._decode_scan_jits.get(cache_key)
+        if fn is not None:
+            return fn
+
+        def scan_fn(p, tok, cache, done, key, pos0, i0):
+            def body(carry, j):
+                tok, cache, done, key = carry
+                if eos_id is not None:
+                    done = done | (tok == eos_id)
+                step = {"tokens": tok[:, None], "cache": cache,
+                        "cache_len": (pos0 + j).astype(jnp.int32)}
+                logits, cache = api.decode_step(p, self.cfg, step)
+                key = jax.random.fold_in(key, i0 + j)
+                if temperature <= 0:
+                    new = jnp.argmax(logits, axis=-1)
+                else:
+                    new = jax.random.categorical(key, logits / temperature,
+                                                 axis=-1)
+                new = new.astype(tok.dtype)
+                if eos_id is not None:
+                    new = jnp.where(done, eos_id, new)
+                return (new, cache, done, key), new
+
+            carry, toks = jax.lax.scan(
+                body, (tok, cache, done, key), jnp.arange(chunk))
+            tok, cache, done, key = carry
+            return tok, cache, done, key, toks
+
+        fn = self._jit(scan_fn)
+        self._decode_scan_jits[cache_key] = fn
+        return fn
+
+    # ------------------------------------------------------------------
+    # Static path (device-resident chunked decode)
     # ------------------------------------------------------------------
 
     def generate(self, batch: dict, key=None, *,
@@ -127,43 +238,69 @@ class ServingEngine:
         B, S = prompt.shape
         max_new = (self.serve_cfg.max_new_tokens if max_new_tokens is None
                    else max_new_tokens)
+        if max_new < 1:
+            raise ValueError("max_new_tokens must be >= 1")
         if cache_T is None:
             cache_T = S + max_new + self.serve_cfg.cache_margin
+        eos = self.serve_cfg.eos_id
+        temperature = self.serve_cfg.temperature
+        chunk_pref = max(1, self.serve_cfg.decode_chunk)
 
         t0 = time.perf_counter()
         logits, cache = self._prefill(self.params, batch, cache_T)
         logits.block_until_ready()
         t1 = time.perf_counter()
 
-        out = []
+        # device-resident decode: chunks of ``decode_chunk`` tokens advance
+        # inside one jitted lax.scan each; per chunk only (B,) tokens + done
+        # flags come back to the host (EOS early-exit at chunk boundaries)
+        tok = self._sample(logits, key).astype(jnp.int32)
         done = jnp.zeros((B,), bool)
-        tok = self._sample(logits, key)
-        for i in range(max_new):
-            out.append(tok)
-            if self.serve_cfg.eos_id is not None:
-                done = done | (tok == self.serve_cfg.eos_id)
-                if bool(done.all()):
-                    break
-            step = {"tokens": tok[:, None], "cache": cache,
-                    "cache_len": jnp.int32(S + i)}
-            logits, cache = self._decode(self.params, step)
-            key = jax.random.fold_in(key, i)
-            tok = self._sample(logits, key)
-            if self.serve_cfg.eos_id is not None:
-                tok = jnp.where(done, self.serve_cfg.eos_id, tok)
-        jax.block_until_ready(out[-1])
+        chunks = [tok[:, None]]
+        start, n_steps = 0, max_new - 1
+        while start < n_steps:
+            if eos is not None and bool(np.asarray(
+                    (done | (tok == eos)).all())):
+                break
+            remaining = n_steps - start
+            # tail chunks decompose into powers of two so the number of
+            # compiled scan variants stays O(log decode_chunk) no matter how
+            # max_new_tokens varies across calls (each distinct chunk length
+            # is a separate whole-model compile)
+            chunk = (chunk_pref if remaining >= chunk_pref
+                     else 1 << (remaining.bit_length() - 1))
+            scan = self._decode_scan_fn(chunk, temperature, eos)
+            tok, cache, done, key, toks = scan(
+                self.params, tok, cache, done, key,
+                jnp.int32(S + start), jnp.int32(start))
+            chunks.append(toks.T)
+            start += chunk
+        jax.block_until_ready(tok)
         t2 = time.perf_counter()
-        return GenerationResult(tokens=np.stack([np.asarray(t) for t in out], 1),
+
+        mat = np.concatenate([np.asarray(c) for c in chunks], axis=1)
+        if eos is not None:
+            # trim to the step the per-token loop would have stopped at:
+            # the first column where every row has already emitted EOS
+            col_done = (np.cumsum(mat == eos, axis=1) > 0).all(axis=0)
+            if col_done.any():
+                mat = mat[:, :int(np.argmax(col_done)) + 1]
+        return GenerationResult(tokens=mat,
                                 prefill_s=t1 - t0, decode_s=t2 - t1,
-                                steps=len(out))
+                                steps=mat.shape[1])
 
     # ------------------------------------------------------------------
     # Continuous batching (quasi-sync path)
     # ------------------------------------------------------------------
 
+    def _request_key_base(self, req: Request):
+        """Per-request PRNG base; the n-th sampled token folds this with n
+        (prefill samples with n=0, the decode step folds in the running
+        token count — one consistent stream per request)."""
+        return jax.random.fold_in(jax.random.PRNGKey(0), req.request_id)
+
     def _request_key(self, req: Request, n: int):
-        base = jax.random.fold_in(jax.random.PRNGKey(0), req.request_id)
-        return jax.random.fold_in(base, n)
+        return jax.random.fold_in(self._request_key_base(req), n)
 
     def _finished(self, req: Request, token: int) -> Optional[str]:
         eos = self.serve_cfg.eos_id
@@ -196,17 +333,20 @@ class ServingEngine:
         rq = RequestQueue(max_waiting=(sched_cfg or SchedulerConfig()).max_waiting)
         sched = QuasiSyncScheduler(rq, cm, sched_cfg)
 
-        arrivals = list(requests)
+        # deque: submit_arrivals pops from the head every decode step, and
+        # list.pop(0) is O(n) — O(n^2) over long request streams
+        arrivals = collections.deque(requests)
         active: Dict[int, Request] = {}           # slot -> request
         last_tok = np.zeros(n_slots, np.int32)    # per-slot last sampled token
         slot_keys = np.zeros((n_slots, 2), np.uint32)  # per-slot PRNG base
         now = 0.0
         prefill_s = 0.0
         t_decode = 0.0
+        decode_fn = self._decode_sample_fn(self.serve_cfg.temperature)
 
         def submit_arrivals():
             while arrivals and arrivals[0].arrival_time <= now:
-                req = arrivals.pop(0)
+                req = arrivals.popleft()
                 if not cm.fits(req.prompt_len, req.max_new_tokens):
                     rq.reject(req, now)
                     continue
@@ -255,8 +395,7 @@ class ServingEngine:
                 active[slot] = req
                 last_tok[slot] = tok
                 if self.serve_cfg.temperature > 0:
-                    slot_keys[slot] = np.asarray(jax.random.fold_in(
-                        jax.random.PRNGKey(0), req.request_id))
+                    slot_keys[slot] = np.asarray(self._request_key_base(req))
 
         submit_arrivals()
         while arrivals or len(rq) or active:
@@ -271,31 +410,27 @@ class ServingEngine:
                     submit_arrivals()
                 continue
 
+            slots = list(active.keys())
+            # fixed (n_slots, ...) shapes: decode + fold + sample fused into
+            # ONE jitted dispatch, free-slot rows sampled and discarded; only
+            # the (n_slots,) sampled tokens transfer to host, never logits
+            counts = np.zeros(n_slots, np.uint32)
+            for s in slots:
+                counts[s] = len(active[s].tokens)
             step = {"tokens": jnp.asarray(last_tok[:, None]),
                     "cache": cm.cache,
                     "cache_len": cm.cache_len_vector()}
             t0 = time.perf_counter()
-            logits, new_cache = self._decode(self.params, step)
-            logits.block_until_ready()
+            toks, new_cache = decode_fn(self.params, step,
+                                        jnp.asarray(slot_keys),
+                                        jnp.asarray(counts))
+            toks.block_until_ready()
             t_decode += time.perf_counter() - t0
             cm.update(new_cache)
-            cm.advance(list(active.keys()))
+            cm.advance(slots)
             sched.observe_decode_step()
             now += 1.0
-
-            slots = list(active.keys())
-            if self.serve_cfg.temperature <= 0:
-                toks_np = np.asarray(jnp.argmax(logits, axis=-1))
-            else:
-                # fixed (n_slots, ...) shapes: one fold + one sample dispatch
-                # per step, free-slot rows sampled and discarded
-                counts = np.zeros(n_slots, np.uint32)
-                for s in slots:
-                    counts[s] = len(active[s].tokens)
-                keys = self._fold_vec(jnp.asarray(slot_keys),
-                                      jnp.asarray(counts))
-                toks_np = np.asarray(self._sample_vec(
-                    keys, logits / self.serve_cfg.temperature))
+            toks_np = np.asarray(toks)
             for slot in slots:
                 req = active[slot]
                 tok = int(toks_np[slot])

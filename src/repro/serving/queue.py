@@ -108,10 +108,6 @@ class RequestQueue:
     def __len__(self) -> int:
         return len(self._waiting)
 
-    @property
-    def waiting(self) -> List[Request]:
-        return list(self._waiting)
-
     def reject(self, request: Request, now: float):
         """Mark a request rejected (admission control) and count it."""
         self.n_rejected += 1
@@ -132,9 +128,3 @@ class RequestQueue:
         """Dequeue up to ``k`` requests in FIFO order."""
         popped, self._waiting = self._waiting[:k], self._waiting[k:]
         return popped
-
-    def oldest_wait(self, now: float) -> float:
-        """Queueing delay of the head request (0 when empty)."""
-        if not self._waiting:
-            return 0.0
-        return now - self._waiting[0].arrival_time

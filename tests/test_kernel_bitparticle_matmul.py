@@ -98,6 +98,26 @@ def test_property_random_shapes(seed, m, k, n, approx):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_pick_block_minimizes_padded_work():
+    from repro.kernels.bitparticle_matmul.ops import _pick_block, _round_up
+    # a dim just past the preferred block must NOT pad to 2x the work:
+    # 257 under pref=256 picks 128 (padded 384), not 256 (padded 512)
+    assert _pick_block(257, 256, 128) == 128
+    # exact multiples keep the largest block (fewest grid steps)
+    assert _pick_block(256, 256, 128) == 256
+    assert _pick_block(512, 256, 128) == 256
+    # small dims: one minimal aligned block
+    assert _pick_block(5, 256, 8) == 8
+    assert _pick_block(33, 256, 8) == 40
+    # the chosen block is always optimal among aligned candidates
+    for dim in (1, 7, 129, 200, 257, 300, 511, 520):
+        for align, pref in ((8, 256), (128, 256), (128, 128)):
+            b = _pick_block(dim, pref, align)
+            assert b % align == 0 and b <= max(pref, align)
+            best = min(_round_up(dim, c) for c in range(align, pref + 1, align))
+            assert _round_up(dim, b) == best, (dim, align, pref, b)
+
+
 def test_approx_differs_but_is_close():
     # sanity: approx is not a no-op, and its magnitude error per MAC <= 81*K
     key = jax.random.PRNGKey(13)

@@ -141,6 +141,10 @@ class TestEdgeCases:
             assert r.finish_reason == "eos"
             assert r.tokens.tolist() == [eos]
         assert report.steps == 0  # finished at prefill, nothing decoded
+        # tokens WERE generated (one per request at prefill): the throughput
+        # report must not be blind to them just because no decode step ran
+        assert report.total_new_tokens == len(reqs)
+        assert report.decode_tokens_per_s > 0.0
 
     def test_arrival_burst_larger_than_slot_count(self):
         cfg = _dense_cfg()
