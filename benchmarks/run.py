@@ -40,6 +40,9 @@ BENCHMARKS = [
     ("roofline", "benchmarks.roofline",
      lambda r: f"cells_ok={r['n_cells_single_pod_ok']}"
                f"+{r['n_cells_multi_pod_ok']}mp"),
+    ("paged_memory", "benchmarks.paged_memory",
+     lambda r: f"concurrency_gain={r['admitted_concurrency_gain']:.2f}x;"
+               f"mismatches={r['token_mismatches']}"),
 ]
 
 

@@ -32,6 +32,12 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--mode", default="bp_exact",
                     choices=["bf16", "bp_exact", "bp_approx"])
+    ap.add_argument("--cache-backend", default="slab",
+                    choices=["slab", "paged"],
+                    help="decode-cache store: worst-case slab slots or "
+                         "on-demand KV blocks with prefix sharing")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged backend)")
     args = ap.parse_args()
 
     cfg = get_arch("qwen2-1.5b").reduced().replace(
@@ -47,7 +53,9 @@ def main():
 
     engine = ServingEngine(cfg, params,
                            ServeConfig(max_new_tokens=args.tokens,
-                                       temperature=args.temperature))
+                                       temperature=args.temperature,
+                                       cache_backend=args.cache_backend,
+                                       block_size=args.block_size))
 
     rng = np.random.default_rng(0)
     prompts = np.asarray(
@@ -80,6 +88,11 @@ def main():
           f"{report.decode_tokens_per_s:.1f} tokens/s, "
           f"{report.slot_utilization*100:.0f}% slot utilization, "
           f"max position divergence {report.max_divergence}")
+    if report.cache_backend == "paged":
+        print(f"paged:   peak {report.peak_blocks_in_use} blocks in use, "
+              f"{report.prefix_hit_blocks} prefix-hit blocks, "
+              f"{report.cow_blocks} copy-on-writes, "
+              f"{report.n_preemptions} preemptions")
     for r in report.results[:4]:
         print(f"  req {r.request_id}: {len(r.tokens)} tokens "
               f"(ttft {r.ttft_steps:.0f} steps, "

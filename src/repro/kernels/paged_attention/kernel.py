@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: paged-attention decode over block-table-indexed KV.
+
+One decode query per sequence attends over K/V stored in fixed-size blocks
+(``block_size`` tokens each) scattered across a physical page pool; the
+per-sequence **block table** maps logical block index -> physical page.  The
+block tables and valid lengths ride in as *scalar prefetch* operands
+(``pltpu.PrefetchScalarGridSpec``), so the page gather is expressed in the
+``index_map`` of the K/V BlockSpecs — each grid step DMAs exactly one
+physical page into VMEM, and no gathered (B, T, ...) copy of the cache is
+ever materialized in HBM (the XLA fallback in :mod:`.ref` does materialize
+one; that is the memory the kernel saves).
+
+Grid is ``(B, KV_heads, n_pages)`` with the page dimension innermost
+("arbitrary" semantics): the online-softmax state (m, l, acc) for one
+(sequence, kv-head) lives in VMEM scratch across page steps, and the output
+is written once on the last page step.  Positions ``pos <= lengths[b]`` are
+valid (the just-written token's K/V included), matching
+``models/attention.py::decode_attention``.  Unused table entries point at
+page 0 (the pool's trash block); their scores are masked to -inf before the
+softmax so they contribute exactly 0.
+
+VMEM working set per step: one (block_size, D) K page + V page + the
+(G, D) accumulator — a few KiB.  For compiled TPU use, prefer
+``block_size`` a multiple of 8 and head dim a multiple of 128; interpret
+mode (the CPU validation path) relaxes all tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, block_size: int, n_pages: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, D), pre-scaled
+    k = k_ref[0, :, 0].astype(jnp.float32)       # (block_size, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bs)
+    pos = p * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)
+    valid = pos <= len_ref[b]                    # (1, bs)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # (G, 1)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    # masked entries exponentiate to exactly 0 (guarded against the
+    # all-masked-page case where s - m_new could be 0 - 0)
+    pexp = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * corr + pexp.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        pexp, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (G, D)
+
+    @pl.when(p == n_pages - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-37)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_kernel(q, k_pages, v_pages, block_tables, lengths, *,
+                           interpret: bool = False):
+    """q: (B, H, D); k_pages/v_pages: (N, block_size, KH, D);
+    block_tables: (B, n_pages) int32 physical page ids; lengths: (B,) int32
+    last valid position (inclusive).  Returns (B, H, D) in q.dtype."""
+    B, H, D = q.shape
+    N, bs, KH, _ = k_pages.shape
+    G = H // KH
+    n_pages = block_tables.shape[1]
+    scale = D ** -0.5
+    qr = (q.astype(jnp.float32) * scale).reshape(B, KH, G, D)
+
+    kern = functools.partial(_kernel, block_size=bs, n_pages=n_pages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # block_tables, lengths
+        grid=(B, KH, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, p, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, p, bt, ln: (bt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, p, bt, ln: (bt[b, p], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, p, bt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),     # running max m
+            pltpu.VMEM((G, 1), jnp.float32),     # running sum l
+            pltpu.VMEM((G, D), jnp.float32),     # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="paged_attention_decode",
+    )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      qr, k_pages, v_pages)
+    return out.reshape(B, H, D)

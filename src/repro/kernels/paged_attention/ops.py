@@ -1,0 +1,35 @@
+"""Public paged-attention entry point with backend dispatch.
+
+Routes through the same trace-time backend switch as the BitParticle matmul
+(``core.bp_matmul.resolve_matmul_backend``), so the serving engine's
+``use_matmul_backend`` scoping covers the attention kernel too:
+
+  ``auto``              Pallas kernel on TPU, XLA gather elsewhere.
+  ``kernel``            force the compiled Pallas kernel.
+  ``kernel_interpret``  the kernel under the Pallas interpreter (CPU
+                        validation — the parity oracle for tests).
+  ``xla``               the dense-gather reference (:mod:`.ref`).
+
+int8 KV scale pages always take the XLA path (the kernel gathers float
+pages only).
+"""
+
+from __future__ import annotations
+
+from repro.core.bp_matmul import resolve_matmul_backend
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+from repro.kernels.paged_attention.ref import paged_attention_xla
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    k_scale_pages=None, v_scale_pages=None,
+                    backend: str = None):
+    """Paged decode attention; see :func:`.ref.paged_attention_xla` for the
+    argument contract.  ``backend`` overrides the process/trace default."""
+    b = resolve_matmul_backend(backend)
+    if b == "xla" or k_scale_pages is not None or v_scale_pages is not None:
+        return paged_attention_xla(
+            q, k_pages, v_pages, block_tables, lengths,
+            k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages)
+    return paged_attention_kernel(q, k_pages, v_pages, block_tables, lengths,
+                                  interpret=(b == "kernel_interpret"))

@@ -45,12 +45,34 @@ def loss_fn(params, cfg: ArchConfig, batch):
     return module_for(cfg).loss_fn(params, cfg, batch)
 
 
-def prefill(params, cfg: ArchConfig, batch, cache_T: int):
-    return module_for(cfg).prefill(params, cfg, batch, cache_T)
+def prefill(params, cfg: ArchConfig, batch, cache_T: int, prompt_lens=None):
+    """``prompt_lens`` (B,) enables ragged right-padded prompt batches for
+    families whose prefill is position-independent of right padding
+    (attention KV families); recurrent families (ssm/hybrid) integrate every
+    token into their state and do not support it."""
+    if prompt_lens is None:
+        return module_for(cfg).prefill(params, cfg, batch, cache_T)
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError(
+            f"family {cfg.family!r} has recurrent state: right-padded "
+            f"ragged prefill would corrupt it (use exact-length groups)")
+    return module_for(cfg).prefill(params, cfg, batch, cache_T,
+                                   prompt_lens=prompt_lens)
 
 
 def decode_step(params, cfg: ArchConfig, batch):
     return module_for(cfg).decode_step(params, cfg, batch)
+
+
+def decode_step_paged(params, cfg: ArchConfig, batch):
+    """Block-paged decode (``batch`` carries ``block_tables`` + per-slot
+    ``cache_len``); position-indexed KV families only."""
+    mod = module_for(cfg)
+    if not hasattr(mod, "decode_step_paged"):
+        raise ValueError(
+            f"family {cfg.family!r} has no paged decode path; "
+            f"use the slab cache backend")
+    return mod.decode_step_paged(params, cfg, batch)
 
 
 # ---------------------------------------------------------------------------
@@ -113,6 +135,53 @@ def cache_specs(cfg: ArchConfig, B: int, cache_T: int):
         return {"k": _sds(kv, DTYPE), "v": _sds(kv, DTYPE),
                 "cross_k": _sds(ckv, DTYPE), "cross_v": _sds(ckv, DTYPE)}
     raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Block-paged decode caches (paged cache backend)
+# ---------------------------------------------------------------------------
+
+def paged_cache_specs(cfg: ArchConfig, num_blocks: int, block_size: int):
+    """ShapeDtypeStruct pytree of the block-paged decode cache: every KV
+    leaf becomes (L, num_blocks, block_size, heads...).  Position-indexed
+    KV families only — recurrent state has no sequence axis to page."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"no paged cache layout for family {cfg.family!r}")
+    hd = cfg.resolved_head_dim
+    kv = (cfg.num_layers, num_blocks, block_size, cfg.num_kv_heads, hd)
+    if cfg.kv_cache_int8:
+        sc = (cfg.num_layers, num_blocks, block_size, cfg.num_kv_heads)
+        return {"k": _sds(kv, jnp.int8), "k_scale": _sds(sc, jnp.float32),
+                "v": _sds(kv, jnp.int8), "v_scale": _sds(sc, jnp.float32)}
+    return {"k": _sds(kv, DTYPE), "v": _sds(kv, DTYPE)}
+
+
+def zeros_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        paged_cache_specs(cfg, num_blocks, block_size))
+
+
+def paged_insert(cfg: ArchConfig, pages, src_cache, block_ids, src_index=0):
+    """Scatter request ``src_index`` of a prefill cache (padded to
+    ``len(block_ids) * block_size`` positions) into physical pages.
+
+    ``block_ids``: (P,) int32 — logical block i of the sequence lands in
+    physical page ``block_ids[i]``.  Blocks that must NOT be written
+    (prefix-sharing hits) are redirected to the trash page (id 0) by the
+    caller; ``block_ids``/``src_index`` may be traced (one jit covers every
+    admission of a given prefill batch shape)."""
+    block_ids = jnp.asarray(block_ids, jnp.int32)
+
+    def put(page, src):
+        # src (L, B, T, ...) -> row (L, T, ...) -> (L, P, bs, ...)
+        row = jax.lax.dynamic_index_in_dim(src, src_index, axis=1,
+                                           keepdims=False)
+        L, T = row.shape[0], row.shape[1]
+        P = block_ids.shape[0]
+        blocked = row.reshape(L, P, T // P, *row.shape[2:])
+        return page.at[:, block_ids].set(blocked.astype(page.dtype))
+
+    return jax.tree.map(put, pages, src_cache)
 
 
 # ---------------------------------------------------------------------------

@@ -147,6 +147,27 @@ def write_kv(cache, new, cache_len):
     return cache.at[jnp.arange(B), cache_len].set(new[:, 0].astype(cache.dtype))
 
 
+def paged_write_kv(pages, new, block_ids, offsets):
+    """Write ``new`` (B, 1, ...) into block-paged ``pages`` (N, bs, ...) at
+    per-sequence (physical block, in-block offset) positions.  Inactive rows
+    target the trash block (id 0) — written, never read."""
+    return pages.at[block_ids, offsets].set(new[:, 0].astype(pages.dtype))
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, cache_len, *,
+                           k_scale=None, v_scale=None):
+    """q (B,1,H,D) against block-paged K/V (N, bs, KH, D) through per-slot
+    block tables (B, P); positions <= cache_len valid, exactly as
+    :func:`decode_attention`.  Dispatches to the Pallas paged-attention
+    kernel / XLA gather oracle per the active matmul backend."""
+    from repro.kernels.paged_attention.ops import paged_attention
+    B, _, H, D = q.shape
+    out = paged_attention(q[:, 0], k_pages, v_pages, block_tables,
+                          jnp.asarray(cache_len),
+                          k_scale_pages=k_scale, v_scale_pages=v_scale)
+    return out[:, None]
+
+
 def quantize_kv(k, v):
     """Per (batch, position, head) symmetric int8 quantization of K/V.
 

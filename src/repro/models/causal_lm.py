@@ -164,20 +164,30 @@ def loss_fn(params, cfg, batch):
     return loss + 0.01 * aux, metrics
 
 
-def prefill(params, cfg, batch, cache_T: int):
+def prefill(params, cfg, batch, cache_T: int, prompt_lens=None):
     """Run the prompt, return (last-position logits, KV cache padded to
-    cache_T)."""
+    cache_T).
+
+    ``prompt_lens`` (B,) enables ragged right-padded batches (the
+    scheduler's power-of-two prefill buckets): logits are gathered at each
+    row's own last valid position.  Causal masking makes valid positions
+    independent of the right padding, and padded cache positions sit beyond
+    ``cache_len`` — masked in decode until overwritten."""
     x, _, cache = forward(params, cfg, batch, return_cache=True,
                           cache_T=cache_T)
-    last = x[:, -1:, :]
+    if prompt_lens is None:
+        last = x[:, -1:, :]
+    else:
+        idx = (jnp.asarray(prompt_lens, jnp.int32) - 1)[:, None, None]
+        last = jnp.take_along_axis(x, idx, axis=1)
     logits = logits_from_hidden(params, cfg, last)[:, 0]
     return logits, cache
 
 
-def decode_step(params, cfg, batch):
-    """One-token decode.  batch: tokens (B,1), cache {k,v}: (L,B,T,KH,Dh),
-    cache_len: scalar int32 (whole batch at one depth) or (B,) int32
-    (per-slot depths, continuous batching).  Returns (logits (B,V), cache)."""
+def _decode_common(params, cfg, batch, *, write_fn, attend_fn):
+    """Shared one-token decode body; the cache layout enters only through
+    ``write_fn(cache_leaf, new)`` (install the new token's K/V/scales) and
+    ``attend_fn(q, kc, vc, ksc, vsc)`` (attention over that layout)."""
     mode = cfg.matmul_mode
     tokens, cache = batch["tokens"], batch["cache"]
     cache_len = jnp.asarray(batch["cache_len"])
@@ -203,16 +213,12 @@ def decode_step(params, cfg, batch):
         k = layers.apply_rope(k, cos, sin)
         if int8kv:
             k, ks_, v, vs_ = attention.quantize_kv(k, v)
-            ksc = attention.write_kv(ksc, ks_, cache_len)
-            vsc = attention.write_kv(vsc, vs_, cache_len)
-        kc = attention.write_kv(kc, k, cache_len)
-        vc = attention.write_kv(vc, v, cache_len)
-        kc = shard(kc, "batch", "cache_seq", "heads", None)
-        vc = shard(vc, "batch", "cache_seq", "heads", None)
-        out = attention.decode_attention(
-            q, kc, vc, cache_len,
-            k_scale=ksc if int8kv else None,
-            v_scale=vsc if int8kv else None)
+            ksc = write_fn(ksc, ks_)
+            vsc = write_fn(vsc, vs_)
+        kc = write_fn(kc, k)
+        vc = write_fn(vc, v)
+        out = attend_fn(q, kc, vc,
+                        ksc if int8kv else None, vsc if int8kv else None)
         out = out.reshape(B, 1, cfg.num_heads * hd)
         x = x + layers.dense(lp["attn"]["wo"], out, mode)
         h = layers.rms_norm(lp["ffn_norm"], x, cfg.norm_eps)
@@ -237,3 +243,51 @@ def decode_step(params, cfg, batch):
     x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = logits_from_hidden(params, cfg, x)[:, 0]
     return logits, new_cache
+
+
+def decode_step(params, cfg, batch):
+    """One-token decode.  batch: tokens (B,1), cache {k,v}: (L,B,T,KH,Dh),
+    cache_len: scalar int32 (whole batch at one depth) or (B,) int32
+    (per-slot depths, continuous batching).  Returns (logits (B,V), cache)."""
+    cache_len = jnp.asarray(batch["cache_len"])
+
+    def write_fn(c, new):
+        c = attention.write_kv(c, new, cache_len)
+        if c.ndim == 4:   # KV leaves get the cache mesh axes; scales do not
+            c = shard(c, "batch", "cache_seq", "heads", None)
+        return c
+
+    def attend_fn(q, kc, vc, ksc, vsc):
+        return attention.decode_attention(q, kc, vc, cache_len,
+                                          k_scale=ksc, v_scale=vsc)
+
+    return _decode_common(params, cfg, batch,
+                          write_fn=write_fn, attend_fn=attend_fn)
+
+
+def decode_step_paged(params, cfg, batch):
+    """One-token decode against a block-paged KV cache.
+
+    batch: tokens (B,1); cache {k,v[,k_scale,v_scale]} with KV paged as
+    (L, num_blocks, block_size, KH, Dh); block_tables (B, P) int32 physical
+    page ids; cache_len (B,) int32 per-slot positions.  The new token's K/V
+    is scattered to (table[pos // bs], pos % bs) per slot, and attention
+    gathers through the block table (Pallas kernel / XLA oracle per the
+    active backend).  The page pool has no batch/cache_seq axes to lay on
+    the mesh, so paged leaves stay replicated.  Returns (logits, cache)."""
+    cache_len = jnp.asarray(batch["cache_len"])
+    tables = jnp.asarray(batch["block_tables"], jnp.int32)
+    bs = batch["cache"]["k"].shape[2]
+    # physical write target per slot: block table entry at pos // bs
+    blk = jnp.take_along_axis(tables, (cache_len // bs)[:, None], axis=1)[:, 0]
+    off = cache_len % bs
+
+    def write_fn(c, new):
+        return attention.paged_write_kv(c, new, blk, off)
+
+    def attend_fn(q, kc, vc, ksc, vsc):
+        return attention.paged_decode_attention(q, kc, vc, tables, cache_len,
+                                                k_scale=ksc, v_scale=vsc)
+
+    return _decode_common(params, cfg, batch,
+                          write_fn=write_fn, attend_fn=attend_fn)

@@ -147,8 +147,10 @@ def loss_fn(params, cfg, batch):
     return loss, {"ce_loss": loss, "valid_tokens": valid.sum()}
 
 
-def prefill(params, cfg, batch, cache_T: int):
-    """Encode source + run decoder prompt; cache = self KV + cross KV."""
+def prefill(params, cfg, batch, cache_T: int, prompt_lens=None):
+    """Encode source + run decoder prompt; cache = self KV + cross KV.
+    ``prompt_lens`` (B,) supports ragged right-padded decoder prompts
+    (causal self-attention keeps valid rows independent of the padding)."""
     from repro.models.causal_lm import logits_from_hidden
     tokens = batch["tokens"]
     B, S = tokens.shape
@@ -161,7 +163,12 @@ def prefill(params, cfg, batch, cache_T: int):
     x, ys = _decode_stack(params, cfg, x, cos, sin, cks, cvs,
                           return_cache=True, cache_T=cache_T)
     ks, vs = ys
-    logits = logits_from_hidden(params, cfg, x[:, -1:, :])[:, 0]
+    if prompt_lens is None:
+        last = x[:, -1:, :]
+    else:
+        idx = (jnp.asarray(prompt_lens, jnp.int32) - 1)[:, None, None]
+        last = jnp.take_along_axis(x, idx, axis=1)
+    logits = logits_from_hidden(params, cfg, last)[:, 0]
     return logits, {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs}
 
 

@@ -6,15 +6,22 @@ scheduler's lead window ~ the inter-group elasticity parameter E.
 See docs/serving.md for the full correspondence.
 """
 
-from repro.serving.cache_manager import CacheManager
+from repro.serving.block_pool import (BlockPool, NoFreeBlocks,
+                                      PagedCacheManager)
+from repro.serving.cache_manager import (BaseCacheManager, CacheManager,
+                                         make_cache_manager)
 from repro.serving.engine import (GenerationResult, RequestResult,
                                   ServeConfig, ServeReport, ServingEngine)
 from repro.serving.queue import Request, RequestQueue, RequestState
 from repro.serving.scheduler import QuasiSyncScheduler, SchedulerConfig
 
 __all__ = [
+    "BaseCacheManager",
+    "BlockPool",
     "CacheManager",
     "GenerationResult",
+    "NoFreeBlocks",
+    "PagedCacheManager",
     "QuasiSyncScheduler",
     "Request",
     "RequestQueue",
@@ -24,4 +31,5 @@ __all__ = [
     "ServeReport",
     "ServingEngine",
     "SchedulerConfig",
+    "make_cache_manager",
 ]

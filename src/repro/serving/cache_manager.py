@@ -1,15 +1,22 @@
-"""Slot-based cache manager: fixed-capacity per-slot KV / recurrent state.
+"""Decode-cache managers: slot accounting base + the slab backing store.
 
-Owns ONE pooled decode cache of ``n_slots`` slots (the batch axis of every
-cache leaf, located via ``api.cache_batch_axes``) plus the per-slot sequence
-positions.  Works for every family on the ``models/api.py`` surface —
-attention KV caches (dense/moe/vlm/audio) and O(1) recurrent state
-(RWKV/Zamba) alike, because slot surgery is expressed as pytree ops over the
-family's own cache structure.
+Two backing stores sit behind one slot-level interface (``alloc`` / ``free``
+/ ``insert`` / ``advance`` / ``cache_len_vector`` / ``divergence``):
+
+  * **slab** (:class:`CacheManager`, this module) — ONE pooled decode cache
+    of ``n_slots`` slots, each a fixed worst-case ``cache_T`` region.  Works
+    for every family on the ``models/api.py`` surface — attention KV caches
+    and O(1) recurrent state alike — because slot surgery is expressed as
+    pytree ops over the family's own cache structure.
+  * **paged** (:class:`repro.serving.block_pool.PagedCacheManager`) —
+    fixed-size KV blocks allocated on demand through per-slot block tables,
+    with automatic prefix sharing and copy-on-write.  Position-indexed KV
+    families only.
 
 A slot is the serving analogue of one PE-column (synchronization group) in
 the quasi-sync array: it owns private state and advances at its own sequence
-position while the pool steps as one batched unit.
+position while the pool steps as one batched unit.  ``make_cache_manager``
+is the facade the engine uses to pick a store per ``ServeConfig``.
 """
 
 from __future__ import annotations
@@ -23,40 +30,34 @@ import jax.numpy as jnp
 from repro.models import api
 
 
-class CacheManager:
-    def __init__(self, cfg, n_slots: int, cache_T: int):
+class BaseCacheManager:
+    """Slot accounting shared by every backing store: occupancy, per-slot
+    sequence positions, and the vectorized position bookkeeping that both
+    ``advance`` and ``divergence`` read."""
+
+    def __init__(self, cfg, n_slots: int):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         self.cfg = cfg
         self.n_slots = n_slots
-        self.cache_T = cache_T
-        self.cache = api.zeros_cache(cfg, n_slots, cache_T)
         self.lengths = np.zeros(n_slots, np.int32)   # per-slot seq position
-        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self._free_slots: List[int] = list(range(n_slots - 1, -1, -1))
         self._occupied = np.zeros(n_slots, bool)
-        # One compiled insert covers every (slot, src_index) pair; recompiles
-        # only per distinct prefill batch shape.
-        self._insert = jax.jit(
-            lambda pool, src, slot, i: api.slot_insert(cfg, pool, src, slot, i))
 
     # -- slot accounting ----------------------------------------------------
 
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        return len(self._free_slots)
 
     @property
     def n_active(self) -> int:
-        return self.n_slots - len(self._free)
-
-    def fits(self, prompt_len: int, max_new_tokens: int) -> bool:
-        """Does prompt + generation fit in one slot's capacity?"""
-        return prompt_len + max_new_tokens <= self.cache_T
+        return self.n_slots - len(self._free_slots)
 
     def alloc(self) -> int:
-        if not self._free:
+        if not self._free_slots:
             raise RuntimeError("no free slot")
-        slot = self._free.pop()
+        slot = self._free_slots.pop()
         self._occupied[slot] = True
         return slot
 
@@ -65,13 +66,60 @@ class CacheManager:
             raise ValueError(f"slot {slot} is not occupied")
         self._occupied[slot] = False
         self.lengths[slot] = 0
-        self._free.append(slot)
+        self._free_slots.append(slot)
+
+    def advance(self, slots):
+        """Bump the sequence position of the given slots by one token —
+        one vectorized scatter-add, not a per-slot Python loop."""
+        np.add.at(self.lengths, np.asarray(list(slots), np.intp), 1)
+
+    def cache_len_vector(self) -> jnp.ndarray:
+        """(n_slots,) per-slot positions for ``decode_step``.  Free slots sit
+        at 0: their writes land in regions never read for an admitted
+        request (overwritten by the next ``insert`` in the slab store,
+        pointed at the trash block in the paged store)."""
+        return jnp.asarray(self.lengths)
+
+    def divergence(self) -> int:
+        """Spread of active-slot positions (the quasi-sync E analogue) —
+        reads the same vectorized ``lengths``/``_occupied`` state that
+        ``advance`` maintains."""
+        active = self.lengths[self._occupied]
+        if active.size == 0:
+            return 0
+        return int(active.max() - active.min())
+
+    def admissible_prefix(self, requests) -> int:
+        """How many front-of-queue requests could be admitted right now.
+        The slab rule is one free slot per request; the paged store
+        overrides this with its free-block budget."""
+        return min(len(requests), self.n_free)
+
+
+class CacheManager(BaseCacheManager):
+    """Slab store: fixed-capacity per-slot KV / recurrent state."""
+
+    def __init__(self, cfg, n_slots: int, cache_T: int):
+        super().__init__(cfg, n_slots)
+        self.cache_T = cache_T
+        self.cache = api.zeros_cache(cfg, n_slots, cache_T)
+        # One compiled insert covers every (slot, src_index) pair; recompiles
+        # only per distinct prefill batch shape.
+        self._insert = jax.jit(
+            lambda pool, src, slot, i: api.slot_insert(cfg, pool, src, slot, i))
+
+    def fits(self, prompt_len: int, max_new_tokens: int) -> bool:
+        """Does prompt + generation fit in one slot's capacity?"""
+        return prompt_len + max_new_tokens <= self.cache_T
 
     # -- cache surgery ------------------------------------------------------
 
-    def insert(self, slot: int, src_cache, length: int, src_index: int = 0):
+    def insert(self, slot: int, src_cache, length: int, src_index: int = 0,
+               tokens=None):
         """Install request ``src_index`` of a prefill cache (padded to this
-        pool's cache_T) into ``slot`` and set its sequence position."""
+        pool's cache_T) into ``slot`` and set its sequence position.
+        ``tokens`` is accepted for interface parity with the paged store
+        (which needs the prompt for prefix sharing) and ignored here."""
         if not self._occupied[slot]:
             raise ValueError(f"slot {slot} must be alloc()ed before insert")
         self.cache = self._insert(self.cache, src_cache,
@@ -82,23 +130,16 @@ class CacheManager:
         """Adopt the cache returned by a batched decode step."""
         self.cache = new_cache
 
-    def advance(self, slots):
-        """Bump the sequence position of the given slots by one token."""
-        for s in slots:
-            self.lengths[s] += 1
 
-    def cache_len_vector(self) -> jnp.ndarray:
-        """(n_slots,) per-slot positions for ``decode_step``.  Free slots sit
-        at 0: their writes land in a region fully overwritten by the next
-        ``insert`` (prefill caches are padded to cache_T), so they never
-        leak into an admitted request."""
-        return jnp.asarray(self.lengths)
-
-    # -- introspection ------------------------------------------------------
-
-    def divergence(self) -> int:
-        """Spread of active-slot positions (the quasi-sync E analogue)."""
-        active = self.lengths[self._occupied]
-        if active.size == 0:
-            return 0
-        return int(active.max() - active.min())
+def make_cache_manager(cfg, n_slots: int, cache_T: int, *,
+                       backend: str = "slab", block_size: int = 16,
+                       num_blocks: Optional[int] = None) -> BaseCacheManager:
+    """Facade: build the backing store selected by ``backend``."""
+    if backend == "slab":
+        return CacheManager(cfg, n_slots, cache_T)
+    if backend == "paged":
+        from repro.serving.block_pool import PagedCacheManager
+        return PagedCacheManager(cfg, n_slots, cache_T,
+                                 block_size=block_size, num_blocks=num_blocks)
+    raise ValueError(f"unknown cache_backend {backend!r}; "
+                     f"expected 'slab' or 'paged'")

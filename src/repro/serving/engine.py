@@ -48,9 +48,11 @@ import jax.numpy as jnp
 from repro.core import bp_matmul
 from repro.models import api
 from repro.models.layers import quantize_dense_params
-from repro.serving.cache_manager import CacheManager
+from repro.serving.block_pool import NoFreeBlocks, PagedCacheManager
+from repro.serving.cache_manager import CacheManager, make_cache_manager
 from repro.serving.queue import Request, RequestQueue, RequestState
-from repro.serving.scheduler import QuasiSyncScheduler, SchedulerConfig
+from repro.serving.scheduler import (QuasiSyncScheduler, SchedulerConfig,
+                                     prefill_bucket_len)
 
 
 @dataclasses.dataclass
@@ -60,6 +62,11 @@ class ServeConfig:
     eos_id: Optional[int] = None
     cache_margin: int = 8             # extra cache slots beyond prompt+new
     decode_chunk: int = 8             # tokens per jitted decode scan dispatch
+    # decode-cache backing store: "slab" reserves a worst-case cache_T
+    # region per slot; "paged" allocates fixed-size KV blocks on demand
+    # with prefix sharing + copy-on-write (position-indexed KV families)
+    cache_backend: str = "slab"
+    block_size: int = 16              # tokens per KV block (paged backend)
 
 
 @dataclasses.dataclass
@@ -98,6 +105,12 @@ class ServeReport:
     slot_utilization: float           # mean occupied-slot fraction per step
     max_divergence: int               # max spread of per-slot positions
     deployment: Optional[dict] = None # BitParticle per-layer cycle/energy
+    cache_backend: str = "slab"
+    n_preemptions: int = 0            # paged: requests requeued on pool-dry
+    prefix_hit_blocks: int = 0        # paged: trie hits adopted by reference
+    cow_blocks: int = 0               # paged: copy-on-write block copies
+    peak_blocks_in_use: int = 0       # paged: max live blocks at any step
+    peak_active_slots: int = 0        # max concurrently-decoding requests
 
     @property
     def decode_tokens_per_s(self) -> float:
@@ -127,6 +140,12 @@ class ServingEngine:
         self.params = params
         self._prefill = self._jit(
             lambda p, b, t: api.prefill(p, self.cfg, b, t),
+            static_argnums=(2,))
+        # ragged variant: per-row last-position logits for power-of-two
+        # prefill buckets (compiles per bucket shape — O(log S) variants)
+        self._prefill_ragged = self._jit(
+            lambda p, b, t, lens: api.prefill(p, self.cfg, b, t,
+                                              prompt_lens=lens),
             static_argnums=(2,))
         self._decode = self._jit(lambda p, b: api.decode_step(p, self.cfg, b))
         # fused decode+sample entry points, built lazily per (temperature,
@@ -158,18 +177,20 @@ class ServingEngine:
     # Device-resident decode steps (sampling fused into the jitted step)
     # ------------------------------------------------------------------
 
-    def _decode_sample_fn(self, temperature: float):
+    def _decode_sample_fn(self, temperature: float, paged: bool = False):
         """Jitted (params, step, keys, counts) -> (tokens, new_cache) for the
         continuous path: decode + per-slot sampling in ONE dispatch, so only
         the (n_slots,) sampled tokens ever cross to the host — not the
-        (n_slots, V) logits."""
-        cache_key = (float(temperature),)
+        (n_slots, V) logits.  ``paged`` routes through the block-table
+        decode step (``step`` then carries ``block_tables``)."""
+        cache_key = (float(temperature), bool(paged))
         fn = self._decode_sample_jits.get(cache_key)
         if fn is not None:
             return fn
+        decode = api.decode_step_paged if paged else api.decode_step
 
         def step_fn(p, step, keys, counts):
-            logits, new_cache = api.decode_step(p, self.cfg, step)
+            logits, new_cache = decode(p, self.cfg, step)
             if temperature <= 0:
                 tok = jnp.argmax(logits, axis=-1)
             else:
@@ -313,7 +334,8 @@ class ServingEngine:
     def serve(self, requests: Sequence[Request], *, n_slots: int = 8,
               cache_T: Optional[int] = None,
               sched_cfg: Optional[SchedulerConfig] = None,
-              extras: Optional[Dict[int, dict]] = None) -> ServeReport:
+              extras: Optional[Dict[int, dict]] = None,
+              num_blocks: Optional[int] = None) -> ServeReport:
         """Continuously-batched generation over a request stream.
 
         ``requests``: ``serving.queue.Request`` objects; ``arrival_time`` is
@@ -324,14 +346,36 @@ class ServingEngine:
         arrays are stacked on a new leading batch axis, so model inputs
         whose batch axis is not leading (the vlm family's M-RoPE
         ``positions``, shaped (3, B, S)) cannot ride through ``extras``.
+
+        The decode cache is backed by ``ServeConfig.cache_backend``:
+        ``"slab"`` reserves ``cache_T`` per slot; ``"paged"`` allocates
+        ``block_size``-token blocks on demand (``num_blocks`` caps the pool
+        — default matches the slab footprint) with automatic prefix sharing
+        and LRU-backed preemption-and-requeue when the pool runs dry.
+        Greedy outputs are token-identical across backends.
         """
         requests = sorted(requests, key=lambda r: (r.arrival_time, r.request_id))
         if cache_T is None:
             need = [r.prompt_len + r.max_new_tokens for r in requests] or [1]
             cache_T = max(need) + self.serve_cfg.cache_margin
-        cm = CacheManager(self.cfg, n_slots, cache_T)
-        rq = RequestQueue(max_waiting=(sched_cfg or SchedulerConfig()).max_waiting)
+        cm = make_cache_manager(self.cfg, n_slots, cache_T,
+                                backend=self.serve_cfg.cache_backend,
+                                block_size=self.serve_cfg.block_size,
+                                num_blocks=num_blocks)
+        paged = isinstance(cm, PagedCacheManager)
+        if paged:
+            # prefill caches must slice into whole blocks
+            cache_T = cm.prefill_T
+        sched_cfg = sched_cfg if sched_cfg is not None else SchedulerConfig()
+        if sched_cfg.prefill_bucketing is None:
+            # pow2 buckets need right-padding-safe prefill: attention KV
+            # families without per-request extra inputs
+            ragged_ok = self.cfg.family not in ("ssm", "hybrid") and not extras
+            sched_cfg = dataclasses.replace(
+                sched_cfg, prefill_bucketing="pow2" if ragged_ok else "exact")
+        rq = RequestQueue(max_waiting=sched_cfg.max_waiting)
         sched = QuasiSyncScheduler(rq, cm, sched_cfg)
+        ragged = sched.bucketing == "pow2"
 
         # deque: submit_arrivals pops from the head every decode step, and
         # list.pop(0) is O(n) — O(n^2) over long request streams
@@ -342,7 +386,10 @@ class ServingEngine:
         now = 0.0
         prefill_s = 0.0
         t_decode = 0.0
-        decode_fn = self._decode_sample_fn(self.serve_cfg.temperature)
+        n_preempt = 0
+        peak_active = 0
+        decode_fn = self._decode_sample_fn(self.serve_cfg.temperature,
+                                           paged=paged)
 
         def submit_arrivals():
             while arrivals and arrivals[0].arrival_time <= now:
@@ -352,12 +399,55 @@ class ServingEngine:
                     continue
                 rq.submit(req, now)
 
+        def pick_victim() -> Optional[int]:
+            """Preemption victim: the most recently admitted active request
+            — it has the least progress to replay (oldest requests keep
+            theirs; unreferenced prefix-cache blocks were already reclaimed
+            LRU-first by the pool)."""
+            cands = [(req.admitted_at or 0.0, req.request_id, slot)
+                     for slot, req in active.items()]
+            if not cands:
+                return None
+            return max(cands)[2]
+
+        def preempt(slot: int):
+            nonlocal n_preempt
+            req = active.pop(slot)
+            cm.free(slot)
+            req.preempt()           # -> WAITING, tokens queued for replay
+            rq.push_front(req)
+            n_preempt += 1
+
+        def insert_with_preemption(slot, cache, req, src_index):
+            while True:
+                try:
+                    cm.insert(slot, cache, req.prompt_len,
+                              src_index=src_index, tokens=req.prompt)
+                    return
+                except NoFreeBlocks:
+                    # the inserting request holds no slot entry in `active`
+                    # yet, so it can never preempt itself here
+                    victim = pick_victim()
+                    if victim is None:
+                        raise RuntimeError(
+                            "paged pool cannot hold a single admitted "
+                            "request; increase num_blocks")
+                    preempt(victim)
+
         def admit(group: List[Request]):
             nonlocal prefill_s
             for req in group:
                 req.transition(RequestState.PREFILL)
                 req.admitted_at = now
-            batch = {"tokens": np.stack([r.prompt for r in group])}
+            lens = np.asarray([r.prompt_len for r in group], np.int32)
+            # pow2 buckets: right-pad hetero prompts to one fused prefill
+            # shape (valid rows are causal-mask-independent of the padding)
+            pad_to = (prefill_bucket_len(int(lens.max()), cm.cache_T)
+                      if ragged else int(lens.max()))
+            toks = np.zeros((len(group), pad_to), np.int32)
+            for j, r in enumerate(group):
+                toks[j, :r.prompt_len] = r.prompt
+            batch = {"tokens": toks}
             if extras:
                 keys = sorted({k for r in group
                                for k in (extras.get(r.request_id) or {})})
@@ -376,20 +466,30 @@ class ServingEngine:
                     batch[k] = np.stack(
                         [np.asarray(extras[r.request_id][k]) for r in group])
             t0 = time.perf_counter()
-            logits, cache = self._prefill(self.params, batch, cache_T)
+            if ragged:
+                logits, cache = self._prefill_ragged(self.params, batch,
+                                                     cache_T,
+                                                     jnp.asarray(lens))
+            else:
+                logits, cache = self._prefill(self.params, batch, cache_T)
             logits.block_until_ready()
             prefill_s += time.perf_counter() - t0
             for j, req in enumerate(group):
-                tok = int(np.asarray(
-                    self._sample(logits[j:j + 1], self._request_key(req, 0)))[0])
+                if req.replay:
+                    # preempted request: re-emit its original first token
+                    tok = req.replay.pop(0)
+                else:
+                    tok = int(np.asarray(self._sample(
+                        logits[j:j + 1], self._request_key(req, 0)))[0])
                 req.tokens.append(tok)
-                req.first_token_at = now
+                if req.first_token_at is None:
+                    req.first_token_at = now
                 reason = self._finished(req, tok)
                 if reason is not None:
                     req.finish(now, reason)
                     continue
                 slot = cm.alloc()
-                cm.insert(slot, cache, req.prompt_len, src_index=j)
+                insert_with_preemption(slot, cache, req, j)
                 req.slot = slot
                 req.transition(RequestState.DECODE)
                 active[slot] = req
@@ -411,6 +511,18 @@ class ServingEngine:
                 continue
 
             slots = list(active.keys())
+            if paged:
+                # every active slot must own a writable block for this
+                # step's token: allocate at block boundaries, copy-on-write
+                # shared tails; preempt-and-requeue when the pool runs dry
+                while slots:
+                    if cm.prepare_append(slots) is None:
+                        break
+                    preempt(pick_victim())   # newest admission goes
+                    slots = list(active.keys())
+                if not slots:
+                    continue
+
             # fixed (n_slots, ...) shapes: decode + fold + sample fused into
             # ONE jitted dispatch, free-slot rows sampled and discarded; only
             # the (n_slots,) sampled tokens transfer to host, never logits
@@ -420,6 +532,8 @@ class ServingEngine:
             step = {"tokens": jnp.asarray(last_tok[:, None]),
                     "cache": cm.cache,
                     "cache_len": cm.cache_len_vector()}
+            if paged:
+                step["block_tables"] = cm.block_tables_device()
             t0 = time.perf_counter()
             toks, new_cache = decode_fn(self.params, step,
                                         jnp.asarray(slot_keys),
@@ -429,11 +543,18 @@ class ServingEngine:
             cm.update(new_cache)
             cm.advance(slots)
             sched.observe_decode_step()
+            peak_active = max(peak_active, len(slots))
             now += 1.0
             toks_np = np.asarray(toks)
             for slot in slots:
                 req = active[slot]
-                tok = int(toks_np[slot])
+                if req.replay:
+                    # replaying a preemption: force the recorded token (the
+                    # greedy resample equals it; this also pins temperature
+                    # sampling to the original stream)
+                    tok = req.replay.pop(0)
+                else:
+                    tok = int(toks_np[slot])
                 req.tokens.append(tok)
                 last_tok[slot] = tok
                 reason = self._finished(req, tok)
@@ -468,6 +589,14 @@ class ServingEngine:
             slot_utilization=sched.slot_utilization,
             max_divergence=sched.max_divergence,
             deployment=self.deployment_estimate(),
+            cache_backend=self.serve_cfg.cache_backend,
+            n_preemptions=n_preempt,
+            prefix_hit_blocks=(cm.pool.n_prefix_hits if paged else 0),
+            cow_blocks=(cm.pool.n_cow if paged else 0),
+            # the pool's own high-water mark: catches allocation peaks hit
+            # during prefill inserts, not just post-decode-step samples
+            peak_blocks_in_use=(cm.pool.peak_live if paged else 0),
+            peak_active_slots=peak_active,
         )
 
     # ------------------------------------------------------------------

@@ -33,7 +33,9 @@ class RequestState(enum.Enum):
 _ALLOWED = {
     RequestState.WAITING: {RequestState.PREFILL, RequestState.DONE},
     RequestState.PREFILL: {RequestState.DECODE, RequestState.DONE},
-    RequestState.DECODE: {RequestState.DONE},
+    # DECODE -> WAITING is preemption: the paged backend reclaims the
+    # request's blocks and requeues it for a token-exact replay
+    RequestState.DECODE: {RequestState.DONE, RequestState.WAITING},
     RequestState.DONE: set(),
 }
 
@@ -59,6 +61,11 @@ class Request:
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     finish_reason: Optional[str] = None      # "eos" | "length" | "rejected"
+    # tokens generated before a preemption, re-emitted verbatim on replay
+    # (the engine forces them over the resampled ones, so a preempted
+    # request finishes with exactly the tokens it would have produced)
+    replay: List[int] = dataclasses.field(default_factory=list)
+    n_preemptions: int = 0
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -94,6 +101,15 @@ class Request:
         self.finish_reason = reason
         self.slot = None
 
+    def preempt(self):
+        """Back to WAITING with generated-so-far tokens queued for replay
+        (prepended to any replay tail a double preemption left behind)."""
+        self.transition(RequestState.WAITING)
+        self.replay = self.tokens + self.replay
+        self.tokens = []
+        self.slot = None
+        self.n_preemptions += 1
+
 
 class RequestQueue:
     """Bounded FIFO of WAITING requests (admission control at submit)."""
@@ -107,6 +123,19 @@ class RequestQueue:
 
     def __len__(self) -> int:
         return len(self._waiting)
+
+    def peek(self) -> List[Request]:
+        """The waiting requests in FIFO order (not dequeued) — the
+        scheduler sizes its admissible prefix against this."""
+        return list(self._waiting)
+
+    def push_front(self, request: Request):
+        """Requeue a preempted request at the head (it was already admitted
+        once; it does not count against ``max_waiting`` again)."""
+        if request.state is not RequestState.WAITING:
+            raise ValueError(
+                f"cannot requeue request in state {request.state}")
+        self._waiting.insert(0, request)
 
     def reject(self, request: Request, now: float):
         """Mark a request rejected (admission control) and count it."""

@@ -12,23 +12,35 @@ This scheduler is the request-level mirror of the array schedule:
     position (per-slot ``cache_len``), evicted the moment it finishes;
   * the admission queue ~ per-PE operand queues (depth = ``max_waiting``);
   * ``lead_window`` ~ the paper's E: an admissible request (arrived + free
-    slot) may be deferred at most E decode steps so that several admissions
-    share one prefill sync, exactly as the array's weight buffer holds E+1
-    weight versions to amortize group re-sync.  E = 0 degenerates to
-    admit-immediately (sync every step); E -> inf with ``n_slots`` arrivals
-    degenerates to static batching.
+    capacity) may be deferred at most E decode steps so that several
+    admissions share one prefill sync, exactly as the array's weight buffer
+    holds E+1 weight versions to amortize group re-sync.  E = 0 degenerates
+    to admit-immediately (sync every step); E -> inf with ``n_slots``
+    arrivals degenerates to static batching.
+
+Admissibility is delegated to the cache manager
+(``admissible_prefix``): the slab store admits one request per free slot
+(worst-case reservation); the paged store admits by **free-block budget**
+with prefix-sharing hits counted — the elastic unit shrinks from a whole
+slot drain to a single block.
+
+Prefill fusion buckets admissions by padded power-of-two prompt length
+(``prefill_bucketing="pow2"``), so heterogeneous prompts share one prefill
+sync and the engine compiles O(log S) prefill shape variants instead of one
+per distinct length.  Recurrent-state families use ``"exact"`` buckets
+(right padding would corrupt their state).
 
 The scheduler is pure policy: it never touches device state.  The engine
-asks it each iteration what to admit; prefills, eviction, and decode are the
-engine's job.
+asks it each iteration what to admit; prefills, eviction, preemption, and
+decode are the engine's job.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
-from repro.serving.cache_manager import CacheManager
+from repro.serving.cache_manager import BaseCacheManager
 from repro.serving.queue import Request, RequestQueue
 
 
@@ -37,14 +49,34 @@ class SchedulerConfig:
     lead_window: int = 4          # E: max decode steps an admission may wait
     max_waiting: int = 256        # admission-queue depth (Q analogue)
     max_prefill_batch: int = 8    # admissions fused into one prefill call
+    # prefill fusion buckets: "pow2" pads prompts up to the next power of
+    # two so heterogeneous lengths share one prefill; "exact" fuses only
+    # equal lengths; None = engine picks per family (pow2 where right
+    # padding is safe, exact for recurrent state / extra prefill inputs)
+    prefill_bucketing: Optional[str] = None
+
+
+def prefill_bucket_len(prompt_len: int, cache_T: Optional[int] = None) -> int:
+    """Padded power-of-two prefill length for ``prompt_len`` (clamped to the
+    cache capacity so a bucket never exceeds what prefill can hold)."""
+    b = 1 << max(prompt_len - 1, 0).bit_length()
+    if cache_T is not None:
+        b = min(b, cache_T)
+    return max(b, 1)
 
 
 class QuasiSyncScheduler:
-    def __init__(self, queue: RequestQueue, cache_mgr: CacheManager,
+    def __init__(self, queue: RequestQueue, cache_mgr: BaseCacheManager,
                  cfg: SchedulerConfig = None):
         self.queue = queue
         self.cache_mgr = cache_mgr
         self.cfg = cfg if cfg is not None else SchedulerConfig()
+        if self.cfg.prefill_bucketing not in (None, "exact", "pow2"):
+            raise ValueError(
+                f"unknown prefill_bucketing "
+                f"{self.cfg.prefill_bucketing!r}; expected 'pow2', 'exact' "
+                f"or None (auto)")
+        self.bucketing = self.cfg.prefill_bucketing or "exact"
         self.pending_wait = 0     # decode steps the current admissible set waited
         self.n_syncs = 0
         self.n_decode_steps = 0
@@ -53,14 +85,20 @@ class QuasiSyncScheduler:
 
     # -- policy -------------------------------------------------------------
 
+    def _bucket(self, prompt_len: int) -> int:
+        if self.bucketing == "pow2":
+            return prefill_bucket_len(prompt_len,
+                                      getattr(self.cache_mgr, "cache_T", None))
+        return prompt_len
+
     def plan_admissions(self) -> List[List[Request]]:
         """Decide which WAITING requests to admit *now*.
 
-        Returns prefill groups (same prompt length, fused into one prefill
+        Returns prefill groups (same length bucket, fused into one prefill
         call), or [] to keep decoding and let admissible requests wait —
         bounded by the lead window E.
         """
-        admissible = min(len(self.queue), self.cache_mgr.n_free)
+        admissible = self.cache_mgr.admissible_prefix(self.queue.peek())
         if admissible == 0:
             self.pending_wait = 0
             return []
@@ -77,7 +115,7 @@ class QuasiSyncScheduler:
         admits = self.queue.pop(admissible)
         groups: Dict[int, List[Request]] = {}
         for req in admits:
-            groups.setdefault(req.prompt_len, []).append(req)
+            groups.setdefault(self._bucket(req.prompt_len), []).append(req)
         out = []
         for _, reqs in sorted(groups.items()):
             for i in range(0, len(reqs), self.cfg.max_prefill_batch):

