@@ -45,7 +45,7 @@ def _legacy_generate(engine, batch, max_new, cache_T):
     prompt = batch["tokens"]
     _, S = prompt.shape
     t0 = time.perf_counter()
-    logits, cache = engine._prefill(engine.params, batch, cache_T)
+    logits, cache = engine.executor.prefill(batch, cache_T)
     logits.block_until_ready()
     t1 = time.perf_counter()
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -53,7 +53,7 @@ def _legacy_generate(engine, batch, max_new, cache_T):
     for i in range(max_new - 1):
         step = {"tokens": tok[:, None], "cache": cache,
                 "cache_len": jnp.int32(S + i)}
-        logits, cache = engine._decode(engine.params, step)
+        logits, cache = engine.executor.decode_step(step)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out.append(tok)
     jax.block_until_ready(out[-1])

@@ -43,6 +43,9 @@ BENCHMARKS = [
     ("paged_memory", "benchmarks.paged_memory",
      lambda r: f"concurrency_gain={r['admitted_concurrency_gain']:.2f}x;"
                f"mismatches={r['token_mismatches']}"),
+    ("sharded_serving", "benchmarks.sharded_serving",
+     lambda r: f"step_ratio={r['sharded_vs_single_step_ratio']:.2f}x;"
+               f"mismatches={r['token_mismatches']}"),
 ]
 
 

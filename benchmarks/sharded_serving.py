@@ -1,0 +1,186 @@
+"""Mesh-sharded serving vs single-device at the same workload.
+
+Runs the continuous-batching engine over a request stream twice — on the
+default single-device executor and on a ``("data", "model")`` mesh
+(``MeshExecutor``: weights TP over "model", slab KV cache sharded per the
+decode recipe) — and reports per-step decode latency, throughput, and the
+token-identity check (greedy outputs MUST match across executors; the
+acceptance bar is 0 mismatches).
+
+Virtual CPU devices need ``XLA_FLAGS`` set before jax initializes, so the
+measurement runs in a WORKER SUBPROCESS (``--worker``); the parent (the CLI
+or ``benchmarks/run.py``, whose process has already initialized jax
+single-device) parses the worker's JSON.  On real TPU slices the worker
+runs against the physical devices unchanged.
+
+On virtual CPU devices the mesh numbers measure dispatch + emulated
+collective overhead, not real scaling — the benchmark is a correctness +
+plumbing smoke there (CI), and a scaling probe on real hardware.
+
+    PYTHONPATH=src python benchmarks/sharded_serving.py [--tiny]
+    PYTHONPATH=src python benchmarks/sharded_serving.py --mesh 2x4
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+if __package__ in (None, ""):  # ran as a script: make `benchmarks.` importable
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+_DEVICE_ENV = "--xla_force_host_platform_device_count"
+
+
+def _measure(tiny: bool, mesh_shape, seed: int, backend: str,
+             n_requests: int, rate: float) -> dict:
+    """Worker-side measurement (jax already initialized with enough
+    devices)."""
+    import numpy as np
+    import jax
+    from repro.configs.base import get_arch
+    from repro.models import api
+    from repro.serving import (Request, SchedulerConfig, ServeConfig,
+                               ServingEngine)
+
+    cfg = get_arch("qwen2-1.5b").reduced().replace(
+        num_layers=2 if tiny else 4, d_model=64 if tiny else 128,
+        d_ff=128 if tiny else 256, vocab_size=256, head_dim=16,
+        matmul_mode="bp_exact")
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    prompt_len = 8 if tiny else 16
+    max_new_hi = 6 if tiny else 12
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (n_requests, prompt_len), 2, cfg.vocab_size),
+        np.int32)
+    max_news = rng.integers(2, max_new_hi + 1, size=n_requests).tolist()
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    sched = SchedulerConfig(lead_window=2)
+    cache_T = prompt_len + max_new_hi + 4
+
+    def reqs():
+        return [Request(prompt=prompts[i], max_new_tokens=int(max_news[i]),
+                        arrival_time=float(arrivals[i]))
+                for i in range(n_requests)]
+
+    def cell(shape):
+        engine = ServingEngine(cfg, params, ServeConfig(
+            max_new_tokens=max_new_hi, temperature=0.0,
+            cache_backend=backend, block_size=4, mesh_shape=shape))
+        engine.serve(reqs()[:2], n_slots=4, cache_T=cache_T,
+                     sched_cfg=sched)                      # warmup compile
+        rep = engine.serve(reqs(), n_slots=4, cache_T=cache_T,
+                           sched_cfg=sched)
+        toks = [list(r.tokens) for r in
+                sorted(rep.results, key=lambda r: r.request_id)]
+        return {
+            "mesh_shape": list(shape) if shape else None,
+            "decode_steps": int(rep.steps),
+            "decode_s": float(rep.decode_s),
+            "per_step_ms": float(1e3 * rep.decode_s / max(rep.steps, 1)),
+            "prefill_s": float(rep.prefill_s),
+            "decode_tokens_per_s": float(rep.decode_tokens_per_s),
+            "slot_utilization": float(rep.slot_utilization),
+        }, toks
+
+    single, ref_toks = cell(None)
+    sharded, mesh_toks = cell(tuple(mesh_shape))
+    mismatches = sum(a != b for a, b in zip(ref_toks, mesh_toks))
+    return {
+        "backend": backend,
+        "n_requests": n_requests,
+        "n_devices": len(jax.devices()),
+        "cells": [single, sharded],
+        "single_per_step_ms": single["per_step_ms"],
+        "sharded_per_step_ms": sharded["per_step_ms"],
+        "sharded_vs_single_step_ratio": (
+            sharded["per_step_ms"] / max(single["per_step_ms"], 1e-9)),
+        "token_mismatches": int(mismatches),
+    }
+
+
+def run(tiny: bool = False, mesh_shape=(2, 4), seed: int = 0,
+        backend: str = "slab", n_requests: int = None,
+        rate: float = 0.5) -> dict:
+    """Spawn the worker with enough virtual devices and parse its JSON.
+    (Callable from ``benchmarks/run.py``, whose jax is already initialized
+    single-device — device count is locked at first backend init.)"""
+    if n_requests is None:
+        n_requests = 6 if tiny else 16
+    n_dev = int(mesh_shape[0]) * int(mesh_shape[1])
+    env = dict(os.environ)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if not f.startswith(_DEVICE_ENV)]
+    env["XLA_FLAGS"] = " ".join(flags + [f"{_DEVICE_ENV}={n_dev}"])
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    cmd = [sys.executable, os.path.abspath(__file__), "--worker",
+           "--mesh", f"{mesh_shape[0]}x{mesh_shape[1]}",
+           "--seed", str(seed), "--backend", backend,
+           "--requests", str(n_requests), "--rate", str(rate)]
+    if tiny:
+        cmd.append("--tiny")
+    out = subprocess.run(cmd, capture_output=True, text=True, timeout=900,
+                         env=env)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"sharded serving worker failed:\n{out.stdout}\n{out.stderr}")
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke size (seconds, not minutes)")
+    ap.add_argument("--mesh", default="2x4",
+                    help="mesh shape DATAxMODEL (e.g. 2x4)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="slab", choices=["slab", "paged"])
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=0.5)
+    ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+    mesh_shape = tuple(int(d) for d in args.mesh.lower().split("x"))
+
+    if args.worker:
+        r = _measure(args.tiny, mesh_shape, args.seed, args.backend,
+                     args.requests or (6 if args.tiny else 16), args.rate)
+        print(json.dumps(r))
+        return 0
+
+    r = run(tiny=args.tiny, mesh_shape=mesh_shape, seed=args.seed,
+            backend=args.backend, n_requests=args.requests, rate=args.rate)
+    from benchmarks.common import save_artifact
+    path = save_artifact("BENCH_sharded", r)
+    single, sharded = r["cells"]
+    print(f"backend={r['backend']} requests={r['n_requests']} "
+          f"devices={r['n_devices']}")
+    print(f"single:  {single['decode_steps']} steps, "
+          f"{single['per_step_ms']:.2f} ms/step, "
+          f"{single['decode_tokens_per_s']:.1f} tok/s")
+    print(f"mesh {tuple(sharded['mesh_shape'])}: "
+          f"{sharded['decode_steps']} steps, "
+          f"{sharded['per_step_ms']:.2f} ms/step, "
+          f"{sharded['decode_tokens_per_s']:.1f} tok/s")
+    print(f"sharded/single per-step ratio: "
+          f"{r['sharded_vs_single_step_ratio']:.2f}x "
+          f"(virtual-CPU meshes emulate collectives — correctness smoke, "
+          f"not a scaling claim)")
+    print(f"token mismatches: {r['token_mismatches']}")
+    print(f"artifact: {path}")
+    if r["token_mismatches"]:
+        print("ERROR: sharded outputs diverged from single-device",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

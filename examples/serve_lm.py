@@ -4,9 +4,43 @@ KV cache, served by the quasi-sync continuous-batching engine.
 
     PYTHONPATH=src python examples/serve_lm.py [--tokens 24] [--requests 8]
     PYTHONPATH=src python examples/serve_lm.py --mode bf16 --lead-window 0
+    PYTHONPATH=src python examples/serve_lm.py --mesh 2x4   # TP over a mesh
 """
 
 import argparse
+import os
+import sys
+
+
+def _parse_mesh(argv):
+    """(data, model) from a ``--mesh DxM`` argument, or None.  Validates
+    here (this runs before argparse, which only exists post-jax-init)."""
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            val = argv[i + 1]
+        elif a.startswith("--mesh="):
+            val = a.split("=", 1)[1]
+        else:
+            continue
+        parts = val.lower().split("x")
+        if len(parts) != 2 or not all(p.isdigit() and int(p) > 0
+                                      for p in parts):
+            sys.exit(f"serve_lm: --mesh expects DATAxMODEL (e.g. 2x4), "
+                     f"got {val!r}")
+        return tuple(int(p) for p in parts)
+    return None
+
+
+# --mesh needs the virtual devices to exist BEFORE jax initializes its
+# backend (device count is locked at first init), so this runs pre-import.
+# The flag only affects the host/CPU platform; on real accelerators the
+# mesh lays over the physical devices.
+_MESH = _parse_mesh(sys.argv[1:])
+if _MESH is not None and "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_MESH[0] * _MESH[1]}")
 
 import numpy as np
 import jax
@@ -19,7 +53,10 @@ from repro.serving import (Request, SchedulerConfig, ServeConfig,
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    # allow_abbrev=False: the pre-import XLA-flag scanner above only
+    # recognizes the full `--mesh` spelling, so abbreviations must not
+    # silently parse here with the devices never spawned
+    ap = argparse.ArgumentParser(allow_abbrev=False)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -38,7 +75,11 @@ def main():
                          "on-demand KV blocks with prefix sharing")
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per KV block (paged backend)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve tensor-parallel over a (data, model) mesh, "
+                         "e.g. 2x4 (spawns virtual CPU devices off-TPU)")
     args = ap.parse_args()
+    mesh_shape = _MESH     # parsed+validated pre-import (sets XLA_FLAGS)
 
     cfg = get_arch("qwen2-1.5b").reduced().replace(
         num_layers=4, d_model=256, d_ff=512, vocab_size=2048, head_dim=32)
@@ -55,7 +96,12 @@ def main():
                            ServeConfig(max_new_tokens=args.tokens,
                                        temperature=args.temperature,
                                        cache_backend=args.cache_backend,
-                                       block_size=args.block_size))
+                                       block_size=args.block_size,
+                                       mesh_shape=mesh_shape))
+    if mesh_shape is not None:
+        print(f"mesh executor: {mesh_shape[0]}x{mesh_shape[1]} "
+              f"(data, model) over {len(jax.devices())} devices — weights "
+              f"TP-sharded, KV cache split per the decode recipe")
 
     rng = np.random.default_rng(0)
     prompts = np.asarray(

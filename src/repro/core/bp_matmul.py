@@ -79,11 +79,27 @@ def use_matmul_backend(backend: str):
 
 def resolve_matmul_backend(backend: str = None) -> str:
     """Concrete backend ("xla" | "kernel" | "kernel_interpret") for the
-    current default device."""
+    current default device.
+
+    Under an ACTIVE MESH trace the kernel backends fall back to "xla": the
+    Pallas kernels are single-device programs that have not been
+    shard_map-partitioned over the batch axis yet, while the XLA
+    formulations are plain einsum/gather graphs that GSPMD partitions
+    natively (split-KV partial softmax over the sharded cache axis, TP
+    matmul collectives).  This keeps ``matmul_backend`` settings valid
+    verbatim on the mesh executor instead of tracing a kernel that would
+    see only one shard of its operands."""
     b = _matmul_backend if backend is None else backend
     if b == "auto":
-        return "kernel" if jax.default_backend() == "tpu" else "xla"
+        b = "kernel" if jax.default_backend() == "tpu" else "xla"
+    if b != "xla" and _mesh_active():
+        return "xla"
     return b
+
+
+def _mesh_active() -> bool:
+    from repro.distributed.sharding import _mesh_axes
+    return _mesh_axes() is not None
 
 
 def signed_low_particles(q):

@@ -31,6 +31,20 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
+def _shard_map(fn, *, mesh, in_specs, out_specs):
+    """Version-portable shard_map: ``jax.shard_map`` (jax >= 0.7,
+    ``check_vma``) with the ``jax.experimental`` spelling (``check_rep``)
+    as fallback — replication of the output is asserted by the test, not
+    the tracer, identically in both."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh,
                    axis_name: str = "model", n_microbatches: int):
     """Run ``x`` through ``n_stages`` sequential stages, pipelined.
@@ -88,10 +102,9 @@ def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh,
                       jnp.zeros_like(outputs)), axis_name)
         return outputs
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         per_stage, mesh=mesh,
         in_specs=(P(axis_name), P()),
-        out_specs=P(),
-        check_vma=False)
+        out_specs=P())
     out = fn(stage_params, micro)
     return out.reshape(B, *x.shape[1:])

@@ -84,16 +84,49 @@ def recipe(name: Optional[str]):
         _STATE.rules = prev
 
 
+def _physical_mesh():
+    """Thread-local physical mesh set by ``with Mesh(...)`` (None when the
+    legacy context API is gone)."""
+    try:
+        from jax.interpreters import pxla
+        return pxla.thread_resources.env.physical_mesh
+    except (ImportError, AttributeError):
+        return None
+
+
 def _mesh_axes():
     get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
     if get_abstract is not None:
         mesh = get_abstract()
+        if mesh is None or mesh.empty:
+            # `with Mesh(...)` (the jax<0.5 idiom) still sets the physical
+            # mesh on newer jax — fall through so both activation styles work
+            mesh = _physical_mesh()
     else:  # jax < 0.5: the thread-local physical mesh set by `with Mesh(...)`
-        from jax.interpreters import pxla
-        mesh = pxla.thread_resources.env.physical_mesh
+        mesh = _physical_mesh()
     if mesh is None or mesh.empty:
         return None
     return dict(zip(mesh.axis_names, mesh.shape.values())) if hasattr(mesh.shape, "values") else dict(mesh.shape)
+
+
+def mesh_axes_dict(mesh) -> dict:
+    """{axis name: size} for a concrete ``jax.sharding.Mesh``."""
+    if hasattr(mesh, "devices"):
+        return dict(zip(mesh.axis_names, mesh.devices.shape))
+    return dict(mesh.shape)
+
+
+def activate_mesh(mesh):
+    """Context manager activating ``mesh`` for trace-time logical-axis
+    constraints across jax versions: ``jax.set_mesh`` /
+    ``jax.sharding.use_mesh`` where the abstract-mesh API exists, the
+    legacy ``with Mesh(...)`` physical-mesh context otherwise.
+    ``shard``/:func:`force_replicated` read whichever is active."""
+    for ctx in (getattr(jax, "set_mesh", None),
+                getattr(jax.sharding, "use_mesh", None)):
+        if ctx is not None:
+            return ctx(mesh)
+    return mesh  # jax < 0.5: Mesh is itself a context manager
 
 
 def force_replicated(x):
@@ -107,6 +140,18 @@ def force_replicated(x):
     return jax.lax.with_sharding_constraint(x, P(*([None] * x.ndim)))
 
 
+def logical_pspec(shape, logical_axes, recipe_name: str, mesh_axes: dict) -> P:
+    """PartitionSpec for one array of ``shape`` whose dims carry the given
+    logical axis names, resolved against a recipe + {mesh axis: size} dict.
+
+    Mirrors :func:`shard` exactly (same silent-drop rules: a mesh axis is
+    skipped when absent or when the dim is not divisible by the axis
+    product), but is usable OUTSIDE a trace — the serving executor builds
+    NamedShardings for params/caches from it."""
+    return _resolve_spec(shape, logical_axes, ACTIVATION_RULES[recipe_name],
+                         mesh_axes)
+
+
 def shard(x, *logical_axes):
     """with_sharding_constraint by logical axis names (None = replicated).
 
@@ -117,21 +162,27 @@ def shard(x, *logical_axes):
     mesh = _mesh_axes()
     if rules is None or mesh is None:
         return x
-    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = _resolve_spec(x.shape, logical_axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _resolve_spec(shape, logical_axes, rules, mesh_axes) -> P:
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
     spec = []
     used = set()
-    for dim, name in zip(x.shape, logical_axes):
+    for dim, name in zip(shape, logical_axes):
         if name is None:
             spec.append(None)
             continue
-        axes = tuple(a for a in rules.get(name, ()) if a in mesh and a not in used)
-        prod = int(np.prod([mesh[a] for a in axes])) if axes else 1
+        axes = tuple(a for a in rules.get(name, ())
+                     if a in mesh_axes and a not in used)
+        prod = int(np.prod([mesh_axes[a] for a in axes])) if axes else 1
         if axes and dim % prod == 0:
             spec.append(axes if len(axes) > 1 else axes[0])
             used.update(axes)
         else:
             spec.append(None)
-    return jax.lax.with_sharding_constraint(x, P(*spec))
+    return P(*spec)
 
 
 # ---------------------------------------------------------------------------
@@ -180,9 +231,9 @@ def _path_str(path) -> str:
 
 
 def param_specs(params, recipe_name: str, mesh) -> "jax.tree_util.PyTreeDef":
-    """PartitionSpec pytree matching ``params`` for the given recipe."""
-    mesh_axes = (dict(zip(mesh.axis_names, mesh.devices.shape))
-                 if hasattr(mesh, "devices") else dict(mesh.shape))
+    """PartitionSpec pytree matching ``params`` for the given recipe.
+    ``mesh``: a concrete Mesh or a plain {axis name: size} dict."""
+    mesh_axes = mesh if isinstance(mesh, dict) else mesh_axes_dict(mesh)
     return jax.tree_util.tree_map_with_path(
         lambda p, l: param_spec(_path_str(p), l, recipe_name, mesh_axes), params)
 

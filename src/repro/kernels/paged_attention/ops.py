@@ -11,7 +11,10 @@ Routes through the same trace-time backend switch as the BitParticle matmul
   ``xla``               the dense-gather reference (:mod:`.ref`).
 
 int8 KV scale pages always take the XLA path (the kernel gathers float
-pages only).
+pages only).  Under an active mesh trace (the serving ``MeshExecutor``)
+``resolve_matmul_backend`` itself falls back to ``xla``: the kernel is a
+single-device program until it grows a ``shard_map`` batch partition, while
+the gather oracle partitions natively under GSPMD.
 """
 
 from __future__ import annotations

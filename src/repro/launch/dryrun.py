@@ -232,7 +232,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool, out_dir: str,
     t0 = time.time()
     try:
         mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
-        with jax.set_mesh(mesh):
+        from repro.distributed.sharding import activate_mesh
+        with activate_mesh(mesh):
             fn, args, recipe = build_cell(arch_id, shape_name, mesh, variant)
             lowered = fn.lower(*args)
             t_lower = time.time()

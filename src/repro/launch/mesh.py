@@ -7,24 +7,33 @@ dry-run must set XLA_FLAGS before anything else — see dryrun.py).
 
 from __future__ import annotations
 
+import numpy as np
 import jax
+
+
+def _make_mesh(shape, axes):
+    """Version-portable mesh construction: ``axis_types`` where the new
+    API exists (jax >= 0.5), a plain device-grid ``Mesh`` otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    n = int(np.prod(shape))
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:n]).reshape(shape), axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (virtual) devices exist — tests/examples."""
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))
 
 
 # TPU v5e-class hardware constants (roofline denominators)

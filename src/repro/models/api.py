@@ -138,6 +138,101 @@ def cache_specs(cfg: ArchConfig, B: int, cache_T: int):
 
 
 # ---------------------------------------------------------------------------
+# Sharding specs (mesh-parallel serving): logical axes -> PartitionSpec
+# ---------------------------------------------------------------------------
+
+def cache_logical_axes(cfg: ArchConfig):
+    """Pytree (same structure as ``cache_specs``) of logical-axis name
+    tuples for every decode-cache leaf, resolvable against the
+    ``distributed.sharding`` recipes.  The serving executor turns these into
+    ``PartitionSpec``s (``cache_pspecs``) for device placement, and the
+    decode step re-applies them as sharding constraints so the pooled cache
+    keeps one resident layout across steps."""
+    kv = (None, "batch", "cache_seq", "heads", None)
+    sc = (None, "batch", "cache_seq", "heads")
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.kv_cache_int8:
+            return {"k": kv, "k_scale": sc, "v": kv, "v_scale": sc}
+        return {"k": kv, "v": kv}
+    if cfg.family == "ssm":
+        return {"wkv": (None, "batch", "heads", None, None),
+                "x_tm": (None, "batch", None),
+                "x_cm": (None, "batch", None)}
+    if cfg.family == "hybrid":
+        return {"conv": (None, None, "batch", None, None),
+                "ssm": (None, None, "batch", "heads", None, None),
+                "k": kv, "v": kv}
+    if cfg.family == "audio":
+        return {"k": kv, "v": kv, "cross_k": kv, "cross_v": kv}
+    raise ValueError(cfg.family)
+
+
+def paged_cache_logical_axes(cfg: ArchConfig):
+    """Logical axes of the block-paged cache: every leaf fully replicated.
+    The page pool has no batch/sequence axis to lay on a mesh — physical
+    pages are gathered through block tables, which stay replicated too."""
+    specs = paged_cache_specs(cfg, 2, 1)
+    return jax.tree.map(lambda s: (None,) * len(s.shape), specs)
+
+
+def cache_pspec_tree(cfg: ArchConfig, cache_like, mesh_axes,
+                     recipe_name: str = "decode", *, paged: bool = False):
+    """PartitionSpec pytree matching ``cache_like`` (concrete arrays or
+    ShapeDtypeStructs), resolved from the logical-axis rules.  This is THE
+    resolution — the mesh executor places caches with it and
+    ``cache_pspecs``/``paged_cache_pspecs`` are shape-spec facades over
+    it, so placement and the spec helpers cannot drift apart."""
+    from repro.distributed import sharding as shd
+    if not isinstance(mesh_axes, dict):
+        mesh_axes = shd.mesh_axes_dict(mesh_axes)
+    axes = (paged_cache_logical_axes(cfg) if paged
+            else cache_logical_axes(cfg))
+    return jax.tree.map(
+        lambda l, la: shd.logical_pspec(l.shape, la, recipe_name, mesh_axes),
+        cache_like, axes)
+
+
+def cache_pspecs(cfg: ArchConfig, n_slots: int, cache_T: int, mesh_axes,
+                 recipe_name: str = "decode"):
+    """PartitionSpec pytree for the pooled decode cache of this family,
+    resolved from the logical-axis rules (``decode``: slot/batch axis over
+    "data", KV sequence axis over "model"; non-divisible dims stay
+    replicated).  ``mesh_axes``: {axis name: size} or a concrete Mesh."""
+    return cache_pspec_tree(cfg, cache_specs(cfg, n_slots, cache_T),
+                            mesh_axes, recipe_name)
+
+
+def paged_cache_pspecs(cfg: ArchConfig, num_blocks: int, block_size: int,
+                       mesh_axes=None, recipe_name: str = "decode"):
+    """PartitionSpec pytree for the block-paged cache: fully replicated
+    (see ``paged_cache_logical_axes``)."""
+    return cache_pspec_tree(cfg,
+                            paged_cache_specs(cfg, num_blocks, block_size),
+                            mesh_axes or {}, recipe_name, paged=True)
+
+
+def param_pspecs(params, mesh_axes, recipe_name: str = "decode"):
+    """PartitionSpec pytree for the model params under a serving recipe —
+    weight-stationary TP: last dims over "model" (``decode``/``serve``), 2D
+    FSDP x TP under ``train``.  Thin facade over
+    ``distributed.sharding.param_specs`` so serving code only needs the
+    model API surface."""
+    from repro.distributed import sharding as shd
+    return shd.param_specs(params, recipe_name, mesh_axes)
+
+
+def shard_cache(cfg: ArchConfig, cache, *, paged: bool = False):
+    """Re-apply the decode-cache sharding constraints to ``cache`` inside a
+    trace (no-op without an active mesh/recipe).  The executor calls this on
+    the cache a jitted step returns, pinning the output layout to the input
+    layout so donated cache buffers alias instead of resharding."""
+    from repro.distributed.sharding import shard
+    axes = (paged_cache_logical_axes(cfg) if paged
+            else cache_logical_axes(cfg))
+    return jax.tree.map(lambda leaf, la: shard(leaf, *la), cache, axes)
+
+
+# ---------------------------------------------------------------------------
 # Block-paged decode caches (paged cache backend)
 # ---------------------------------------------------------------------------
 

@@ -159,7 +159,9 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, cache_len, *,
     """q (B,1,H,D) against block-paged K/V (N, bs, KH, D) through per-slot
     block tables (B, P); positions <= cache_len valid, exactly as
     :func:`decode_attention`.  Dispatches to the Pallas paged-attention
-    kernel / XLA gather oracle per the active matmul backend."""
+    kernel / XLA gather oracle per the active matmul backend (under a mesh
+    trace the dispatch itself resolves to the oracle — pages are
+    replicated and the gather partitions under GSPMD)."""
     from repro.kernels.paged_attention.ops import paged_attention
     B, _, H, D = q.shape
     out = paged_attention(q[:, 0], k_pages, v_pages, block_tables,

@@ -253,8 +253,13 @@ def decode_step(params, cfg, batch):
 
     def write_fn(c, new):
         c = attention.write_kv(c, new, cache_len)
-        if c.ndim == 4:   # KV leaves get the cache mesh axes; scales do not
+        if c.ndim == 4:   # KV leaves (B, T, KH, hd)
             c = shard(c, "batch", "cache_seq", "heads", None)
+        else:             # int8 KV scale leaves (B, T, KH): same layout, so
+            c = shard(c, "batch", "cache_seq", "heads")
+        # the resident cache keeps ONE mesh placement across decode steps
+        # (the executor donates the buffer — layout drift would force a
+        # reshard copy instead of aliasing)
         return c
 
     def attend_fn(q, kc, vc, ksc, vsc):

@@ -11,7 +11,11 @@ from repro.serving.block_pool import (BlockPool, NoFreeBlocks,
 from repro.serving.cache_manager import (BaseCacheManager, CacheManager,
                                          make_cache_manager)
 from repro.serving.engine import (GenerationResult, RequestResult,
-                                  ServeConfig, ServeReport, ServingEngine)
+                                  ServeConfig, ServeLoop, ServeReport,
+                                  ServingEngine)
+from repro.serving.executor import (Executor, MeshExecutor,
+                                    SingleDeviceExecutor, make_executor,
+                                    make_serving_mesh)
 from repro.serving.queue import Request, RequestQueue, RequestState
 from repro.serving.scheduler import QuasiSyncScheduler, SchedulerConfig
 
@@ -19,7 +23,9 @@ __all__ = [
     "BaseCacheManager",
     "BlockPool",
     "CacheManager",
+    "Executor",
     "GenerationResult",
+    "MeshExecutor",
     "NoFreeBlocks",
     "PagedCacheManager",
     "QuasiSyncScheduler",
@@ -28,8 +34,12 @@ __all__ = [
     "RequestResult",
     "RequestState",
     "ServeConfig",
+    "ServeLoop",
     "ServeReport",
     "ServingEngine",
     "SchedulerConfig",
+    "SingleDeviceExecutor",
     "make_cache_manager",
+    "make_executor",
+    "make_serving_mesh",
 ]

@@ -34,10 +34,8 @@ import collections
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
-from repro.models import api
 from repro.serving.cache_manager import BaseCacheManager
 
 TRASH_BLOCK = 0  # reserved scratch block id (never allocated, never shared)
@@ -240,7 +238,8 @@ class PagedCacheManager(BaseCacheManager):
     """
 
     def __init__(self, cfg, n_slots: int, cache_T: int, *,
-                 block_size: int = 16, num_blocks: Optional[int] = None):
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 executor=None):
         if cfg.family not in ("dense", "moe", "vlm"):
             raise ValueError(
                 f"cache_backend='paged' supports position-indexed KV "
@@ -254,18 +253,19 @@ class PagedCacheManager(BaseCacheManager):
         super().__init__(cfg, n_slots)
         self.num_blocks = num_blocks
         self.pool = BlockPool(num_blocks, block_size)
-        self.pages = api.zeros_paged_cache(cfg, num_blocks, block_size)
+        # device ops (page allocation, the jitted+donating scatter insert
+        # and copy-on-write block copy) live behind the executor; page
+        # leaves stay replicated under a mesh (no batch/seq axis to shard)
+        if executor is None:
+            from repro.serving.executor import make_executor
+            executor = make_executor(cfg)
+        self.executor = executor
+        self.pages = executor.zeros_paged_cache(num_blocks, block_size)
         # per-slot block tables, unset entries point at the trash block
         self.tables = np.full((n_slots, self.blocks_per_seq), TRASH_BLOCK,
                               np.int32)
         self._n_blocks_of = np.zeros(n_slots, np.int32)   # live table entries
         self.n_preemptions = 0
-        self._insert = jax.jit(
-            lambda pages, src, ids, i: api.paged_insert(
-                cfg, pages, src, ids, i))
-        self._copy_block = jax.jit(
-            lambda pages, dst, src: jax.tree.map(
-                lambda p: p.at[:, dst].set(p[:, src]), pages))
 
     # -- capacity / admission budget ---------------------------------------
 
@@ -391,8 +391,8 @@ class PagedCacheManager(BaseCacheManager):
         ids = np.full(self.blocks_per_seq, TRASH_BLOCK, np.int32)
         skip = n_hit + (1 if adopted_partial else 0)
         ids[skip:n_total] = table[skip:n_total]
-        self.pages = self._insert(self.pages, src_cache,
-                                  jnp.asarray(ids), jnp.int32(src_index))
+        self.pages = self.executor.paged_insert(self.pages, src_cache,
+                                                ids, src_index)
         # register freshly written FULL blocks; on a same-content collision
         # (two identical prompts in one prefill group) swap to the canonical
         # block so the copies share
@@ -440,15 +440,15 @@ class PagedCacheManager(BaseCacheManager):
                         new = self.pool.alloc()
                     except NoFreeBlocks:
                         return s
-                    self.pages = self._copy_block(self.pages, jnp.int32(new),
-                                                  jnp.int32(bid))
+                    self.pages = self.executor.copy_block(self.pages, new,
+                                                          bid)
                     self.pool.decref(bid)
                     self.tables[s, bi] = new
                     self.pool.n_cow += 1
         return None
 
     def block_tables_device(self) -> jnp.ndarray:
-        return jnp.asarray(self.tables)
+        return self.executor.put(self.tables)
 
     def update(self, new_cache):
         self.pages = new_cache

@@ -24,10 +24,7 @@ from __future__ import annotations
 from typing import List, Optional
 
 import numpy as np
-import jax
 import jax.numpy as jnp
-
-from repro.models import api
 
 
 class BaseCacheManager:
@@ -97,16 +94,21 @@ class BaseCacheManager:
 
 
 class CacheManager(BaseCacheManager):
-    """Slab store: fixed-capacity per-slot KV / recurrent state."""
+    """Slab store: fixed-capacity per-slot KV / recurrent state.
 
-    def __init__(self, cfg, n_slots: int, cache_T: int):
+    All device work (cache allocation, the jitted+donating slot insert, and
+    — on a mesh — sharding) goes through the ``executor``; constructing the
+    manager directly without one builds a default single-device executor.
+    """
+
+    def __init__(self, cfg, n_slots: int, cache_T: int, executor=None):
         super().__init__(cfg, n_slots)
         self.cache_T = cache_T
-        self.cache = api.zeros_cache(cfg, n_slots, cache_T)
-        # One compiled insert covers every (slot, src_index) pair; recompiles
-        # only per distinct prefill batch shape.
-        self._insert = jax.jit(
-            lambda pool, src, slot, i: api.slot_insert(cfg, pool, src, slot, i))
+        if executor is None:
+            from repro.serving.executor import make_executor
+            executor = make_executor(cfg)
+        self.executor = executor
+        self.cache = executor.zeros_cache(n_slots, cache_T)
 
     def fits(self, prompt_len: int, max_new_tokens: int) -> bool:
         """Does prompt + generation fit in one slot's capacity?"""
@@ -122,8 +124,10 @@ class CacheManager(BaseCacheManager):
         (which needs the prompt for prefix sharing) and ignored here."""
         if not self._occupied[slot]:
             raise ValueError(f"slot {slot} must be alloc()ed before insert")
-        self.cache = self._insert(self.cache, src_cache,
-                                  jnp.int32(slot), jnp.int32(src_index))
+        # executor op: jitted once per executor (one compiled insert covers
+        # every (slot, src_index) pair), pool buffer donated in place
+        self.cache = self.executor.slot_insert(self.cache, src_cache,
+                                               slot, src_index)
         self.lengths[slot] = length
 
     def update(self, new_cache):
@@ -133,13 +137,16 @@ class CacheManager(BaseCacheManager):
 
 def make_cache_manager(cfg, n_slots: int, cache_T: int, *,
                        backend: str = "slab", block_size: int = 16,
-                       num_blocks: Optional[int] = None) -> BaseCacheManager:
-    """Facade: build the backing store selected by ``backend``."""
+                       num_blocks: Optional[int] = None,
+                       executor=None) -> BaseCacheManager:
+    """Facade: build the backing store selected by ``backend``, with its
+    device ops routed through ``executor`` (None -> single-device)."""
     if backend == "slab":
-        return CacheManager(cfg, n_slots, cache_T)
+        return CacheManager(cfg, n_slots, cache_T, executor=executor)
     if backend == "paged":
         from repro.serving.block_pool import PagedCacheManager
         return PagedCacheManager(cfg, n_slots, cache_T,
-                                 block_size=block_size, num_blocks=num_blocks)
+                                 block_size=block_size, num_blocks=num_blocks,
+                                 executor=executor)
     raise ValueError(f"unknown cache_backend {backend!r}; "
                      f"expected 'slab' or 'paged'")

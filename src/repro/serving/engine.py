@@ -14,18 +14,23 @@ Two paths over the same ``models/api.py`` init/prefill/decode surface:
     decodes with per-slot sequence positions, finished sequences are evicted
     mid-flight, and waiting requests are admitted into freed slots under the
     ``QuasiSyncScheduler``'s bounded lead window (the paper's inter-group
-    elasticity E, one level up).  Sampling is fused into the jitted decode
-    step here too (one dispatch, ``(n_slots,)`` tokens to host).  Greedy
-    outputs are token-identical to the static path; throughput on
-    heterogeneous-length workloads is not.
+    elasticity E, one level up).  Greedy outputs are token-identical to the
+    static path; throughput on heterogeneous-length workloads is not.
+
+The engine is HOST-SIDE ORCHESTRATION ONLY.  Everything device-shaped —
+jit tracing, matmul-backend scoping, device/mesh placement, cache
+allocation, and buffer donation — lives behind ``serving/executor.py``:
+the default :class:`SingleDeviceExecutor`, or a :class:`MeshExecutor`
+running the same engine tensor-parallel over a ``("data", "model")`` mesh
+(``ServeConfig.mesh_shape``) with token-identical greedy outputs.  One
+``serve()`` call's loop state is a :class:`ServeLoop`: admission,
+preemption, and decode stepping are its unit-testable methods.
 
 Inference fast path: when a ``bp_*`` matmul mode is active the engine
 pre-quantizes every dense kernel to int8 + per-channel scale once at
-construction (``quantize_dense_params``), so no call path under
-``serve``/``generate`` re-quantizes weights per decode step; and every
-compiled entry point is traced under the config's ``matmul_backend`` so the
-contractions route through the fused Pallas kernel on TPU
-(``core.bp_matmul`` dispatch).
+construction (``quantize_dense_params``) before handing params to the
+executor, so no call path under ``serve``/``generate`` re-quantizes weights
+per decode step.
 
 Supports all 10 architectures (KV caches for attention families, recurrent
 state for RWKV/Zamba), greedy and temperature sampling, per-sequence EOS
@@ -37,19 +42,17 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import functools
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import bp_matmul
-from repro.models import api
 from repro.models.layers import quantize_dense_params
 from repro.serving.block_pool import NoFreeBlocks, PagedCacheManager
-from repro.serving.cache_manager import CacheManager, make_cache_manager
+from repro.serving.cache_manager import make_cache_manager
+from repro.serving.executor import Executor, make_executor
 from repro.serving.queue import Request, RequestQueue, RequestState
 from repro.serving.scheduler import (QuasiSyncScheduler, SchedulerConfig,
                                      prefill_bucket_len)
@@ -67,6 +70,9 @@ class ServeConfig:
     # with prefix sharing + copy-on-write (position-indexed KV families)
     cache_backend: str = "slab"
     block_size: int = 16              # tokens per KV block (paged backend)
+    # (data, model) mesh shape for tensor-parallel serving; None = single
+    # device.  Requires prod(mesh_shape) visible jax devices.
+    mesh_shape: Optional[Tuple[int, int]] = None
 
 
 @dataclasses.dataclass
@@ -111,6 +117,7 @@ class ServeReport:
     cow_blocks: int = 0               # paged: copy-on-write block copies
     peak_blocks_in_use: int = 0       # paged: max live blocks at any step
     peak_active_slots: int = 0        # max concurrently-decoding requests
+    mesh_shape: Optional[Tuple[int, int]] = None  # executor mesh (None=1dev)
 
     @property
     def decode_tokens_per_s(self) -> float:
@@ -126,121 +133,330 @@ class ServeReport:
         return {r.request_id: r.tokens for r in self.results}
 
 
+class ServeLoop:
+    """Host-side orchestration state of ONE ``serve()`` call.
+
+    The former nested closures of ``ServingEngine.serve`` — arrival
+    submission, victim picking, preemption, insert-with-preemption, and
+    admission — are methods here so they can be unit-tested directly
+    (``tests/test_serve_loop.py``) instead of only end-to-end.  The loop
+    never touches jit or device placement: all device work goes through
+    ``engine.executor``.
+    """
+
+    def __init__(self, engine: "ServingEngine", requests: Sequence[Request],
+                 *, n_slots: int = 8, cache_T: Optional[int] = None,
+                 sched_cfg: Optional[SchedulerConfig] = None,
+                 extras: Optional[Dict[int, dict]] = None,
+                 num_blocks: Optional[int] = None):
+        self.engine = engine
+        self.executor: Executor = engine.executor
+        self.serve_cfg = engine.serve_cfg
+        requests = sorted(requests,
+                          key=lambda r: (r.arrival_time, r.request_id))
+        self.requests = requests
+        if cache_T is None:
+            need = [r.prompt_len + r.max_new_tokens for r in requests] or [1]
+            cache_T = max(need) + self.serve_cfg.cache_margin
+        self.cm = make_cache_manager(engine.cfg, n_slots, cache_T,
+                                     backend=self.serve_cfg.cache_backend,
+                                     block_size=self.serve_cfg.block_size,
+                                     num_blocks=num_blocks,
+                                     executor=engine.executor)
+        self.paged = isinstance(self.cm, PagedCacheManager)
+        # prefill caches must slice into whole blocks on the paged store
+        self.cache_T = self.cm.prefill_T if self.paged else cache_T
+        sched_cfg = sched_cfg if sched_cfg is not None else SchedulerConfig()
+        if sched_cfg.prefill_bucketing is None:
+            # pow2 buckets need right-padding-safe prefill: attention KV
+            # families without per-request extra inputs
+            ragged_ok = (engine.cfg.family not in ("ssm", "hybrid")
+                         and not extras)
+            sched_cfg = dataclasses.replace(
+                sched_cfg, prefill_bucketing="pow2" if ragged_ok else "exact")
+        self.rq = RequestQueue(max_waiting=sched_cfg.max_waiting)
+        self.sched = QuasiSyncScheduler(self.rq, self.cm, sched_cfg)
+        self.ragged = self.sched.bucketing == "pow2"
+        self.extras = extras
+        self.n_slots = n_slots
+        # deque: submit_arrivals pops from the head every decode step, and
+        # list.pop(0) is O(n) — O(n^2) over long request streams
+        self.arrivals = collections.deque(requests)
+        self.active: Dict[int, Request] = {}      # slot -> request
+        self.last_tok = np.zeros(n_slots, np.int32)
+        self.slot_keys = np.zeros((n_slots, 2), np.uint32)
+        self.now = 0.0
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
+        self.n_preemptions = 0
+        self.peak_active = 0
+        self._decode_fn = engine.executor.decode_sample_fn(
+            self.serve_cfg.temperature, paged=self.paged)
+
+    # -- admission / preemption --------------------------------------------
+
+    def submit_arrivals(self):
+        """Move arrivals whose time has come into the waiting queue;
+        requests that cannot ever fit the cache are rejected up front."""
+        while self.arrivals and self.arrivals[0].arrival_time <= self.now:
+            req = self.arrivals.popleft()
+            if not self.cm.fits(req.prompt_len, req.max_new_tokens):
+                self.rq.reject(req, self.now)
+                continue
+            self.rq.submit(req, self.now)
+
+    def pick_victim(self) -> Optional[int]:
+        """Preemption victim: the most recently admitted active request —
+        it has the least progress to replay (oldest requests keep theirs;
+        unreferenced prefix-cache blocks were already reclaimed LRU-first
+        by the pool)."""
+        cands = [(req.admitted_at or 0.0, req.request_id, slot)
+                 for slot, req in self.active.items()]
+        if not cands:
+            return None
+        return max(cands)[2]
+
+    def preempt(self, slot: int):
+        """Evict ``slot``'s request back to the queue head with its
+        generated tokens queued for token-exact replay."""
+        req = self.active.pop(slot)
+        self.cm.free(slot)
+        req.preempt()           # -> WAITING, tokens queued for replay
+        self.rq.push_front(req)
+        self.n_preemptions += 1
+
+    def insert_with_preemption(self, slot: int, cache, req: Request,
+                               src_index: int):
+        """Install a prefill cache into ``slot``, preempting actives (newest
+        first) until the paged pool can cover the miss suffix."""
+        while True:
+            try:
+                self.cm.insert(slot, cache, req.prompt_len,
+                               src_index=src_index, tokens=req.prompt)
+                return
+            except NoFreeBlocks:
+                # the inserting request holds no slot entry in `active`
+                # yet, so it can never preempt itself here
+                victim = self.pick_victim()
+                if victim is None:
+                    raise RuntimeError(
+                        "paged pool cannot hold a single admitted "
+                        "request; increase num_blocks")
+                self.preempt(victim)
+
+    def admit(self, group: List[Request]):
+        """Fused prefill of one admission group: run the prompts, sample
+        (or replay) each request's first token, and install survivors into
+        slots."""
+        engine = self.engine
+        for req in group:
+            req.transition(RequestState.PREFILL)
+            req.admitted_at = self.now
+        lens = np.asarray([r.prompt_len for r in group], np.int32)
+        # pow2 buckets: right-pad hetero prompts to one fused prefill
+        # shape (valid rows are causal-mask-independent of the padding)
+        pad_to = (prefill_bucket_len(int(lens.max()), self.cm.cache_T)
+                  if self.ragged else int(lens.max()))
+        toks = np.zeros((len(group), pad_to), np.int32)
+        for j, r in enumerate(group):
+            toks[j, :r.prompt_len] = r.prompt
+        batch = {"tokens": toks}
+        extras = self.extras
+        if extras:
+            keys = sorted({k for r in group
+                           for k in (extras.get(r.request_id) or {})})
+            if "positions" in keys:
+                raise NotImplementedError(
+                    "M-RoPE 'positions' is (3, B, S) — extras are "
+                    "stacked on a leading batch axis and cannot "
+                    "express it")
+            for k in keys:
+                missing = [r.request_id for r in group
+                           if k not in (extras.get(r.request_id) or {})]
+                if missing:
+                    raise ValueError(
+                        f"prefill group mixes requests with and without "
+                        f"extra input {k!r} (missing for {missing})")
+                batch[k] = np.stack(
+                    [np.asarray(extras[r.request_id][k]) for r in group])
+        t0 = time.perf_counter()
+        if self.ragged:
+            logits, cache = self.executor.prefill(batch, self.cache_T,
+                                                  prompt_lens=lens)
+        else:
+            logits, cache = self.executor.prefill(batch, self.cache_T)
+        logits.block_until_ready()
+        self.prefill_s += time.perf_counter() - t0
+        for j, req in enumerate(group):
+            if req.replay:
+                # preempted request: re-emit its original first token
+                tok = req.replay.pop(0)
+            else:
+                tok = int(np.asarray(engine._sample(
+                    logits[j:j + 1], engine._request_key(req, 0)))[0])
+            req.tokens.append(tok)
+            if req.first_token_at is None:
+                req.first_token_at = self.now
+            reason = engine._finished(req, tok)
+            if reason is not None:
+                req.finish(self.now, reason)
+                continue
+            slot = self.cm.alloc()
+            self.insert_with_preemption(slot, cache, req, j)
+            req.slot = slot
+            req.transition(RequestState.DECODE)
+            self.active[slot] = req
+            self.last_tok[slot] = tok
+            if self.serve_cfg.temperature > 0:
+                self.slot_keys[slot] = np.asarray(
+                    engine._request_key_base(req))
+
+    # -- stepping -----------------------------------------------------------
+
+    def writable_slots(self) -> List[int]:
+        """Active slots that can write this step's token.  On the paged
+        store every slot must own a writable tail block (allocate at block
+        boundaries, copy-on-write shared tails); when the pool runs dry the
+        newest admission is preempted and the check retried."""
+        slots = list(self.active.keys())
+        if not self.paged:
+            return slots
+        while slots:
+            if self.cm.prepare_append(slots) is None:
+                return slots
+            self.preempt(self.pick_victim())   # newest admission goes
+            slots = list(self.active.keys())
+        return slots
+
+    def decode_once(self, slots: List[int]):
+        """One batched decode step: fixed (n_slots, ...) shapes, decode +
+        fold + sample fused into ONE jitted dispatch with the cache buffer
+        donated; only the (n_slots,) sampled tokens transfer to host."""
+        counts = np.zeros(self.n_slots, np.uint32)
+        for s in slots:
+            counts[s] = len(self.active[s].tokens)
+        step = {"tokens": jnp.asarray(self.last_tok[:, None]),
+                "cache_len": self.cm.cache_len_vector()}
+        if self.paged:
+            step["block_tables"] = self.cm.block_tables_device()
+        t0 = time.perf_counter()
+        toks, new_cache = self._decode_fn(self.cm.cache, step,
+                                          jnp.asarray(self.slot_keys),
+                                          jnp.asarray(counts))
+        toks.block_until_ready()
+        self.decode_s += time.perf_counter() - t0
+        self.cm.update(new_cache)
+        self.cm.advance(slots)
+        self.sched.observe_decode_step()
+        self.peak_active = max(self.peak_active, len(slots))
+        self.now += 1.0
+        toks_np = np.asarray(toks)
+        for slot in slots:
+            req = self.active[slot]
+            if req.replay:
+                # replaying a preemption: force the recorded token (the
+                # greedy resample equals it; this also pins temperature
+                # sampling to the original stream)
+                tok = req.replay.pop(0)
+            else:
+                tok = int(toks_np[slot])
+            req.tokens.append(tok)
+            self.last_tok[slot] = tok
+            reason = self.engine._finished(req, tok)
+            if reason is not None:
+                del self.active[slot]
+                self.cm.free(slot)
+                req.finish(self.now, reason)
+
+    def run(self) -> ServeReport:
+        self.submit_arrivals()
+        while self.arrivals or len(self.rq) or self.active:
+            for group in self.sched.plan_admissions():
+                self.admit(group)
+            if not self.active:
+                if not self.arrivals and not len(self.rq):
+                    break
+                if not len(self.rq) and self.arrivals:
+                    # idle: jump the virtual clock to the next arrival
+                    self.now = max(self.now, self.arrivals[0].arrival_time)
+                    self.submit_arrivals()
+                continue
+            slots = self.writable_slots()
+            if not slots:
+                continue
+            self.decode_once(slots)
+            self.submit_arrivals()
+        return self.report()
+
+    def report(self) -> ServeReport:
+        cm, paged = self.cm, self.paged
+        results = [
+            RequestResult(
+                request_id=r.request_id,
+                tokens=np.asarray(r.tokens, np.int64),
+                prompt_len=r.prompt_len,
+                arrival_time=r.arrival_time,
+                ttft_steps=r.ttft,
+                latency_steps=r.latency,
+                finish_reason=r.finish_reason or "unknown",
+            )
+            for r in sorted(self.requests, key=lambda r: r.request_id)
+        ]
+        total_new = sum(len(r.tokens) for r in results
+                        if r.finish_reason != "rejected")
+        mesh = self.executor.mesh
+        return ServeReport(
+            results=results,
+            prefill_s=self.prefill_s,
+            decode_s=self.decode_s,
+            steps=self.sched.n_decode_steps,
+            n_syncs=self.sched.n_syncs,
+            n_rejected=self.rq.n_rejected,
+            total_new_tokens=total_new,
+            slot_utilization=self.sched.slot_utilization,
+            max_divergence=self.sched.max_divergence,
+            deployment=self.engine.deployment_estimate(),
+            cache_backend=self.serve_cfg.cache_backend,
+            n_preemptions=self.n_preemptions,
+            prefix_hit_blocks=(cm.pool.n_prefix_hits if paged else 0),
+            cow_blocks=(cm.pool.n_cow if paged else 0),
+            # the pool's own high-water mark: catches allocation peaks hit
+            # during prefill inserts, not just post-decode-step samples
+            peak_blocks_in_use=(cm.pool.peak_live if paged else 0),
+            peak_active_slots=self.peak_active,
+            mesh_shape=(None if mesh is None
+                        else tuple(int(d) for d in mesh.devices.shape)),
+        )
+
+
 class ServingEngine:
-    def __init__(self, arch_cfg, params, serve_cfg: Optional[ServeConfig] = None):
+    def __init__(self, arch_cfg, params, serve_cfg: Optional[ServeConfig] = None,
+                 executor: Optional[Executor] = None):
         self.cfg = arch_cfg
         self.serve_cfg = ServeConfig() if serve_cfg is None else serve_cfg
-        self.matmul_backend = getattr(arch_cfg, "matmul_backend", "auto")
         if arch_cfg.matmul_mode in ("bp_exact", "bp_approx"):
             # weight-resident fast path: quantize every dense kernel to int8 +
             # per-channel scale ONCE, instead of per-channel re-quantizing the
             # float weights on every forward inside the decode hot loop
             # (idempotent — already-int8 params pass through untouched)
             params = quantize_dense_params(params)
-        self.params = params
-        self._prefill = self._jit(
-            lambda p, b, t: api.prefill(p, self.cfg, b, t),
-            static_argnums=(2,))
-        # ragged variant: per-row last-position logits for power-of-two
-        # prefill buckets (compiles per bucket shape — O(log S) variants)
-        self._prefill_ragged = self._jit(
-            lambda p, b, t, lens: api.prefill(p, self.cfg, b, t,
-                                              prompt_lens=lens),
-            static_argnums=(2,))
-        self._decode = self._jit(lambda p, b: api.decode_step(p, self.cfg, b))
-        # fused decode+sample entry points, built lazily per (temperature,
-        # eos, chunk) so ``serve_cfg`` stays mutable between calls
-        self._decode_sample_jits: Dict[tuple, object] = {}
-        self._decode_scan_jits: Dict[tuple, object] = {}
+        if executor is None:
+            executor = make_executor(arch_cfg, params,
+                                     mesh_shape=self.serve_cfg.mesh_shape)
+        self.executor = executor
+        self.matmul_backend = executor.matmul_backend
         self._deployment_cache: Dict[int, Optional[dict]] = {}
 
-    def _jit(self, fn, **jit_kwargs):
-        """jax.jit with the config's matmul backend scoped around the trace,
-        so bp_* contractions route through the fused Pallas kernel / XLA
-        oracle as selected (``core.bp_matmul`` dispatch)."""
-        backend = self.matmul_backend
-
-        @functools.wraps(fn)
-        def traced(*args, **kwargs):
-            with bp_matmul.use_matmul_backend(backend):
-                return fn(*args, **kwargs)
-
-        return jax.jit(traced, **jit_kwargs)
+    @property
+    def params(self):
+        """The executor-placed (pre-quantized) params."""
+        return self.executor.params
 
     def _sample(self, logits, key):
         if self.serve_cfg.temperature <= 0:
             return jnp.argmax(logits, axis=-1)
         return jax.random.categorical(key, logits / self.serve_cfg.temperature,
                                       axis=-1)
-
-    # ------------------------------------------------------------------
-    # Device-resident decode steps (sampling fused into the jitted step)
-    # ------------------------------------------------------------------
-
-    def _decode_sample_fn(self, temperature: float, paged: bool = False):
-        """Jitted (params, step, keys, counts) -> (tokens, new_cache) for the
-        continuous path: decode + per-slot sampling in ONE dispatch, so only
-        the (n_slots,) sampled tokens ever cross to the host — not the
-        (n_slots, V) logits.  ``paged`` routes through the block-table
-        decode step (``step`` then carries ``block_tables``)."""
-        cache_key = (float(temperature), bool(paged))
-        fn = self._decode_sample_jits.get(cache_key)
-        if fn is not None:
-            return fn
-        decode = api.decode_step_paged if paged else api.decode_step
-
-        def step_fn(p, step, keys, counts):
-            logits, new_cache = decode(p, self.cfg, step)
-            if temperature <= 0:
-                tok = jnp.argmax(logits, axis=-1)
-            else:
-                ks = jax.vmap(jax.random.fold_in)(keys, counts)
-                tok = jax.vmap(jax.random.categorical)(ks,
-                                                       logits / temperature)
-            return tok.astype(jnp.int32), new_cache
-
-        fn = self._jit(step_fn)
-        self._decode_sample_jits[cache_key] = fn
-        return fn
-
-    def _decode_scan_fn(self, chunk: int, temperature: float,
-                        eos_id: Optional[int]):
-        """Jitted multi-token decode for the static path: a ``lax.scan`` over
-        ``chunk`` steps with sampling + EOS masking folded in.  Returns
-        (last_tok, cache, done, key, tokens (chunk, B)); only the sampled
-        tokens and done flags leave the device."""
-        cache_key = (int(chunk), float(temperature), eos_id)
-        fn = self._decode_scan_jits.get(cache_key)
-        if fn is not None:
-            return fn
-
-        def scan_fn(p, tok, cache, done, key, pos0, i0):
-            def body(carry, j):
-                tok, cache, done, key = carry
-                if eos_id is not None:
-                    done = done | (tok == eos_id)
-                step = {"tokens": tok[:, None], "cache": cache,
-                        "cache_len": (pos0 + j).astype(jnp.int32)}
-                logits, cache = api.decode_step(p, self.cfg, step)
-                key = jax.random.fold_in(key, i0 + j)
-                if temperature <= 0:
-                    new = jnp.argmax(logits, axis=-1)
-                else:
-                    new = jax.random.categorical(key, logits / temperature,
-                                                 axis=-1)
-                new = new.astype(tok.dtype)
-                if eos_id is not None:
-                    new = jnp.where(done, eos_id, new)
-                return (new, cache, done, key), new
-
-            carry, toks = jax.lax.scan(
-                body, (tok, cache, done, key), jnp.arange(chunk))
-            tok, cache, done, key = carry
-            return tok, cache, done, key, toks
-
-        fn = self._jit(scan_fn)
-        self._decode_scan_jits[cache_key] = fn
-        return fn
 
     # ------------------------------------------------------------------
     # Static path (device-resident chunked decode)
@@ -268,13 +484,14 @@ class ServingEngine:
         chunk_pref = max(1, self.serve_cfg.decode_chunk)
 
         t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, batch, cache_T)
+        logits, cache = self.executor.prefill(batch, cache_T)
         logits.block_until_ready()
         t1 = time.perf_counter()
 
         # device-resident decode: chunks of ``decode_chunk`` tokens advance
         # inside one jitted lax.scan each; per chunk only (B,) tokens + done
-        # flags come back to the host (EOS early-exit at chunk boundaries)
+        # flags come back to the host (EOS early-exit at chunk boundaries).
+        # The cache buffer is donated across chunk dispatches (executor).
         tok = self._sample(logits, key).astype(jnp.int32)
         done = jnp.zeros((B,), bool)
         chunks = [tok[:, None]]
@@ -290,10 +507,9 @@ class ServingEngine:
             # is a separate whole-model compile)
             chunk = (chunk_pref if remaining >= chunk_pref
                      else 1 << (remaining.bit_length() - 1))
-            scan = self._decode_scan_fn(chunk, temperature, eos)
+            scan = self.executor.decode_scan_fn(chunk, temperature, eos)
             tok, cache, done, key, toks = scan(
-                self.params, tok, cache, done, key,
-                jnp.int32(S + start), jnp.int32(start))
+                tok, cache, done, key, jnp.int32(S + start), jnp.int32(start))
             chunks.append(toks.T)
             start += chunk
         jax.block_until_ready(tok)
@@ -331,6 +547,17 @@ class ServingEngine:
             return "length"
         return None
 
+    def make_loop(self, requests: Sequence[Request], *, n_slots: int = 8,
+                  cache_T: Optional[int] = None,
+                  sched_cfg: Optional[SchedulerConfig] = None,
+                  extras: Optional[Dict[int, dict]] = None,
+                  num_blocks: Optional[int] = None) -> ServeLoop:
+        """Build (without running) the orchestration loop for one serve
+        call — the unit-testing entry point for its components."""
+        return ServeLoop(self, requests, n_slots=n_slots, cache_T=cache_T,
+                         sched_cfg=sched_cfg, extras=extras,
+                         num_blocks=num_blocks)
+
     def serve(self, requests: Sequence[Request], *, n_slots: int = 8,
               cache_T: Optional[int] = None,
               sched_cfg: Optional[SchedulerConfig] = None,
@@ -352,252 +579,12 @@ class ServingEngine:
         ``block_size``-token blocks on demand (``num_blocks`` caps the pool
         — default matches the slab footprint) with automatic prefix sharing
         and LRU-backed preemption-and-requeue when the pool runs dry.
-        Greedy outputs are token-identical across backends.
+        Greedy outputs are token-identical across backends — and across
+        executors (single-device vs mesh).
         """
-        requests = sorted(requests, key=lambda r: (r.arrival_time, r.request_id))
-        if cache_T is None:
-            need = [r.prompt_len + r.max_new_tokens for r in requests] or [1]
-            cache_T = max(need) + self.serve_cfg.cache_margin
-        cm = make_cache_manager(self.cfg, n_slots, cache_T,
-                                backend=self.serve_cfg.cache_backend,
-                                block_size=self.serve_cfg.block_size,
-                                num_blocks=num_blocks)
-        paged = isinstance(cm, PagedCacheManager)
-        if paged:
-            # prefill caches must slice into whole blocks
-            cache_T = cm.prefill_T
-        sched_cfg = sched_cfg if sched_cfg is not None else SchedulerConfig()
-        if sched_cfg.prefill_bucketing is None:
-            # pow2 buckets need right-padding-safe prefill: attention KV
-            # families without per-request extra inputs
-            ragged_ok = self.cfg.family not in ("ssm", "hybrid") and not extras
-            sched_cfg = dataclasses.replace(
-                sched_cfg, prefill_bucketing="pow2" if ragged_ok else "exact")
-        rq = RequestQueue(max_waiting=sched_cfg.max_waiting)
-        sched = QuasiSyncScheduler(rq, cm, sched_cfg)
-        ragged = sched.bucketing == "pow2"
-
-        # deque: submit_arrivals pops from the head every decode step, and
-        # list.pop(0) is O(n) — O(n^2) over long request streams
-        arrivals = collections.deque(requests)
-        active: Dict[int, Request] = {}           # slot -> request
-        last_tok = np.zeros(n_slots, np.int32)    # per-slot last sampled token
-        slot_keys = np.zeros((n_slots, 2), np.uint32)  # per-slot PRNG base
-        now = 0.0
-        prefill_s = 0.0
-        t_decode = 0.0
-        n_preempt = 0
-        peak_active = 0
-        decode_fn = self._decode_sample_fn(self.serve_cfg.temperature,
-                                           paged=paged)
-
-        def submit_arrivals():
-            while arrivals and arrivals[0].arrival_time <= now:
-                req = arrivals.popleft()
-                if not cm.fits(req.prompt_len, req.max_new_tokens):
-                    rq.reject(req, now)
-                    continue
-                rq.submit(req, now)
-
-        def pick_victim() -> Optional[int]:
-            """Preemption victim: the most recently admitted active request
-            — it has the least progress to replay (oldest requests keep
-            theirs; unreferenced prefix-cache blocks were already reclaimed
-            LRU-first by the pool)."""
-            cands = [(req.admitted_at or 0.0, req.request_id, slot)
-                     for slot, req in active.items()]
-            if not cands:
-                return None
-            return max(cands)[2]
-
-        def preempt(slot: int):
-            nonlocal n_preempt
-            req = active.pop(slot)
-            cm.free(slot)
-            req.preempt()           # -> WAITING, tokens queued for replay
-            rq.push_front(req)
-            n_preempt += 1
-
-        def insert_with_preemption(slot, cache, req, src_index):
-            while True:
-                try:
-                    cm.insert(slot, cache, req.prompt_len,
-                              src_index=src_index, tokens=req.prompt)
-                    return
-                except NoFreeBlocks:
-                    # the inserting request holds no slot entry in `active`
-                    # yet, so it can never preempt itself here
-                    victim = pick_victim()
-                    if victim is None:
-                        raise RuntimeError(
-                            "paged pool cannot hold a single admitted "
-                            "request; increase num_blocks")
-                    preempt(victim)
-
-        def admit(group: List[Request]):
-            nonlocal prefill_s
-            for req in group:
-                req.transition(RequestState.PREFILL)
-                req.admitted_at = now
-            lens = np.asarray([r.prompt_len for r in group], np.int32)
-            # pow2 buckets: right-pad hetero prompts to one fused prefill
-            # shape (valid rows are causal-mask-independent of the padding)
-            pad_to = (prefill_bucket_len(int(lens.max()), cm.cache_T)
-                      if ragged else int(lens.max()))
-            toks = np.zeros((len(group), pad_to), np.int32)
-            for j, r in enumerate(group):
-                toks[j, :r.prompt_len] = r.prompt
-            batch = {"tokens": toks}
-            if extras:
-                keys = sorted({k for r in group
-                               for k in (extras.get(r.request_id) or {})})
-                if "positions" in keys:
-                    raise NotImplementedError(
-                        "M-RoPE 'positions' is (3, B, S) — extras are "
-                        "stacked on a leading batch axis and cannot "
-                        "express it")
-                for k in keys:
-                    missing = [r.request_id for r in group
-                               if k not in (extras.get(r.request_id) or {})]
-                    if missing:
-                        raise ValueError(
-                            f"prefill group mixes requests with and without "
-                            f"extra input {k!r} (missing for {missing})")
-                    batch[k] = np.stack(
-                        [np.asarray(extras[r.request_id][k]) for r in group])
-            t0 = time.perf_counter()
-            if ragged:
-                logits, cache = self._prefill_ragged(self.params, batch,
-                                                     cache_T,
-                                                     jnp.asarray(lens))
-            else:
-                logits, cache = self._prefill(self.params, batch, cache_T)
-            logits.block_until_ready()
-            prefill_s += time.perf_counter() - t0
-            for j, req in enumerate(group):
-                if req.replay:
-                    # preempted request: re-emit its original first token
-                    tok = req.replay.pop(0)
-                else:
-                    tok = int(np.asarray(self._sample(
-                        logits[j:j + 1], self._request_key(req, 0)))[0])
-                req.tokens.append(tok)
-                if req.first_token_at is None:
-                    req.first_token_at = now
-                reason = self._finished(req, tok)
-                if reason is not None:
-                    req.finish(now, reason)
-                    continue
-                slot = cm.alloc()
-                insert_with_preemption(slot, cache, req, j)
-                req.slot = slot
-                req.transition(RequestState.DECODE)
-                active[slot] = req
-                last_tok[slot] = tok
-                if self.serve_cfg.temperature > 0:
-                    slot_keys[slot] = np.asarray(self._request_key_base(req))
-
-        submit_arrivals()
-        while arrivals or len(rq) or active:
-            for group in sched.plan_admissions():
-                admit(group)
-            if not active:
-                if not arrivals and not len(rq):
-                    break
-                if not len(rq) and arrivals:
-                    # idle: jump the virtual clock to the next arrival
-                    now = max(now, arrivals[0].arrival_time)
-                    submit_arrivals()
-                continue
-
-            slots = list(active.keys())
-            if paged:
-                # every active slot must own a writable block for this
-                # step's token: allocate at block boundaries, copy-on-write
-                # shared tails; preempt-and-requeue when the pool runs dry
-                while slots:
-                    if cm.prepare_append(slots) is None:
-                        break
-                    preempt(pick_victim())   # newest admission goes
-                    slots = list(active.keys())
-                if not slots:
-                    continue
-
-            # fixed (n_slots, ...) shapes: decode + fold + sample fused into
-            # ONE jitted dispatch, free-slot rows sampled and discarded; only
-            # the (n_slots,) sampled tokens transfer to host, never logits
-            counts = np.zeros(n_slots, np.uint32)
-            for s in slots:
-                counts[s] = len(active[s].tokens)
-            step = {"tokens": jnp.asarray(last_tok[:, None]),
-                    "cache": cm.cache,
-                    "cache_len": cm.cache_len_vector()}
-            if paged:
-                step["block_tables"] = cm.block_tables_device()
-            t0 = time.perf_counter()
-            toks, new_cache = decode_fn(self.params, step,
-                                        jnp.asarray(slot_keys),
-                                        jnp.asarray(counts))
-            toks.block_until_ready()
-            t_decode += time.perf_counter() - t0
-            cm.update(new_cache)
-            cm.advance(slots)
-            sched.observe_decode_step()
-            peak_active = max(peak_active, len(slots))
-            now += 1.0
-            toks_np = np.asarray(toks)
-            for slot in slots:
-                req = active[slot]
-                if req.replay:
-                    # replaying a preemption: force the recorded token (the
-                    # greedy resample equals it; this also pins temperature
-                    # sampling to the original stream)
-                    tok = req.replay.pop(0)
-                else:
-                    tok = int(toks_np[slot])
-                req.tokens.append(tok)
-                last_tok[slot] = tok
-                reason = self._finished(req, tok)
-                if reason is not None:
-                    del active[slot]
-                    cm.free(slot)
-                    req.finish(now, reason)
-            submit_arrivals()
-
-        results = [
-            RequestResult(
-                request_id=r.request_id,
-                tokens=np.asarray(r.tokens, np.int64),
-                prompt_len=r.prompt_len,
-                arrival_time=r.arrival_time,
-                ttft_steps=r.ttft,
-                latency_steps=r.latency,
-                finish_reason=r.finish_reason or "unknown",
-            )
-            for r in sorted(requests, key=lambda r: r.request_id)
-        ]
-        total_new = sum(len(r.tokens) for r in results
-                        if r.finish_reason != "rejected")
-        return ServeReport(
-            results=results,
-            prefill_s=prefill_s,
-            decode_s=t_decode,
-            steps=sched.n_decode_steps,
-            n_syncs=sched.n_syncs,
-            n_rejected=rq.n_rejected,
-            total_new_tokens=total_new,
-            slot_utilization=sched.slot_utilization,
-            max_divergence=sched.max_divergence,
-            deployment=self.deployment_estimate(),
-            cache_backend=self.serve_cfg.cache_backend,
-            n_preemptions=n_preempt,
-            prefix_hit_blocks=(cm.pool.n_prefix_hits if paged else 0),
-            cow_blocks=(cm.pool.n_cow if paged else 0),
-            # the pool's own high-water mark: catches allocation peaks hit
-            # during prefill inserts, not just post-decode-step samples
-            peak_blocks_in_use=(cm.pool.peak_live if paged else 0),
-            peak_active_slots=peak_active,
-        )
+        return self.make_loop(requests, n_slots=n_slots, cache_T=cache_T,
+                              sched_cfg=sched_cfg, extras=extras,
+                              num_blocks=num_blocks).run()
 
     # ------------------------------------------------------------------
     # BitParticle deployment estimate

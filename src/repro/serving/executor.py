@@ -1,0 +1,400 @@
+"""Serving execution layer: device placement, jit tracing, donation, meshes.
+
+The engine (``serving/engine.py``) is pure host-side orchestration —
+admission, scheduling, preemption, token bookkeeping.  Everything
+device-shaped lives here, behind one ``Executor`` interface:
+
+  * **jit tracing** — every compiled entry point (prefill, fused
+    decode+sample step, multi-token decode scan, cache surgery) is traced
+    under the config's ``matmul_backend`` (``core.bp_matmul`` dispatch), so
+    ``bp_*`` contractions route through the fused Pallas kernel / XLA
+    oracle exactly as before the engine/executor split.
+  * **buffer donation** — the pooled decode cache is donated
+    (``donate_argnums``) into the decode step, the decode scan chunk, and
+    the ``slot_insert``/``paged_insert``/``copy_block`` surgery ops: per-step
+    KV updates and admissions alias the cache buffer in place instead of
+    allocating a second cache-sized copy (``tests/test_executor.py`` pins
+    this with an HLO aliasing regression test).
+  * **device placement** — params are placed once at construction; caches
+    are allocated through the executor so their residency/sharding is an
+    executor decision, not an engine one.
+
+Two executors ship behind the interface:
+
+  * :class:`SingleDeviceExecutor` — the default: plain jit on the default
+    device (the pre-split behavior).
+  * :class:`MeshExecutor` — tensor-parallel serving over a
+    ``("data", "model")`` jax mesh.  Pre-quantized weights are TP-sharded
+    over ``"model"`` (``distributed.sharding.param_specs``, serve recipe:
+    last dim of every dense kernel), the slab KV cache is sharded per the
+    existing ``decode`` logical-axis recipe (slot/batch axis over
+    ``"data"``, KV sequence axis over ``"model"`` — split-KV decode), and
+    the block-paged cache + block tables stay replicated
+    (``api.paged_cache_logical_axes``).  Every trace runs inside the mesh +
+    ``decode`` recipe scope, so the model's ``shard()`` constraints engage;
+    kernel backends fall back to the XLA oracle under a mesh
+    (``bp_matmul.resolve_matmul_backend``) because the Pallas kernels are
+    not shard_map-partitioned.  Greedy outputs are token-identical to
+    single-device execution (``tests/test_sharded_serving.py``).
+
+``params`` may be None for cache-only use: the cache managers build a
+default executor when constructed directly (tests); the model entry points
+then raise.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import bp_matmul
+from repro.distributed import sharding as shd
+from repro.models import api
+
+
+class Executor:
+    """Execution-layer interface + the shared jit/donation machinery.
+
+    Subclasses override the placement hooks (``_place_params``,
+    ``_place_cache``, ``put``) and the trace scope (``_scopes``); the entry
+    points themselves are layout-agnostic.
+    """
+
+    def __init__(self, cfg, params=None,
+                 matmul_backend: Optional[str] = None):
+        self.cfg = cfg
+        self.matmul_backend = (getattr(cfg, "matmul_backend", "auto")
+                               if matmul_backend is None else matmul_backend)
+        self._params = (self._place_params(params)
+                        if params is not None else None)
+        self._jits: Dict[tuple, object] = {}
+
+    # -- placement hooks (single-device defaults) ---------------------------
+
+    @property
+    def mesh(self):
+        """The mesh this executor runs over (None on a single device)."""
+        return None
+
+    def _place_params(self, params):
+        return params
+
+    def _place_cache(self, cache, *, paged: bool):
+        return cache
+
+    def put(self, x):
+        """Host array -> device array (replicated under a mesh)."""
+        return jnp.asarray(x)
+
+    def _trace_scopes(self):
+        """Context managers entered INSIDE the traced function — they set
+        thread-local state consulted while tracing (backend dispatch,
+        recipe rules), so on cached dispatches they cost nothing."""
+        return [bp_matmul.use_matmul_backend(self.matmul_backend)]
+
+    def _call_scopes(self):
+        """Context managers entered around every CALL — only what cannot
+        live inside a trace (mesh activation on the mesh executor).  Empty
+        here, so the single-device hot loop is a bare jitted dispatch."""
+        return []
+
+    # -- jit plumbing -------------------------------------------------------
+
+    def _jit(self, fn, **jit_kwargs):
+        """jax.jit with the executor's scopes applied: trace-time scopes
+        wrap the traced body (entered only while tracing), call-time scopes
+        wrap the dispatch.  The returned callable keeps a ``.lower``
+        (scoped the same way) so tests can inspect the compiled HLO —
+        e.g. the donation/aliasing regression test."""
+        trace_scopes = self._trace_scopes
+
+        @functools.wraps(fn)
+        def traced(*args, **kwargs):
+            with contextlib.ExitStack() as stack:
+                for ctx in trace_scopes():
+                    stack.enter_context(ctx)
+                return fn(*args, **kwargs)
+
+        jitted = jax.jit(traced, **jit_kwargs)
+
+        def call(*args, **kwargs):
+            scopes = self._call_scopes()
+            if not scopes:
+                return jitted(*args, **kwargs)
+            with contextlib.ExitStack() as stack:
+                for ctx in scopes:
+                    stack.enter_context(ctx)
+                return jitted(*args, **kwargs)
+
+        def lower(*args, **kwargs):
+            with contextlib.ExitStack() as stack:
+                for ctx in self._call_scopes():
+                    stack.enter_context(ctx)
+                return jitted.lower(*args, **kwargs)
+
+        call.lower = lower
+        return call
+
+    def _get(self, key, build):
+        fn = self._jits.get(key)
+        if fn is None:
+            fn = build()
+            self._jits[key] = fn
+        return fn
+
+    def _require_params(self):
+        if self._params is None:
+            raise ValueError(
+                "this executor was built without params (cache-only use); "
+                "model entry points are unavailable")
+
+    # -- model entry points -------------------------------------------------
+
+    @property
+    def params(self):
+        """The placed (and, upstream, pre-quantized) model params."""
+        return self._params
+
+    def prefill(self, batch, cache_T: int, prompt_lens=None):
+        """Compiled prefill; ``prompt_lens`` selects the ragged right-padded
+        variant (per-row last-position logits, pow2 prefill buckets)."""
+        self._require_params()
+        cfg = self.cfg
+        if prompt_lens is None:
+            fn = self._get(("prefill",), lambda: self._jit(
+                lambda p, b, t: api.prefill(p, cfg, b, t),
+                static_argnums=(2,)))
+            return fn(self._params, batch, cache_T)
+        fn = self._get(("prefill_ragged",), lambda: self._jit(
+            lambda p, b, t, lens: api.prefill(p, cfg, b, t,
+                                              prompt_lens=lens),
+            static_argnums=(2,)))
+        return fn(self._params, batch, cache_T, jnp.asarray(prompt_lens))
+
+    def decode_step(self, step):
+        """One raw decode dispatch (logits leave the device; no sampling
+        fusion, no donation) — the legacy-loop comparison path used by
+        ``benchmarks/decode_latency.py`` and logits-level tests."""
+        self._require_params()
+        cfg = self.cfg
+        fn = self._get(("decode_step",), lambda: self._jit(
+            lambda p, s: api.decode_step(p, cfg, s)))
+        return fn(self._params, step)
+
+    def decode_sample_fn(self, temperature: float, paged: bool = False):
+        """``fn(cache, step, keys, counts) -> (tokens, new_cache)`` for the
+        continuous path: decode + per-slot sampling fused into ONE dispatch
+        (only the (n_slots,) sampled tokens cross to the host, never the
+        logits), with the cache buffer DONATED — the per-step KV update
+        aliases the pool instead of copying it.  ``paged`` routes through
+        the block-table decode step (``step`` then carries
+        ``block_tables``)."""
+        self._require_params()
+        cfg = self.cfg
+
+        def build():
+            decode = api.decode_step_paged if paged else api.decode_step
+
+            def step_fn(p, cache, step, keys, counts):
+                logits, new_cache = decode(p, cfg, dict(step, cache=cache))
+                # pin the output layout to the input layout so the donated
+                # buffer aliases instead of resharding (no-op off-mesh)
+                new_cache = api.shard_cache(cfg, new_cache, paged=paged)
+                if temperature <= 0:
+                    tok = jnp.argmax(logits, axis=-1)
+                else:
+                    ks = jax.vmap(jax.random.fold_in)(keys, counts)
+                    tok = jax.vmap(jax.random.categorical)(
+                        ks, logits / temperature)
+                return tok.astype(jnp.int32), new_cache
+
+            jitted = self._jit(step_fn, donate_argnums=(1,))
+
+            def fn(cache, step, keys, counts):
+                return jitted(self._params, cache, step, keys, counts)
+
+            fn.lower = lambda cache, step, keys, counts: jitted.lower(
+                self._params, cache, step, keys, counts)
+            return fn
+
+        return self._get(("decode_sample", float(temperature), bool(paged)),
+                         build)
+
+    def decode_scan_fn(self, chunk: int, temperature: float,
+                       eos_id: Optional[int]):
+        """``fn(tok, cache, done, key, pos0, i0) -> (tok, cache, done, key,
+        tokens (chunk, B))`` for the static path: a jitted ``lax.scan`` over
+        ``chunk`` decode steps with sampling + EOS masking folded in and the
+        cache donated across the dispatch."""
+        self._require_params()
+        cfg = self.cfg
+
+        def build():
+            def scan_fn(p, tok, cache, done, key, pos0, i0):
+                def body(carry, j):
+                    tok, cache, done, key = carry
+                    if eos_id is not None:
+                        done = done | (tok == eos_id)
+                    step = {"tokens": tok[:, None], "cache": cache,
+                            "cache_len": (pos0 + j).astype(jnp.int32)}
+                    logits, cache = api.decode_step(p, cfg, step)
+                    key = jax.random.fold_in(key, i0 + j)
+                    if temperature <= 0:
+                        new = jnp.argmax(logits, axis=-1)
+                    else:
+                        new = jax.random.categorical(
+                            key, logits / temperature, axis=-1)
+                    new = new.astype(tok.dtype)
+                    if eos_id is not None:
+                        new = jnp.where(done, eos_id, new)
+                    return (new, cache, done, key), new
+
+                carry, toks = jax.lax.scan(
+                    body, (tok, cache, done, key), jnp.arange(chunk))
+                tok, cache, done, key = carry
+                cache = api.shard_cache(cfg, cache)
+                return tok, cache, done, key, toks
+
+            jitted = self._jit(scan_fn, donate_argnums=(2,))
+            return lambda tok, cache, done, key, pos0, i0: jitted(
+                self._params, tok, cache, done, key, pos0, i0)
+
+        return self._get(("decode_scan", int(chunk), float(temperature),
+                          eos_id), build)
+
+    # -- cache allocation / surgery (params-free) ---------------------------
+
+    def zeros_cache(self, n_slots: int, cache_T: int):
+        """Allocate the pooled slab decode cache, placed per this
+        executor's layout."""
+        return self._place_cache(api.zeros_cache(self.cfg, n_slots, cache_T),
+                                 paged=False)
+
+    def zeros_paged_cache(self, num_blocks: int, block_size: int):
+        return self._place_cache(
+            api.zeros_paged_cache(self.cfg, num_blocks, block_size),
+            paged=True)
+
+    def slot_insert(self, pool, src, slot: int, src_index: int = 0):
+        """Install request ``src_index`` of a prefill cache into ``slot`` of
+        the pooled cache; the pool buffer is donated (in-place surgery, no
+        second pool-sized allocation)."""
+        cfg = self.cfg
+        fn = self._get(("slot_insert",), lambda: self._jit(
+            lambda pool, src, slot, i: api.shard_cache(
+                cfg, api.slot_insert(cfg, pool, src, slot, i)),
+            donate_argnums=(0,)))
+        return fn(pool, src, jnp.int32(slot), jnp.int32(src_index))
+
+    def paged_insert(self, pages, src, block_ids, src_index: int = 0):
+        """Scatter a prefill cache into physical pages through ``block_ids``
+        (trash-redirected entries skip shared blocks); pages donated."""
+        cfg = self.cfg
+        fn = self._get(("paged_insert",), lambda: self._jit(
+            lambda pages, src, ids, i: api.shard_cache(
+                cfg, api.paged_insert(cfg, pages, src, ids, i), paged=True),
+            donate_argnums=(0,)))
+        return fn(pages, src, jnp.asarray(block_ids, jnp.int32),
+                  jnp.int32(src_index))
+
+    def copy_block(self, pages, dst: int, src: int):
+        """Copy physical page ``src`` -> ``dst`` (copy-on-write); pages
+        donated."""
+        cfg = self.cfg
+        fn = self._get(("copy_block",), lambda: self._jit(
+            lambda pages, dst, src: api.shard_cache(
+                cfg,
+                jax.tree.map(lambda p: p.at[:, dst].set(p[:, src]), pages),
+                paged=True),
+            donate_argnums=(0,)))
+        return fn(pages, jnp.int32(dst), jnp.int32(src))
+
+
+class SingleDeviceExecutor(Executor):
+    """The default executor: plain jit on the default device."""
+
+
+class MeshExecutor(Executor):
+    """Tensor-parallel serving executor over a ``("data", "model")`` mesh.
+
+    Weights TP-shard over ``"model"`` (last dims, ``param_specs`` serve
+    recipe), the slab cache shards per the ``decode`` logical-axis recipe
+    (slots over ``"data"``, KV sequence over ``"model"``), paged pages and
+    block tables replicate.  Non-divisible dims silently stay replicated —
+    the same model code runs on every mesh shape.
+    """
+
+    def __init__(self, cfg, params=None, *, mesh: Mesh,
+                 matmul_backend: Optional[str] = None,
+                 recipe_name: str = "decode"):
+        self._mesh = mesh
+        self._mesh_axes = shd.mesh_axes_dict(mesh)
+        self.recipe_name = recipe_name
+        super().__init__(cfg, params, matmul_backend)
+
+    @property
+    def mesh(self):
+        return self._mesh
+
+    def _trace_scopes(self):
+        return [shd.recipe(self.recipe_name),
+                bp_matmul.use_matmul_backend(self.matmul_backend)]
+
+    def _call_scopes(self):
+        # mesh activation cannot happen inside a trace; the recipe/backend
+        # thread-locals ride in the traced body (_trace_scopes)
+        return [shd.activate_mesh(self._mesh)]
+
+    def _place_params(self, params):
+        shardings = shd.named_shardings(params, self.recipe_name, self._mesh)
+        return jax.tree.map(jax.device_put, params, shardings)
+
+    def _place_cache(self, cache, *, paged: bool):
+        specs = api.cache_pspec_tree(self.cfg, cache, self._mesh_axes,
+                                     self.recipe_name, paged=paged)
+        return jax.tree.map(
+            lambda leaf, s: jax.device_put(
+                leaf, NamedSharding(self._mesh, s)),
+            cache, specs)
+
+    def put(self, x):
+        x = jnp.asarray(x)
+        return jax.device_put(
+            x, NamedSharding(self._mesh, P(*([None] * x.ndim))))
+
+
+def make_serving_mesh(shape: Sequence[int]) -> Mesh:
+    """A ``("data", "model")`` mesh over the first ``prod(shape)`` local
+    devices — validation here, construction shared with
+    ``launch.mesh.make_local_mesh`` (one version-portable mesh factory)."""
+    shape = tuple(int(d) for d in shape)
+    if len(shape) != 2:
+        raise ValueError(f"mesh shape must be (data, model), got {shape!r}")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise ValueError(
+            f"mesh shape {shape} needs {n} devices, found {len(devices)} "
+            f"(on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} before jax initializes)")
+    from repro.launch.mesh import make_local_mesh
+    return make_local_mesh(*shape)
+
+
+def make_executor(cfg, params=None, *, mesh: Optional[Mesh] = None,
+                  mesh_shape: Optional[Tuple[int, int]] = None,
+                  matmul_backend: Optional[str] = None) -> Executor:
+    """Build the executor selected by ``mesh``/``mesh_shape`` (None/None ->
+    single device)."""
+    if mesh is None and mesh_shape is not None:
+        mesh = make_serving_mesh(mesh_shape)
+    if mesh is not None:
+        return MeshExecutor(cfg, params, mesh=mesh,
+                            matmul_backend=matmul_backend)
+    return SingleDeviceExecutor(cfg, params, matmul_backend=matmul_backend)

@@ -30,9 +30,11 @@ sync and the engine compiles O(log S) prefill shape variants instead of one
 per distinct length.  Recurrent-state families use ``"exact"`` buckets
 (right padding would corrupt their state).
 
-The scheduler is pure policy: it never touches device state.  The engine
-asks it each iteration what to admit; prefills, eviction, preemption, and
-decode are the engine's job.
+The scheduler is pure policy: it never touches device state, so the same
+scheduler drives every execution layer (single-device or mesh-sharded —
+``serving/executor.py``).  The engine's ``ServeLoop`` asks it each
+iteration what to admit; prefills, eviction, preemption, and decode are
+the loop's job, and all device work is the executor's.
 """
 
 from __future__ import annotations

@@ -150,8 +150,7 @@ def test_serve_kernel_backend_matches_xla(mode):
         outputs[backend] = [list(r.tokens) for r in
                             sorted(report.results,
                                    key=lambda r: r.request_id)]
-        lg, _ = engine._prefill(engine.params,
-                                {"tokens": jnp.asarray(prompts)}, 16)
+        lg, _ = engine.executor.prefill({"tokens": jnp.asarray(prompts)}, 16)
         logits[backend] = np.asarray(lg, np.float32)
     # greedy-token-identical at fp32 matmul precision, logits close
     assert outputs["xla"] == outputs["kernel_interpret"]

@@ -36,8 +36,8 @@ def test_pipeline_matches_sequential_and_is_differentiable():
         def stage(params, h):
             return jnp.tanh(h @ params)
 
-        mesh = jax.make_mesh((4,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        # version-portable mesh construction (no AxisType on jax<0.5)
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("model",))
 
         def pipe(w, x):
             return pipeline_apply(stage, w, x, mesh=mesh,

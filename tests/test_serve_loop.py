@@ -1,0 +1,211 @@
+"""ServeLoop components in isolation: the former ``serve()`` closures
+(submit_arrivals / pick_victim / preempt / insert_with_preemption / admit)
+are methods now, unit-tested directly instead of only end-to-end."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch
+from repro.models import api
+from repro.serving import (Request, RequestState, ServeConfig, ServeLoop,
+                           ServingEngine)
+
+jax.config.update("jax_default_matmul_precision", "float32")
+
+
+def _dense_cfg(**kw):
+    return get_arch("qwen2-1.5b").reduced().replace(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=128, head_dim=16, **kw)
+
+
+def _engine(cfg, max_new=8, backend="slab", block_size=4):
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    return ServingEngine(cfg, params,
+                         ServeConfig(max_new_tokens=max_new, temperature=0.0,
+                                     cache_backend=backend,
+                                     block_size=block_size))
+
+
+def _prompt(cfg, S, seed=1):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (S,), 2,
+                                         cfg.vocab_size), np.int32)
+
+
+def _decode_state(req):
+    """Walk a WAITING request to DECODE (as admit() would)."""
+    req.transition(RequestState.PREFILL)
+    req.transition(RequestState.DECODE)
+    return req
+
+
+class TestSubmitArrivals:
+    def test_only_due_arrivals_enter_the_queue(self):
+        cfg = _dense_cfg()
+        engine = _engine(cfg)
+        reqs = [Request(prompt=_prompt(cfg, 4), max_new_tokens=2,
+                        arrival_time=t) for t in (0.0, 0.0, 7.0)]
+        loop = engine.make_loop(reqs, n_slots=2)
+        loop.submit_arrivals()
+        assert len(loop.rq) == 2 and len(loop.arrivals) == 1
+        # the clock advances past the straggler: it enters too
+        loop.now = 7.0
+        loop.submit_arrivals()
+        assert len(loop.rq) == 3 and not loop.arrivals
+
+    def test_oversized_arrival_rejected_not_queued(self):
+        cfg = _dense_cfg()
+        engine = _engine(cfg)
+        ok = Request(prompt=_prompt(cfg, 4), max_new_tokens=2)
+        big = Request(prompt=_prompt(cfg, 4), max_new_tokens=64)
+        loop = engine.make_loop([ok, big], n_slots=2, cache_T=8)
+        loop.submit_arrivals()
+        assert len(loop.rq) == 1
+        assert big.finish_reason == "rejected"
+        assert loop.rq.n_rejected == 1
+
+
+class TestPreemption:
+    def test_pick_victim_prefers_most_recent_admission(self):
+        cfg = _dense_cfg()
+        loop = _engine(cfg).make_loop([], n_slots=4)
+        for slot, admitted_at in ((0, 1.0), (1, 5.0), (2, 3.0)):
+            req = Request(prompt=_prompt(cfg, 4), max_new_tokens=4)
+            req.admitted_at = admitted_at
+            loop.active[slot] = req
+        assert loop.pick_victim() == 1          # newest admission
+        # tie on admitted_at: the larger request_id (newer request) goes
+        tie = Request(prompt=_prompt(cfg, 4), max_new_tokens=4)
+        tie.admitted_at = 5.0
+        loop.active[3] = tie
+        assert loop.pick_victim() == 3
+
+    def test_pick_victim_empty_pool_returns_none(self):
+        loop = _engine(_dense_cfg()).make_loop([], n_slots=2)
+        assert loop.pick_victim() is None
+
+    def test_preempt_requeues_at_head_with_replay(self):
+        cfg = _dense_cfg()
+        engine = _engine(cfg)
+        # an already-waiting request sits in the queue; the preempted one
+        # must cut in FRONT of it
+        waiting = Request(prompt=_prompt(cfg, 4), max_new_tokens=4)
+        loop = engine.make_loop([waiting], n_slots=2)
+        loop.submit_arrivals()
+        victim = _decode_state(Request(prompt=_prompt(cfg, 4),
+                                       max_new_tokens=6))
+        victim.tokens = [11, 22]
+        slot = loop.cm.alloc()
+        loop.active[slot] = victim
+        loop.preempt(slot)
+        assert victim.state is RequestState.WAITING
+        assert victim.replay == [11, 22] and victim.tokens == []
+        assert victim.n_preemptions == 1
+        assert loop.n_preemptions == 1
+        assert slot not in loop.active and loop.cm.n_free == 2
+        assert loop.rq.peek()[0] is victim      # queue head
+
+    def test_insert_with_preemption_evicts_newest_until_fit(self):
+        cfg = _dense_cfg()
+        engine = _engine(cfg, backend="paged", block_size=4)
+        # pool of 3 usable blocks; an 8-token prompt needs 2
+        first = Request(prompt=_prompt(cfg, 8, seed=2), max_new_tokens=4)
+        loop = engine.make_loop([first], n_slots=2, cache_T=12, num_blocks=4)
+        loop.submit_arrivals()
+        for group in loop.sched.plan_admissions():
+            loop.admit(group)
+        assert list(loop.active.values()) == [first]
+        # a second 8-token prompt (different tokens: no prefix hits) cannot
+        # fit the remaining 1 block -> the first request gets preempted
+        second = Request(prompt=_prompt(cfg, 8, seed=3), max_new_tokens=4)
+        second.transition(RequestState.PREFILL)
+        second.admitted_at = loop.now
+        _, cache = engine.executor.prefill(
+            {"tokens": np.asarray(second.prompt)[None]}, loop.cache_T)
+        slot = loop.cm.alloc()
+        loop.insert_with_preemption(slot, cache, second, 0)
+        assert loop.n_preemptions == 1
+        assert first.state is RequestState.WAITING
+        assert loop.rq.peek()[0] is first
+
+    def test_insert_with_preemption_raises_with_no_victims(self):
+        cfg = _dense_cfg()
+        engine = _engine(cfg, backend="paged", block_size=4)
+        req = Request(prompt=_prompt(cfg, 12, seed=2), max_new_tokens=4)
+        loop = engine.make_loop([], n_slots=2, cache_T=16, num_blocks=3)
+        req.transition(RequestState.PREFILL)
+        _, cache = engine.executor.prefill(
+            {"tokens": np.asarray(req.prompt)[None]}, loop.cache_T)
+        slot = loop.cm.alloc()
+        # 12 tokens need 3 blocks; only 2 usable exist and nothing can be
+        # preempted -> a clear error, not a wedge
+        with pytest.raises(RuntimeError, match="num_blocks"):
+            loop.insert_with_preemption(slot, cache, req, 0)
+
+
+class TestAdmit:
+    def test_admit_samples_first_token_and_occupies_slot(self):
+        cfg = _dense_cfg()
+        engine = _engine(cfg, max_new=4)
+        req = Request(prompt=_prompt(cfg, 5), max_new_tokens=4)
+        loop = engine.make_loop([req], n_slots=2)
+        loop.submit_arrivals()
+        groups = loop.sched.plan_admissions()
+        assert [len(g) for g in groups] == [1]
+        loop.admit(groups[0])
+        assert req.state is RequestState.DECODE
+        assert len(req.tokens) == 1 and req.first_token_at == 0.0
+        assert loop.active[req.slot] is req
+        assert loop.last_tok[req.slot] == req.tokens[0]
+        # the sampled token matches the static engine's first token
+        static = engine.generate({"tokens": jnp.asarray(
+            np.asarray(req.prompt)[None])}, max_new_tokens=1)
+        assert req.tokens[0] == int(static.tokens[0, 0])
+
+    def test_admit_replay_forces_recorded_token(self):
+        cfg = _dense_cfg()
+        engine = _engine(cfg, max_new=4)
+        req = Request(prompt=_prompt(cfg, 5), max_new_tokens=4)
+        req.replay = [42, 17]      # as a preemption would leave behind
+        loop = engine.make_loop([req], n_slots=2)
+        loop.submit_arrivals()
+        loop.admit(loop.sched.plan_admissions()[0])
+        assert req.tokens == [42]       # forced, not resampled
+        assert req.replay == [17]       # remaining tail replays in decode
+
+    def test_admit_finishing_first_token_never_takes_a_slot(self):
+        cfg = _dense_cfg()
+        engine = _engine(cfg, max_new=1)
+        req = Request(prompt=_prompt(cfg, 5), max_new_tokens=1)
+        loop = engine.make_loop([req], n_slots=2)
+        loop.submit_arrivals()
+        loop.admit(loop.sched.plan_admissions()[0])
+        assert req.state is RequestState.DONE
+        assert req.finish_reason == "length"
+        assert not loop.active and loop.cm.n_free == 2
+
+
+class TestStepping:
+    def test_writable_slots_slab_is_passthrough(self):
+        cfg = _dense_cfg()
+        loop = _engine(cfg).make_loop([], n_slots=3)
+        for slot in (0, 2):
+            loop.active[slot] = _decode_state(
+                Request(prompt=_prompt(cfg, 4), max_new_tokens=4))
+        assert sorted(loop.writable_slots()) == [0, 2]
+
+    def test_run_equals_engine_serve(self):
+        # the loop object and engine.serve() are the same machinery
+        cfg = _dense_cfg()
+        engine = _engine(cfg, max_new=6)
+        prompts = [_prompt(cfg, 5, seed=s) for s in (1, 2, 3)]
+        mk = lambda: [Request(prompt=p, max_new_tokens=6,
+                              arrival_time=float(i))
+                      for i, p in enumerate(prompts)]
+        direct = ServeLoop(engine, mk(), n_slots=2).run()
+        via_engine = engine.serve(mk(), n_slots=2)
+        for a, b in zip(sorted(direct.results, key=lambda r: r.request_id),
+                        sorted(via_engine.results,
+                               key=lambda r: r.request_id)):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
