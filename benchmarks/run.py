@@ -46,6 +46,10 @@ BENCHMARKS = [
     ("sharded_serving", "benchmarks.sharded_serving",
      lambda r: f"step_ratio={r['sharded_vs_single_step_ratio']:.2f}x;"
                f"mismatches={r['token_mismatches']}"),
+    ("spec_decode", "benchmarks.spec_decode",
+     lambda r: f"model_step_reduction={r['model_step_reduction']:.2f}x;"
+               f"pl_accept={r['prompt_lookup_acceptance_rate']:.2f};"
+               f"mismatches={r['token_mismatches']}"),
 ]
 
 

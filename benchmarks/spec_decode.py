@@ -1,0 +1,192 @@
+"""Speculative decoding: decode-step reduction at verified token identity.
+
+The serving-level Fig. 8/9: per-slot work per step becomes VARIABLE (1..K+1
+committed tokens, like bit-sparsity-dependent MAC cycles) and the
+quasi-sync machinery absorbs it.  One request stream runs through four
+engines against a non-speculative greedy baseline:
+
+  * drafter x backend grid — ``prompt_lookup`` (weight-free n-gram) and
+    ``model`` x ``slab`` / ``paged``;
+  * the model drafter here is SELF-speculation (draft = target weights):
+    deterministic ~100% acceptance, so the step reduction approaches the
+    (K+1)x bound and the harness pins ``spec steps < baseline steps`` as an
+    acceptance bar (a real small drafter trades acceptance for draft cost —
+    docs/performance.md);
+  * prompts carry a repeated phrase so the n-gram drafter has something to
+    look up (its acceptance on a randomly-initialized model stays modest —
+    reported, not gated).
+
+Every cell is verified TOKEN-IDENTICAL to the baseline (mismatches == 0 is
+an error).  Writes experiments/bench/BENCH_spec.json.
+
+    PYTHONPATH=src python benchmarks/spec_decode.py [--tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+import jax
+
+if __package__ in (None, ""):  # ran as a script: make `benchmarks.` importable
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+
+def run(tiny: bool = False, seed: int = 0, n_requests: int = None,
+        num_draft_tokens: int = 3, block_size: int = 4, rate: float = 0.7):
+    from repro.configs.base import get_arch
+    from repro.models import api
+    from repro.serving import Request, SchedulerConfig, ServeConfig, \
+        ServingEngine
+
+    if n_requests is None:
+        n_requests = 6 if tiny else 16
+    max_new = 8 if tiny else 16
+    phrase_len = 6
+    margin = 4
+
+    cfg = get_arch("qwen2-1.5b").reduced().replace(
+        num_layers=2 if tiny else 4, d_model=64 if tiny else 128,
+        d_ff=128 if tiny else 256, vocab_size=256, head_dim=16)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+
+    rng = np.random.default_rng(seed)
+    phrase = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (phrase_len,), 2,
+                           cfg.vocab_size), np.int32)
+    # repeated-phrase prompts: the n-gram drafter can actually look
+    # something up, and the repeats stress prefix-block sharing too
+    prompts = []
+    for i in range(n_requests):
+        uniq = np.asarray(
+            jax.random.randint(jax.random.PRNGKey(2 + i), (4,), 2,
+                               cfg.vocab_size), np.int32)
+        prompts.append(np.concatenate([phrase, phrase, uniq, phrase]))
+    max_news = rng.integers(max_new // 2, max_new + 1,
+                            size=n_requests).tolist()
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    prompt_len = len(prompts[0])
+    cache_T = prompt_len + max_new + margin
+
+    def reqs():
+        return [Request(prompt=prompts[i], max_new_tokens=int(max_news[i]),
+                        arrival_time=float(arrivals[i]))
+                for i in range(n_requests)]
+
+    sched = SchedulerConfig(lead_window=2)
+
+    def engine(backend, draft):
+        serve_cfg = ServeConfig(max_new_tokens=max_new, temperature=0.0,
+                                cache_backend=backend, block_size=block_size,
+                                draft=draft,
+                                num_draft_tokens=num_draft_tokens)
+        kw = {}
+        if draft == "model":
+            kw = dict(draft_cfg=cfg, draft_params=params)  # self-speculation
+        return ServingEngine(cfg, params, serve_cfg, **kw)
+
+    def serve(eng, **kw):
+        eng.serve(reqs()[:2], n_slots=4, cache_T=cache_T,
+                  sched_cfg=sched, **kw)                   # warmup compile
+        return eng.serve(reqs(), n_slots=4, cache_T=cache_T,
+                         sched_cfg=sched, **kw)
+
+    base = serve(engine("slab", "none"))
+    base_order = [r.tokens for r in sorted(base.results,
+                                           key=lambda r: r.request_id)]
+
+    cells = {}
+    total_mismatches = 0
+    for backend in ("slab", "paged"):
+        for draft in ("prompt_lookup", "model"):
+            rep = serve(engine(backend, draft))
+            toks = [r.tokens for r in sorted(rep.results,
+                                             key=lambda r: r.request_id)]
+            mism = sum(
+                1 for a, b in zip(base_order, toks)
+                if len(a) != len(b) or (np.asarray(a) != np.asarray(b)).any())
+            total_mismatches += mism
+            cells[f"{draft}_{backend}"] = {
+                "decode_steps": int(rep.steps),
+                "step_reduction": float(base.steps / max(rep.steps, 1)),
+                "drafted_tokens": int(rep.drafted_tokens),
+                "accepted_tokens": int(rep.accepted_tokens),
+                "acceptance_rate": float(rep.acceptance_rate),
+                "committed_tokens_per_step": float(
+                    rep.committed_tokens_per_step),
+                "tokens_per_s": float(rep.decode_tokens_per_s),
+                "ttft_wall_p50_ms": (rep.ttft_wall["p50"] * 1e3
+                                     if rep.ttft_wall else None),
+                "itl_wall_p50_ms": (rep.itl_wall["p50"] * 1e3
+                                    if rep.itl_wall else None),
+                "token_mismatches": int(mism),
+            }
+
+    model_cells = [cells["model_slab"], cells["model_paged"]]
+    return {
+        "n_requests": n_requests,
+        "num_draft_tokens": num_draft_tokens,
+        "block_size": block_size,
+        "baseline_decode_steps": int(base.steps),
+        "baseline_tokens_per_s": float(base.decode_tokens_per_s),
+        "cells": cells,
+        # headline: deterministic self-speculation step reduction
+        "model_step_reduction": float(min(c["step_reduction"]
+                                          for c in model_cells)),
+        "model_acceptance_rate": float(min(c["acceptance_rate"]
+                                           for c in model_cells)),
+        "prompt_lookup_acceptance_rate": float(
+            cells["prompt_lookup_slab"]["acceptance_rate"]),
+        "token_mismatches": int(total_mismatches),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke size (seconds, not minutes)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--num-draft-tokens", type=int, default=3)
+    ap.add_argument("--block-size", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    r = run(tiny=args.tiny, seed=args.seed, n_requests=args.requests,
+            num_draft_tokens=args.num_draft_tokens,
+            block_size=args.block_size)
+
+    from benchmarks.common import save_artifact
+    path = save_artifact("BENCH_spec", r)
+
+    print(f"requests={r['n_requests']} K={r['num_draft_tokens']} "
+          f"baseline={r['baseline_decode_steps']} decode steps")
+    for name, c in r["cells"].items():
+        print(f"{name:22s} steps={c['decode_steps']:4d} "
+              f"({c['step_reduction']:.2f}x)  "
+              f"accept={c['acceptance_rate']:.2f}  "
+              f"commit/step={c['committed_tokens_per_step']:.2f}  "
+              f"mismatches={c['token_mismatches']}")
+    print(f"artifact: {path}")
+    if r["token_mismatches"]:
+        print("ERROR: speculative outputs diverged from greedy baseline",
+              file=sys.stderr)
+        return 1
+    for name, c in r["cells"].items():
+        if name.startswith("model") and \
+                c["decode_steps"] >= r["baseline_decode_steps"]:
+            print(f"ERROR: {name} did not reduce decode steps",
+                  file=sys.stderr)
+            return 1
+    if r["model_acceptance_rate"] <= 0.0:
+        print("ERROR: zero acceptance under self-speculation",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,6 +5,9 @@ KV cache, served by the quasi-sync continuous-batching engine.
     PYTHONPATH=src python examples/serve_lm.py [--tokens 24] [--requests 8]
     PYTHONPATH=src python examples/serve_lm.py --mode bf16 --lead-window 0
     PYTHONPATH=src python examples/serve_lm.py --mesh 2x4   # TP over a mesh
+    PYTHONPATH=src python examples/serve_lm.py --draft prompt_lookup
+    PYTHONPATH=src python examples/serve_lm.py --draft model \
+        --num-draft-tokens 4                  # speculative decoding
 """
 
 import argparse
@@ -78,8 +81,19 @@ def main():
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="serve tensor-parallel over a (data, model) mesh, "
                          "e.g. 2x4 (spawns virtual CPU devices off-TPU)")
+    ap.add_argument("--draft", default="none",
+                    choices=["none", "prompt_lookup", "model"],
+                    help="speculative decoding drafter: weight-free n-gram "
+                         "prompt lookup, or a half-size same-family draft "
+                         "model (greedy only — forces temperature 0)")
+    ap.add_argument("--num-draft-tokens", type=int, default=4,
+                    help="K: draft tokens verified per decode step")
     args = ap.parse_args()
     mesh_shape = _MESH     # parsed+validated pre-import (sets XLA_FLAGS)
+    if args.draft != "none" and args.temperature > 0:
+        print(f"--draft {args.draft}: speculative decoding is greedy-only, "
+              f"forcing --temperature 0")
+        args.temperature = 0.0
 
     cfg = get_arch("qwen2-1.5b").reduced().replace(
         num_layers=4, d_model=256, d_ff=512, vocab_size=2048, head_dim=32)
@@ -92,12 +106,26 @@ def main():
         cfg = cfg.replace(matmul_mode=args.mode, kv_cache_int8=True)
         print("weights quantized to int8 (per-channel), KV cache int8")
 
+    draft_cfg = draft_params = None
+    if args.draft == "model":
+        # half-size same-family drafter (qwen2-1.5b drafting for the larger
+        # target, in spirit); random-init weights -> modest acceptance, the
+        # machinery and accounting are what this example shows
+        draft_cfg = cfg.replace(num_layers=2, d_model=128, d_ff=256,
+                                head_dim=32)
+        draft_params = api.init(jax.random.PRNGKey(7), draft_cfg)
+        if args.mode != "bf16":
+            draft_params = quantize_dense_params(draft_params)
+
     engine = ServingEngine(cfg, params,
                            ServeConfig(max_new_tokens=args.tokens,
                                        temperature=args.temperature,
                                        cache_backend=args.cache_backend,
                                        block_size=args.block_size,
-                                       mesh_shape=mesh_shape))
+                                       mesh_shape=mesh_shape,
+                                       draft=args.draft,
+                                       num_draft_tokens=args.num_draft_tokens),
+                           draft_cfg=draft_cfg, draft_params=draft_params)
     if mesh_shape is not None:
         print(f"mesh executor: {mesh_shape[0]}x{mesh_shape[1]} "
               f"(data, model) over {len(jax.devices())} devices — weights "
@@ -139,6 +167,19 @@ def main():
               f"{report.prefix_hit_blocks} prefix-hit blocks, "
               f"{report.cow_blocks} copy-on-writes, "
               f"{report.n_preemptions} preemptions")
+    if report.draft != "none":
+        print(f"spec:    drafter={report.draft} "
+              f"K={args.num_draft_tokens}: "
+              f"{report.accepted_tokens}/{report.drafted_tokens} drafts "
+              f"accepted ({report.acceptance_rate*100:.0f}%), "
+              f"{report.committed_tokens_per_step:.2f} committed "
+              f"tokens/step")
+    if report.ttft_wall is not None:
+        itl = (f", itl p50 {report.itl_wall['p50']*1e3:.1f} ms "
+               f"p99 {report.itl_wall['p99']*1e3:.1f} ms"
+               if report.itl_wall else "")
+        print(f"latency: ttft p50 {report.ttft_wall['p50']*1e3:.1f} ms "
+              f"p99 {report.ttft_wall['p99']*1e3:.1f} ms{itl}")
     for r in report.results[:4]:
         print(f"  req {r.request_id}: {len(r.tokens)} tokens "
               f"(ttft {r.ttft_steps:.0f} steps, "

@@ -143,14 +143,18 @@ def quantized_matmul(x, w, w_scale, mode: str):
     """Dequantizing BitParticle matmul with a straight-through gradient.
 
     x: (..., K) float; w: (K, N) int8 (pre-quantized, per-channel w_scale (N,)).
-    Activations are dynamically per-tensor quantized (the paper's per-tensor
-    symmetric scheme).  Returns (..., N) in x.dtype.
+    Activations are dynamically quantized PER ROW (one symmetric scale per
+    token position): each row's numerics are then independent of whatever
+    else shares the batch, so a token produces bit-identical logits whether
+    it is decoded alone, in a continuous batch, or inside a multi-token
+    speculative verify window — the invariant the serving token-identity
+    guarantees stand on.  Returns (..., N) in x.dtype.
     """
     return _qmm_fwd_impl(x, w, w_scale, mode)
 
 
 def _qmm_fwd_impl(x, w, w_scale, mode):
-    x_scale = quant.compute_scale(x)
+    x_scale = quant.compute_scale(x, axis=(-1,))   # (..., 1) per-row
     x_q = quant.quantize(x, x_scale)
     backend = resolve_matmul_backend()
     if backend != "xla" and mode in ("bp_exact", "bp_approx"):

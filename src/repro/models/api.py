@@ -75,6 +75,38 @@ def decode_step_paged(params, cfg: ArchConfig, batch):
     return mod.decode_step_paged(params, cfg, batch)
 
 
+def supports_verify(cfg: ArchConfig) -> bool:
+    """Can this family run the speculative multi-token verify step?
+    (Position-indexed KV that can be rewound on rejection — dense/moe/vlm;
+    recurrent state integrates every token irreversibly.)"""
+    return hasattr(module_for(cfg), "verify_step")
+
+
+def _verify_module(cfg: ArchConfig, name: str):
+    mod = module_for(cfg)
+    if not hasattr(mod, name):
+        raise ValueError(
+            f"family {cfg.family!r} has no multi-token verify path: "
+            f"speculative decoding needs position-indexed KV that can be "
+            f"rewound on rejection (recurrent state integrates every token "
+            f"irreversibly); serve with draft='none'")
+    return getattr(mod, name)
+
+
+def verify_step(params, cfg: ArchConfig, batch):
+    """Speculative multi-token verify (slab cache): append the (B, S)
+    tokens of ``batch`` at per-slot ``cache_len`` in one forward pass and
+    return per-position logits (B, S, V) for greedy accept/reject.
+    Position-indexed KV families only (dense/moe/vlm)."""
+    return _verify_module(cfg, "verify_step")(params, cfg, batch)
+
+
+def verify_step_paged(params, cfg: ArchConfig, batch):
+    """Block-paged speculative verify (``batch`` carries ``block_tables``);
+    see :func:`verify_step`."""
+    return _verify_module(cfg, "verify_step_paged")(params, cfg, batch)
+
+
 # ---------------------------------------------------------------------------
 # Dry-run input specs (ShapeDtypeStruct stand-ins, shardable, no allocation)
 # ---------------------------------------------------------------------------

@@ -93,8 +93,11 @@ def flash_attention(q, k, v, *, causal: bool = True, q_offset=0,
 
 def decode_attention(q, k_cache, v_cache, cache_len, *, k_scale=None,
                      v_scale=None):
-    """q (B,1,H,D) against cache (B,T,KH,D); positions <= cache_len valid
-    (the new token's K/V were already written at index ``cache_len``).
+    """q (B,S,H,D) against cache (B,T,KH,D).  Query row j sits at global
+    position ``cache_len + j`` and attends to cache positions
+    ``<= cache_len + j`` (its own K/V was already written there).  S = 1 is
+    the classic one-token decode; S > 1 is the speculative multi-token
+    verify step (the S rows form a tiny causal wedge over the cache).
 
     ``cache_len`` may be a scalar (whole batch at one position — static
     serving) or a (B,) vector of per-slot positions (continuous batching,
@@ -104,54 +107,91 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, k_scale=None,
         score[b,kh,g,t] = (q . k_q[t]) * k_scale[b,t,kh]
         out = sum_t p[t] * v_scale[b,t,kh] * v_q[t]
     """
-    B, _, H, D = q.shape
+    B, S, H, D = q.shape
     T, KH = k_cache.shape[1], k_cache.shape[2]
     G = H // KH
     scale = D ** -0.5
-    qr = (q.astype(jnp.float32) * scale).reshape(B, KH, G, D)
-    s = jnp.einsum("bkgd,btkd->bkgt", qr, k_cache.astype(jnp.float32))
+    qr = (q.astype(jnp.float32) * scale).reshape(B, S, KH, G, D)
+    s = jnp.einsum("bskgd,btkd->bskgt", qr, k_cache.astype(jnp.float32))
     if k_scale is not None:
-        s = s * jnp.transpose(k_scale, (0, 2, 1))[:, :, None, :]
+        s = s * jnp.transpose(k_scale, (0, 2, 1))[:, None, :, None, :]
     cache_len = jnp.asarray(cache_len)
     if cache_len.ndim == 0:
-        valid = (jnp.arange(T) <= cache_len)[None, None, None, :]
+        lim = cache_len + jnp.arange(S)                       # (S,)
+        valid = (jnp.arange(T)[None, :] <= lim[:, None])[None, :, None,
+                                                         None, :]
     else:
-        valid = (jnp.arange(T)[None, :] <= cache_len[:, None])[:, None, None, :]
+        lim = cache_len[:, None] + jnp.arange(S)[None, :]     # (B, S)
+        valid = (jnp.arange(T)[None, None, :]
+                 <= lim[:, :, None])[:, :, None, None, :]
     s = jnp.where(valid, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     if v_scale is not None:
-        p = p * jnp.transpose(v_scale, (0, 2, 1))[:, :, None, :]
-    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
-    return out.reshape(B, 1, H, D).astype(q.dtype)
+        p = p * jnp.transpose(v_scale, (0, 2, 1))[:, None, :, None, :]
+    out = jnp.einsum("bskgt,btkd->bskgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
 
 
-def decode_positions(cache_len, B):
-    """(B, 1) RoPE positions for a decode step from a scalar (whole batch at
-    one depth) or (B,) per-slot ``cache_len``."""
+def decode_positions(cache_len, B, S: int = 1):
+    """(B, S) RoPE positions for a decode/verify step: row j of slot b sits
+    at ``cache_len[b] + j`` (scalar ``cache_len`` = whole batch at one
+    depth)."""
     cache_len = jnp.asarray(cache_len)
     if cache_len.ndim == 0:
-        return jnp.broadcast_to(cache_len[None, None], (B, 1))
-    return cache_len[:, None]
+        return jnp.broadcast_to((cache_len + jnp.arange(S))[None], (B, S))
+    return cache_len[:, None] + jnp.arange(S)[None, :]
 
 
 def write_kv(cache, new, cache_len):
-    """Write ``new`` (B, 1, ...) into ``cache`` (B, T, ...) at position
-    ``cache_len`` — scalar (one dynamic_update_slice for the whole batch) or
-    (B,) vector (per-slot scatter, continuous batching)."""
+    """Write ``new`` (B, S, ...) into ``cache`` (B, T, ...) at positions
+    ``cache_len .. cache_len + S - 1`` — scalar ``cache_len`` (one
+    dynamic_update_slice for the whole batch) or (B,) vector (per-slot
+    scatter, continuous batching / speculative verify).  Vector scatters
+    whose positions fall outside T are dropped (jax OOB-scatter semantics):
+    a speculative tail past the slab capacity lands nowhere and is never
+    read back (the accept rule stops at the committed budget)."""
     cache_len = jnp.asarray(cache_len)
+    S = new.shape[1]
     if cache_len.ndim == 0:
-        idx = (0, cache_len) + (0,) * (cache.ndim - 2)
-        return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype),
-                                            idx)
-    B = cache.shape[0]
-    return cache.at[jnp.arange(B), cache_len].set(new[:, 0].astype(cache.dtype))
+        if S == 1:
+            idx = (0, cache_len) + (0,) * (cache.ndim - 2)
+            return jax.lax.dynamic_update_slice(cache,
+                                                new.astype(cache.dtype), idx)
+        # multi-row: scatter per position so an overrunning tail DROPS
+        # (dynamic_update_slice would clamp the start index and shift the
+        # whole window backward over valid entries)
+        pos = cache_len + jnp.arange(S)
+        return cache.at[:, pos].set(new.astype(cache.dtype), mode="drop")
+    B = new.shape[0]
+    pos = cache_len[:, None] + jnp.arange(S)[None, :]
+    return cache.at[jnp.arange(B)[:, None], pos].set(
+        new.astype(cache.dtype), mode="drop")
 
 
 def paged_write_kv(pages, new, block_ids, offsets):
-    """Write ``new`` (B, 1, ...) into block-paged ``pages`` (N, bs, ...) at
-    per-sequence (physical block, in-block offset) positions.  Inactive rows
-    target the trash block (id 0) — written, never read."""
-    return pages.at[block_ids, offsets].set(new[:, 0].astype(pages.dtype))
+    """Write ``new`` (B, S, ...) into block-paged ``pages`` (N, bs, ...) at
+    per-(sequence, row) (physical block, in-block offset) positions, both
+    (B, S).  Inactive rows and speculative overhang past a slot's block
+    table target the trash block (id 0) — written, never read."""
+    return pages.at[block_ids, offsets].set(new.astype(pages.dtype))
+
+
+def paged_verify_attention(q, k_pages, v_pages, block_tables, cache_len, *,
+                           k_scale=None, v_scale=None):
+    """Multi-token verify attention over block-paged KV: gather each slot's
+    pages dense through its block table, then run the same causal-wedge
+    masking as :func:`decode_attention`.  The Pallas decode kernel is a
+    one-query-row program, so the S > 1 verify path always takes the XLA
+    gather formulation (it partitions under GSPMD on a mesh, like the
+    paged-attention oracle)."""
+    def lin(p):
+        g = p[block_tables]                       # (B, P, bs, ...)
+        return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
+
+    return decode_attention(
+        q, lin(k_pages), lin(v_pages), cache_len,
+        k_scale=lin(k_scale) if k_scale is not None else None,
+        v_scale=lin(v_scale) if v_scale is not None else None)
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_tables, cache_len, *,

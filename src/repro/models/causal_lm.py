@@ -185,18 +185,19 @@ def prefill(params, cfg, batch, cache_T: int, prompt_lens=None):
 
 
 def _decode_common(params, cfg, batch, *, write_fn, attend_fn):
-    """Shared one-token decode body; the cache layout enters only through
-    ``write_fn(cache_leaf, new)`` (install the new token's K/V/scales) and
-    ``attend_fn(q, kc, vc, ksc, vsc)`` (attention over that layout)."""
+    """Shared decode/verify body over S >= 1 appended tokens; the cache
+    layout enters only through ``write_fn(cache_leaf, new)`` (install the
+    new tokens' K/V/scales) and ``attend_fn(q, kc, vc, ksc, vsc)``
+    (attention over that layout).  Returns (logits (B, S, V), cache)."""
     mode = cfg.matmul_mode
     tokens, cache = batch["tokens"], batch["cache"]
     cache_len = jnp.asarray(batch["cache_len"])
-    B = tokens.shape[0]
+    B, S = tokens.shape
     x = layers.embed(params["embed"], tokens)
     x = shard(x, "batch", None, None)
-    pos = attention.decode_positions(cache_len, B)
+    pos = attention.decode_positions(cache_len, B, S)
     if cfg.mrope_sections:
-        pos = jnp.broadcast_to(pos[None], (3, B, 1))
+        pos = jnp.broadcast_to(pos[None], (3, B, S))
     cos, sin = _angles(cfg, pos)
     hd = cfg.resolved_head_dim
 
@@ -219,7 +220,7 @@ def _decode_common(params, cfg, batch, *, write_fn, attend_fn):
         vc = write_fn(vc, v)
         out = attend_fn(q, kc, vc,
                         ksc if int8kv else None, vsc if int8kv else None)
-        out = out.reshape(B, 1, cfg.num_heads * hd)
+        out = out.reshape(B, S, cfg.num_heads * hd)
         x = x + layers.dense(lp["attn"]["wo"], out, mode)
         h = layers.rms_norm(lp["ffn_norm"], x, cfg.norm_eps)
         if cfg.num_experts:
@@ -241,14 +242,13 @@ def _decode_common(params, cfg, batch, *, write_fn, attend_fn):
                                              cache["k"], cache["v"]))
         new_cache = {"k": ks, "v": vs}
     x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
-    logits = logits_from_hidden(params, cfg, x)[:, 0]
+    logits = logits_from_hidden(params, cfg, x)
     return logits, new_cache
 
 
-def decode_step(params, cfg, batch):
-    """One-token decode.  batch: tokens (B,1), cache {k,v}: (L,B,T,KH,Dh),
-    cache_len: scalar int32 (whole batch at one depth) or (B,) int32
-    (per-slot depths, continuous batching).  Returns (logits (B,V), cache)."""
+def _slab_fns(batch):
+    """(write_fn, attend_fn) over the slab cache layout for the S tokens of
+    ``batch`` (S = 1: decode; S > 1: speculative verify)."""
     cache_len = jnp.asarray(batch["cache_len"])
 
     def write_fn(c, new):
@@ -266,6 +266,61 @@ def decode_step(params, cfg, batch):
         return attention.decode_attention(q, kc, vc, cache_len,
                                           k_scale=ksc, v_scale=vsc)
 
+    return write_fn, attend_fn
+
+
+def _paged_fns(batch):
+    """(write_fn, attend_fn) over the block-paged layout.  Write targets
+    past a slot's table span are redirected to the trash block (speculative
+    overhang lands nowhere); the S = 1 attend dispatches to the Pallas
+    kernel / XLA oracle, S > 1 takes the dense-gather verify formulation."""
+    cache_len = jnp.asarray(batch["cache_len"])
+    tables = jnp.asarray(batch["block_tables"], jnp.int32)
+    bs = batch["cache"]["k"].shape[2]
+    S = batch["tokens"].shape[1]
+    P = tables.shape[1]
+    # physical write target per (slot, row): table entry at pos // bs
+    pos = cache_len[:, None] + jnp.arange(S)[None, :]
+    bi = pos // bs
+    blk = jnp.take_along_axis(tables, jnp.minimum(bi, P - 1), axis=1)
+    blk = jnp.where(bi < P, blk, 0)      # overhang -> trash block
+    off = pos % bs
+
+    def write_fn(c, new):
+        return attention.paged_write_kv(c, new, blk, off)
+
+    def attend_fn(q, kc, vc, ksc, vsc):
+        if S == 1:
+            return attention.paged_decode_attention(
+                q, kc, vc, tables, cache_len, k_scale=ksc, v_scale=vsc)
+        return attention.paged_verify_attention(
+            q, kc, vc, tables, cache_len, k_scale=ksc, v_scale=vsc)
+
+    return write_fn, attend_fn
+
+
+def decode_step(params, cfg, batch):
+    """One-token decode.  batch: tokens (B,1), cache {k,v}: (L,B,T,KH,Dh),
+    cache_len: scalar int32 (whole batch at one depth) or (B,) int32
+    (per-slot depths, continuous batching).  Returns (logits (B,V), cache)."""
+    write_fn, attend_fn = _slab_fns(batch)
+    logits, cache = _decode_common(params, cfg, batch,
+                                   write_fn=write_fn, attend_fn=attend_fn)
+    return logits[:, 0], cache
+
+
+def verify_step(params, cfg, batch):
+    """Speculative multi-token verify against the slab cache.
+
+    batch: tokens (B, S) — the last committed token followed by S-1 draft
+    tokens per slot, appended in ONE forward pass at per-slot positions
+    ``cache_len .. cache_len + S - 1`` (row j attends causally through the
+    cache up to its own position).  Returns (logits (B, S, V), cache):
+    ``logits[:, j]`` is the target distribution AFTER consuming fed token
+    j — greedy accept compares ``argmax(logits[:, j-1])`` with draft j.
+    Rows past a slot's real draft length are padding: their K/V land beyond
+    the committed region (masked, rolled back by the cache manager)."""
+    write_fn, attend_fn = _slab_fns(batch)
     return _decode_common(params, cfg, batch,
                           write_fn=write_fn, attend_fn=attend_fn)
 
@@ -280,19 +335,19 @@ def decode_step_paged(params, cfg, batch):
     gathers through the block table (Pallas kernel / XLA oracle per the
     active backend).  The page pool has no batch/cache_seq axes to lay on
     the mesh, so paged leaves stay replicated.  Returns (logits, cache)."""
-    cache_len = jnp.asarray(batch["cache_len"])
-    tables = jnp.asarray(batch["block_tables"], jnp.int32)
-    bs = batch["cache"]["k"].shape[2]
-    # physical write target per slot: block table entry at pos // bs
-    blk = jnp.take_along_axis(tables, (cache_len // bs)[:, None], axis=1)[:, 0]
-    off = cache_len % bs
+    write_fn, attend_fn = _paged_fns(batch)
+    logits, cache = _decode_common(params, cfg, batch,
+                                   write_fn=write_fn, attend_fn=attend_fn)
+    return logits[:, 0], cache
 
-    def write_fn(c, new):
-        return attention.paged_write_kv(c, new, blk, off)
 
-    def attend_fn(q, kc, vc, ksc, vsc):
-        return attention.paged_decode_attention(q, kc, vc, tables, cache_len,
-                                                k_scale=ksc, v_scale=vsc)
-
+def verify_step_paged(params, cfg, batch):
+    """Speculative multi-token verify against the block-paged cache — the
+    :func:`verify_step` contract with ``block_tables`` routing the writes
+    and the dense-gather verify attention.  The cache manager must have
+    prepared writable blocks for each slot's committed span
+    (``prepare_append`` allocates/CoWs); overhang rows write to the trash
+    block."""
+    write_fn, attend_fn = _paged_fns(batch)
     return _decode_common(params, cfg, batch,
                           write_fn=write_fn, attend_fn=attend_fn)

@@ -18,16 +18,21 @@ from repro.serving.executor import (Executor, MeshExecutor,
                                     make_serving_mesh)
 from repro.serving.queue import Request, RequestQueue, RequestState
 from repro.serving.scheduler import QuasiSyncScheduler, SchedulerConfig
+from repro.serving.speculative import (Drafter, ModelDrafter,
+                                       PromptLookupDrafter, make_drafter)
 
 __all__ = [
     "BaseCacheManager",
     "BlockPool",
     "CacheManager",
+    "Drafter",
     "Executor",
     "GenerationResult",
     "MeshExecutor",
+    "ModelDrafter",
     "NoFreeBlocks",
     "PagedCacheManager",
+    "PromptLookupDrafter",
     "QuasiSyncScheduler",
     "Request",
     "RequestQueue",
@@ -40,6 +45,7 @@ __all__ = [
     "SchedulerConfig",
     "SingleDeviceExecutor",
     "make_cache_manager",
+    "make_drafter",
     "make_executor",
     "make_serving_mesh",
 ]

@@ -413,39 +413,77 @@ class PagedCacheManager(BaseCacheManager):
 
     # -- decode-step support ------------------------------------------------
 
-    def prepare_append(self, slots) -> Optional[int]:
-        """Make sure every slot in ``slots`` can write its next token
-        (position ``lengths[slot]``): allocate a new tail block at block
-        boundaries, copy-on-write a shared tail block on first divergent
-        write.  Returns the first slot that could NOT be satisfied (pool
+    def prepare_append(self, slots, counts=None) -> Optional[int]:
+        """Make sure every slot in ``slots`` can write its next ``n``
+        tokens (positions ``lengths[slot] .. lengths[slot] + n - 1``; ``n``
+        is 1 for the classic decode step, ``counts[i]`` per slot for a
+        speculative verify that appends the committed token plus drafts):
+        allocate new tail blocks at block boundaries, copy-on-write a
+        shared tail block on first divergent write.  Speculative overhang
+        past the per-slot table span is NOT an error — those writes
+        redirect to the trash block in ``decode_step_paged``/``verify_step_
+        paged`` and can never be committed (``fits`` bounds the committed
+        length).  Returns the first slot that could NOT be satisfied (pool
         dry — caller preempts and retries), or None when all are ready."""
-        for s in slots:
+        if counts is None:
+            counts = [1] * len(slots)
+        for s, n in zip(slots, counts):
             pos = int(self.lengths[s])
-            bi, off = divmod(pos, self.block_size)
-            if bi >= self.blocks_per_seq:
-                raise RuntimeError(f"slot {s} exceeded its block table")
-            if bi >= self._n_blocks_of[s]:
-                try:
-                    bid = self.pool.alloc()
-                except NoFreeBlocks:
-                    return s
-                self.tables[s, bi] = bid
-                self._n_blocks_of[s] = bi + 1
-            else:
-                bid = int(self.tables[s, bi])
-                if self.pool.refcount[bid] > 1 or self.pool.is_registered(bid):
-                    # shared (or registered immutable prefix) block: first
-                    # divergent write copies it — never write in place
+            first_bi = pos // self.block_size
+            last_bi = (pos + max(int(n), 1) - 1) // self.block_size
+            for bi in range(first_bi, last_bi + 1):
+                if bi >= self.blocks_per_seq:
+                    if bi == first_bi:
+                        # even the COMMITTED next token has no table entry
+                        # left: a real capacity bug, not spec overhang
+                        raise RuntimeError(
+                            f"slot {s} exceeded its block table")
+                    break
+                if bi >= self._n_blocks_of[s]:
                     try:
-                        new = self.pool.alloc()
+                        bid = self.pool.alloc()
                     except NoFreeBlocks:
                         return s
-                    self.pages = self.executor.copy_block(self.pages, new,
-                                                          bid)
-                    self.pool.decref(bid)
-                    self.tables[s, bi] = new
-                    self.pool.n_cow += 1
+                    self.tables[s, bi] = bid
+                    self._n_blocks_of[s] = bi + 1
+                else:
+                    bid = int(self.tables[s, bi])
+                    if (self.pool.refcount[bid] > 1
+                            or self.pool.is_registered(bid)):
+                        # shared (or registered immutable prefix) block:
+                        # first divergent write copies it — never write in
+                        # place
+                        try:
+                            new = self.pool.alloc()
+                        except NoFreeBlocks:
+                            return s
+                        self.pages = self.executor.copy_block(self.pages,
+                                                              new, bid)
+                        self.pool.decref(bid)
+                        self.tables[s, bi] = new
+                        self.pool.n_cow += 1
         return None
+
+    def release_tail(self, slot: int):
+        """Speculative rollback: free whole blocks past the slot's last
+        committed position (``lengths[slot]`` counts valid K/V entries).
+        A freed block was by construction allocated privately for the
+        rejected draft span — ``prepare_append`` copies any shared or
+        trie-registered block before the verify step writes it, so a
+        rewind can never mutate or release shared content in place; this
+        is asserted, not assumed."""
+        n_keep = -(-int(self.lengths[slot]) // self.block_size)
+        k = int(self._n_blocks_of[slot])
+        for bi in range(n_keep, k):
+            bid = int(self.tables[slot, bi])
+            if (self.pool.refcount[bid] != 1
+                    or self.pool.is_registered(bid)):
+                raise RuntimeError(
+                    f"speculative rollback would release shared block "
+                    f"{bid} (slot {slot}): CoW invariant violated")
+            self.pool.decref(bid)
+            self.tables[slot, bi] = TRASH_BLOCK
+        self._n_blocks_of[slot] = min(k, n_keep)
 
     def block_tables_device(self) -> jnp.ndarray:
         return self.executor.put(self.tables)

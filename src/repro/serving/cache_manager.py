@@ -51,10 +51,19 @@ class BaseCacheManager:
     def n_active(self) -> int:
         return self.n_slots - len(self._free_slots)
 
-    def alloc(self) -> int:
+    def alloc(self, slot: Optional[int] = None) -> int:
+        """Claim a free slot (LIFO order), or — with ``slot`` — claim that
+        specific slot (a drafter's cache mirrors the target pool, so its
+        slots must align with the target's, not with this manager's own
+        free-list order)."""
         if not self._free_slots:
             raise RuntimeError("no free slot")
-        slot = self._free_slots.pop()
+        if slot is None:
+            slot = self._free_slots.pop()
+        elif slot in self._free_slots:
+            self._free_slots.remove(slot)
+        else:
+            raise RuntimeError(f"slot {slot} is not free")
         self._occupied[slot] = True
         return slot
 
@@ -65,10 +74,17 @@ class BaseCacheManager:
         self.lengths[slot] = 0
         self._free_slots.append(slot)
 
-    def advance(self, slots):
-        """Bump the sequence position of the given slots by one token —
-        one vectorized scatter-add, not a per-slot Python loop."""
-        np.add.at(self.lengths, np.asarray(list(slots), np.intp), 1)
+    def advance(self, slots, counts=None):
+        """Bump the sequence position of the given slots — by one token
+        each (the classic decode step) or by per-slot ``counts`` (tokens
+        COMMITTED by a speculative verify step, 1..K+1 per slot).  One
+        vectorized scatter-add, not a per-slot Python loop."""
+        idx = np.asarray(list(slots), np.intp)
+        if counts is None:
+            np.add.at(self.lengths, idx, 1)
+        else:
+            np.add.at(self.lengths, idx,
+                      np.asarray(list(counts), np.int32))
 
     def cache_len_vector(self) -> jnp.ndarray:
         """(n_slots,) per-slot positions for ``decode_step``.  Free slots sit

@@ -73,6 +73,31 @@ class ServeConfig:
     # (data, model) mesh shape for tensor-parallel serving; None = single
     # device.  Requires prod(mesh_shape) visible jax devices.
     mesh_shape: Optional[Tuple[int, int]] = None
+    # speculative decoding: "none" | "prompt_lookup" (weight-free n-gram
+    # drafter) | "model" (small same-family draft model — pass draft_cfg/
+    # draft_params to the engine).  Greedy-only; outputs stay token-
+    # identical to non-speculative greedy, steps shrink with acceptance.
+    draft: str = "none"
+    num_draft_tokens: int = 4         # K: drafts verified per step
+
+
+def tokens_per_second(n_tokens: int, decode_s: float, prefill_s: float = 0.0,
+                      steps: Optional[int] = None) -> float:
+    """THE tokens/s rule for both engine paths: tokens over decode wall
+    time — unless no decode step ran (everything finished at prefill), in
+    which case the generated tokens are reported over total wall time
+    instead of a blind 0.0."""
+    if steps == 0:
+        return n_tokens / max(prefill_s + decode_s, 1e-9)
+    return n_tokens / max(decode_s, 1e-9)
+
+
+def _percentiles(samples) -> Optional[Dict[str, float]]:
+    """{p50, p90, p99} of a wall-clock latency sample set (seconds)."""
+    xs = np.asarray([s for s in samples if s is not None], np.float64)
+    if xs.size == 0:
+        return None
+    return {f"p{q}": float(np.percentile(xs, q)) for q in (50, 90, 99)}
 
 
 @dataclasses.dataclass
@@ -85,7 +110,8 @@ class GenerationResult:
     @property
     def decode_tokens_per_s(self) -> float:
         n = self.tokens.shape[0] * self.tokens.shape[1]
-        return n / max(self.decode_s, 1e-9)
+        return tokens_per_second(n, self.decode_s, self.prefill_s,
+                                 self.steps)
 
 
 @dataclasses.dataclass
@@ -97,6 +123,7 @@ class RequestResult:
     ttft_steps: Optional[float]       # decode-step clock
     latency_steps: Optional[float]
     finish_reason: str
+    ttft_wall_s: Optional[float] = None   # wall clock, queue entry -> tok 0
 
 
 @dataclasses.dataclass
@@ -118,16 +145,28 @@ class ServeReport:
     peak_blocks_in_use: int = 0       # paged: max live blocks at any step
     peak_active_slots: int = 0        # max concurrently-decoding requests
     mesh_shape: Optional[Tuple[int, int]] = None  # executor mesh (None=1dev)
+    # speculative decoding (draft != "none")
+    draft: str = "none"
+    drafted_tokens: int = 0           # drafts submitted to verify steps
+    accepted_tokens: int = 0          # drafts the target's argmax confirmed
+    committed_tokens_per_step: float = 0.0
+    # wall-clock latency percentiles ({p50, p90, p99} seconds, or None when
+    # no sample exists): TTFT from queue entry to first token, and the
+    # inter-token gap pooled over every request's consecutive emissions
+    ttft_wall: Optional[Dict[str, float]] = None
+    itl_wall: Optional[Dict[str, float]] = None
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the verify step accepted."""
+        if self.drafted_tokens == 0:
+            return 0.0
+        return self.accepted_tokens / self.drafted_tokens
 
     @property
     def decode_tokens_per_s(self) -> float:
-        if self.steps == 0:
-            # everything finished at prefill: tokens were still generated
-            # (one per admitted request) — report them over total wall time
-            # instead of a blind 0.0
-            return self.total_new_tokens / max(self.prefill_s + self.decode_s,
-                                               1e-9)
-        return self.total_new_tokens / max(self.decode_s, 1e-9)
+        return tokens_per_second(self.total_new_tokens, self.decode_s,
+                                 self.prefill_s, self.steps)
 
     def tokens_by_request(self) -> Dict[int, np.ndarray]:
         return {r.request_id: r.tokens for r in self.results}
@@ -192,6 +231,17 @@ class ServeLoop:
         self.peak_active = 0
         self._decode_fn = engine.executor.decode_sample_fn(
             self.serve_cfg.temperature, paged=self.paged)
+        # speculative decoding: a drafter proposes up to K tokens per slot,
+        # one multi-token verify step checks them all, slots commit a
+        # VARIABLE 1..K+1 tokens per step (greedy-only, token-identical)
+        from repro.serving.speculative import make_drafter
+        self.drafter = make_drafter(self.serve_cfg, engine,
+                                    n_slots=n_slots, cache_T=self.cache_T)
+        self.n_drafted = 0
+        self.n_accepted = 0
+        if self.drafter is not None:
+            self._verify_fn = engine.executor.verify_sample_fn(
+                paged=self.paged)
 
     # -- admission / preemption --------------------------------------------
 
@@ -200,6 +250,7 @@ class ServeLoop:
         requests that cannot ever fit the cache are rejected up front."""
         while self.arrivals and self.arrivals[0].arrival_time <= self.now:
             req = self.arrivals.popleft()
+            req.wall_submitted_at = time.perf_counter()
             if not self.cm.fits(req.prompt_len, req.max_new_tokens):
                 self.rq.reject(req, self.now)
                 continue
@@ -221,6 +272,8 @@ class ServeLoop:
         generated tokens queued for token-exact replay."""
         req = self.active.pop(slot)
         self.cm.free(slot)
+        if self.drafter is not None:
+            self.drafter.on_free(slot)
         req.preempt()           # -> WAITING, tokens queued for replay
         self.rq.push_front(req)
         self.n_preemptions += 1
@@ -286,7 +339,8 @@ class ServeLoop:
         else:
             logits, cache = self.executor.prefill(batch, self.cache_T)
         logits.block_until_ready()
-        self.prefill_s += time.perf_counter() - t0
+        wall = time.perf_counter()
+        self.prefill_s += wall - t0
         for j, req in enumerate(group):
             if req.replay:
                 # preempted request: re-emit its original first token
@@ -294,7 +348,7 @@ class ServeLoop:
             else:
                 tok = int(np.asarray(engine._sample(
                     logits[j:j + 1], engine._request_key(req, 0)))[0])
-            req.tokens.append(tok)
+            self._append_token(req, tok, wall)
             if req.first_token_at is None:
                 req.first_token_at = self.now
             reason = engine._finished(req, tok)
@@ -310,19 +364,36 @@ class ServeLoop:
             if self.serve_cfg.temperature > 0:
                 self.slot_keys[slot] = np.asarray(
                     engine._request_key_base(req))
+            if self.drafter is not None:
+                self.drafter.on_admit(slot, req)
+
+    @staticmethod
+    def _append_token(req: Request, tok: int, wall: float):
+        """Record one emitted token with its wall-clock stamp.  Replayed
+        tokens (re-emitted after a preemption) keep their ORIGINAL stamps —
+        they already streamed to the client once — so a stamp is only
+        added once the token count grows past the recorded history."""
+        req.tokens.append(tok)
+        if len(req.wall_token_times) < len(req.tokens):
+            req.wall_token_times.append(wall)
 
     # -- stepping -----------------------------------------------------------
 
-    def writable_slots(self) -> List[int]:
-        """Active slots that can write this step's token.  On the paged
-        store every slot must own a writable tail block (allocate at block
-        boundaries, copy-on-write shared tails); when the pool runs dry the
-        newest admission is preempted and the check retried."""
+    def writable_slots(self, counts: Optional[Dict[int, int]] = None
+                       ) -> List[int]:
+        """Active slots that can write this step's tokens — one per slot on
+        the classic path, ``counts[slot]`` (committed token + drafts) under
+        speculation.  On the paged store every slot must own writable
+        blocks over its append span (allocate at block boundaries,
+        copy-on-write shared tails); when the pool runs dry the newest
+        admission is preempted and the check retried."""
         slots = list(self.active.keys())
         if not self.paged:
             return slots
         while slots:
-            if self.cm.prepare_append(slots) is None:
+            ns = None if counts is None else [counts.get(s, 1)
+                                             for s in slots]
+            if self.cm.prepare_append(slots, ns) is None:
                 return slots
             self.preempt(self.pick_victim())   # newest admission goes
             slots = list(self.active.keys())
@@ -344,10 +415,11 @@ class ServeLoop:
                                           jnp.asarray(self.slot_keys),
                                           jnp.asarray(counts))
         toks.block_until_ready()
-        self.decode_s += time.perf_counter() - t0
+        wall = time.perf_counter()
+        self.decode_s += wall - t0
         self.cm.update(new_cache)
         self.cm.advance(slots)
-        self.sched.observe_decode_step()
+        self.sched.observe_decode_step(n_committed=len(slots))
         self.peak_active = max(self.peak_active, len(slots))
         self.now += 1.0
         toks_np = np.asarray(toks)
@@ -360,13 +432,111 @@ class ServeLoop:
                 tok = req.replay.pop(0)
             else:
                 tok = int(toks_np[slot])
-            req.tokens.append(tok)
+            self._append_token(req, tok, wall)
             self.last_tok[slot] = tok
             reason = self.engine._finished(req, tok)
             if reason is not None:
                 del self.active[slot]
                 self.cm.free(slot)
                 req.finish(self.now, reason)
+
+    def decode_once_spec(self):
+        """One speculative step: draft up to K tokens per slot, verify all
+        of them in ONE multi-token forward pass, commit the accepted
+        prefix plus the target's own next token — 1..K+1 committed tokens
+        per slot, token-identical to the classic greedy path.
+
+        Per-slot draft lengths are capped by the remaining output budget
+        (committing past ``max_new_tokens`` is impossible, so drafting
+        there is pure waste), and the verify batch rides one fixed
+        (n_slots, K+1) shape — slots with no usable draft simply commit
+        their single greedy token, exactly like a classic step."""
+        K = self.serve_cfg.num_draft_tokens
+        slots = list(self.active.keys())
+        caps = {s: max(min(K, self.active[s].max_new_tokens
+                           - len(self.active[s].tokens) - 1), 0)
+                for s in slots}
+        if any(caps.values()):
+            drafts = self.drafter.propose_all(
+                {s: self.active[s] for s in slots}, caps)
+        else:
+            # every slot is within one token of its budget: the step
+            # degenerates to a classic decode — don't burn drafter work
+            # on proposals that would be truncated to empty
+            drafts = {}
+        drafts = {s: np.asarray(drafts.get(s, ()), np.int32)[:caps[s]]
+                  for s in slots}
+        # the paged store needs writable blocks over each slot's full
+        # append span; preemption inside may shrink the slot set
+        slots = self.writable_slots(
+            {s: len(drafts[s]) + 1 for s in slots})
+        if not slots:
+            return
+        toks = np.zeros((self.n_slots, K + 1), np.int32)
+        for s in slots:
+            toks[s, 0] = self.last_tok[s]
+            d = drafts[s]
+            toks[s, 1:1 + len(d)] = d
+        step = {"tokens": jnp.asarray(toks),
+                "cache_len": self.cm.cache_len_vector()}
+        if self.paged:
+            step["block_tables"] = self.cm.block_tables_device()
+        t0 = time.perf_counter()
+        greedy, new_cache = self._verify_fn(self.cm.cache, step)
+        greedy.block_until_ready()
+        wall = time.perf_counter()
+        self.decode_s += wall - t0
+        self.cm.update(new_cache)
+        greedy_np = np.asarray(greedy)      # (n_slots, K+1) argmax stream
+        commits: Dict[int, int] = {}
+        finished: Dict[int, str] = {}
+        n_committed = 0
+        for slot in slots:
+            req = self.active[slot]
+            d = drafts[slot]
+            # greedy accept: drafts match the target's argmax stream up to
+            # the first miss; the miss position's argmax is the bonus token
+            m = 1
+            while m <= len(d) and greedy_np[slot, m - 1] == d[m - 1]:
+                m += 1
+            self.n_drafted += len(d)
+            self.n_accepted += m - 1
+            appended = 0
+            for j in range(m):
+                if req.replay:
+                    # replay equals the greedy stream (token identity holds
+                    # across preemption under speculation too)
+                    tok = req.replay.pop(0)
+                else:
+                    tok = int(greedy_np[slot, j])
+                self._append_token(req, tok, wall)
+                self.last_tok[slot] = tok
+                appended += 1
+                reason = self.engine._finished(req, tok)
+                if reason is not None:
+                    finished[slot] = reason
+                    break
+            commits[slot] = appended
+            n_committed += appended
+        # commit the positions, then roll the paged store's speculative
+        # tail blocks back BEFORE any slot is freed (free() releases whole
+        # tables; release_tail only ever touches private draft-span blocks)
+        self.cm.advance(slots, [commits[s] for s in slots])
+        if self.paged:
+            for slot in slots:
+                self.cm.release_tail(slot)
+        self.sched.observe_decode_step(n_committed=n_committed)
+        self.peak_active = max(self.peak_active, len(slots))
+        self.now += 1.0
+        for slot in slots:
+            if slot in finished:
+                req = self.active.pop(slot)
+                self.cm.free(slot)
+                self.drafter.on_free(slot)
+                req.finish(self.now, finished[slot])
+            else:
+                self.drafter.observe_commit(slot,
+                                            int(self.cm.lengths[slot]))
 
     def run(self) -> ServeReport:
         self.submit_arrivals()
@@ -381,15 +551,24 @@ class ServeLoop:
                     self.now = max(self.now, self.arrivals[0].arrival_time)
                     self.submit_arrivals()
                 continue
-            slots = self.writable_slots()
-            if not slots:
-                continue
-            self.decode_once(slots)
+            if self.drafter is not None:
+                self.decode_once_spec()
+            else:
+                slots = self.writable_slots()
+                if not slots:
+                    continue
+                self.decode_once(slots)
             self.submit_arrivals()
         return self.report()
 
     def report(self) -> ServeReport:
         cm, paged = self.cm, self.paged
+
+        def ttft_wall(r: Request) -> Optional[float]:
+            if not r.wall_token_times or r.wall_submitted_at is None:
+                return None
+            return r.wall_token_times[0] - r.wall_submitted_at
+
         results = [
             RequestResult(
                 request_id=r.request_id,
@@ -399,11 +578,14 @@ class ServeLoop:
                 ttft_steps=r.ttft,
                 latency_steps=r.latency,
                 finish_reason=r.finish_reason or "unknown",
+                ttft_wall_s=ttft_wall(r),
             )
             for r in sorted(self.requests, key=lambda r: r.request_id)
         ]
         total_new = sum(len(r.tokens) for r in results
                         if r.finish_reason != "rejected")
+        itl = [b - a for r in self.requests
+               for a, b in zip(r.wall_token_times, r.wall_token_times[1:])]
         mesh = self.executor.mesh
         return ServeReport(
             results=results,
@@ -426,12 +608,25 @@ class ServeLoop:
             peak_active_slots=self.peak_active,
             mesh_shape=(None if mesh is None
                         else tuple(int(d) for d in mesh.devices.shape)),
+            draft=(self.drafter.name if self.drafter is not None
+                   else "none"),
+            drafted_tokens=self.n_drafted,
+            accepted_tokens=self.n_accepted,
+            committed_tokens_per_step=self.sched.committed_tokens_per_step,
+            ttft_wall=_percentiles([ttft_wall(r) for r in self.requests]),
+            itl_wall=_percentiles(itl),
         )
 
 
 class ServingEngine:
     def __init__(self, arch_cfg, params, serve_cfg: Optional[ServeConfig] = None,
-                 executor: Optional[Executor] = None):
+                 executor: Optional[Executor] = None,
+                 draft_cfg=None, draft_params=None):
+        """``draft_cfg``/``draft_params``: a small same-family model for
+        ``ServeConfig.draft == "model"`` speculative decoding.  Its traces
+        run through an executor built over the SAME mesh as the target's
+        (or single-device when none), so drafting composes with
+        tensor-parallel serving."""
         self.cfg = arch_cfg
         self.serve_cfg = ServeConfig() if serve_cfg is None else serve_cfg
         if arch_cfg.matmul_mode in ("bp_exact", "bp_approx"):
@@ -445,6 +640,15 @@ class ServingEngine:
                                      mesh_shape=self.serve_cfg.mesh_shape)
         self.executor = executor
         self.matmul_backend = executor.matmul_backend
+        self.draft_cfg = draft_cfg
+        self.draft_executor: Optional[Executor] = None
+        if draft_cfg is not None:
+            if draft_params is None:
+                raise ValueError("draft_cfg given without draft_params")
+            if draft_cfg.matmul_mode in ("bp_exact", "bp_approx"):
+                draft_params = quantize_dense_params(draft_params)
+            self.draft_executor = make_executor(draft_cfg, draft_params,
+                                                mesh=executor.mesh)
         self._deployment_cache: Dict[int, Optional[dict]] = {}
 
     @property

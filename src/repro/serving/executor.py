@@ -226,6 +226,37 @@ class Executor:
         return self._get(("decode_sample", float(temperature), bool(paged)),
                          build)
 
+    def verify_sample_fn(self, paged: bool = False):
+        """``fn(cache, step) -> (greedy (B, S) int32 tokens, new_cache)``
+        for the speculative path: ONE forward pass appends the S fed tokens
+        (last committed + drafts) at per-slot positions and the per-position
+        greedy argmax is fused into the dispatch — only the (B, S) token
+        grid crosses to the host, never (B, S, V) logits.  The cache buffer
+        is donated exactly like the decode step.  Greedy-only by design:
+        the accept rule compares argmax streams, which is what makes
+        speculative outputs token-identical to non-speculative greedy."""
+        self._require_params()
+        cfg = self.cfg
+
+        def build():
+            verify = api.verify_step_paged if paged else api.verify_step
+
+            def step_fn(p, cache, step):
+                logits, new_cache = verify(p, cfg, dict(step, cache=cache))
+                new_cache = api.shard_cache(cfg, new_cache, paged=paged)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+
+            jitted = self._jit(step_fn, donate_argnums=(1,))
+
+            def fn(cache, step):
+                return jitted(self._params, cache, step)
+
+            fn.lower = lambda cache, step: jitted.lower(self._params, cache,
+                                                        step)
+            return fn
+
+        return self._get(("verify_sample", bool(paged)), build)
+
     def decode_scan_fn(self, chunk: int, temperature: float,
                        eos_id: Optional[int]):
         """``fn(tok, cache, done, key, pos0, i0) -> (tok, cache, done, key,

@@ -66,6 +66,12 @@ class Request:
     # request finishes with exactly the tokens it would have produced)
     replay: List[int] = dataclasses.field(default_factory=list)
     n_preemptions: int = 0
+    # wall-clock trace (time.perf_counter): when the request entered the
+    # waiting queue and when each token was emitted — the step-clock fields
+    # above stay the deterministic/replayable record, these feed the
+    # ServeReport latency percentiles (TTFT / inter-token)
+    wall_submitted_at: Optional[float] = None
+    wall_token_times: List[float] = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)

@@ -82,6 +82,7 @@ class QuasiSyncScheduler:
         self.pending_wait = 0     # decode steps the current admissible set waited
         self.n_syncs = 0
         self.n_decode_steps = 0
+        self.n_committed_tokens = 0
         self.occupancy_sum = 0.0
         self.max_divergence = 0
 
@@ -126,8 +127,16 @@ class QuasiSyncScheduler:
 
     # -- metrics ------------------------------------------------------------
 
-    def observe_decode_step(self):
+    def observe_decode_step(self, n_committed: Optional[int] = None):
+        """Record one batched decode/verify step.  ``n_committed`` is the
+        number of tokens actually COMMITTED this step across all slots —
+        under speculative decoding a slot commits 1..K+1 tokens per step,
+        so throughput accounting must count commits, not assume one token
+        per active slot.  ``None`` keeps the classic 1-per-active-slot
+        rule (the non-speculative decode step)."""
         self.n_decode_steps += 1
+        self.n_committed_tokens += (self.cache_mgr.n_active
+                                    if n_committed is None else n_committed)
         self.occupancy_sum += self.cache_mgr.n_active / self.cache_mgr.n_slots
         self.max_divergence = max(self.max_divergence,
                                   self.cache_mgr.divergence())
@@ -139,3 +148,11 @@ class QuasiSyncScheduler:
         if self.n_decode_steps == 0:
             return 0.0
         return self.occupancy_sum / self.n_decode_steps
+
+    @property
+    def committed_tokens_per_step(self) -> float:
+        """Mean tokens committed per batched step (> n_active mean under
+        speculation with a positive acceptance rate)."""
+        if self.n_decode_steps == 0:
+            return 0.0
+        return self.n_committed_tokens / self.n_decode_steps

@@ -1,0 +1,262 @@
+"""Speculative decoding: drafters + elastic multi-token verification.
+
+BitParticle's scheduling story is that per-unit work is *variable* (bit
+sparsity makes MAC cycle counts fluctuate) and that a quasi-synchronous
+array with bounded elasticity recovers the utilization rigid lock-step
+wastes.  Speculative decoding is the exact software analogue one level up:
+a cheap **drafter** guesses the next K tokens per slot, one batched
+``verify_step`` checks all of them in a single target-model forward pass,
+and each slot **commits a variable number of tokens per step** (1 when the
+first draft misses, up to K+1 when every draft lands).  The serving
+stack's per-slot ``cache_len`` machinery — built for requests advancing at
+their own depth — absorbs that fluctuation unchanged: slots now diverge by
+*committed tokens*, not merely by admission staggering, and the
+``QuasiSyncScheduler``'s lead window / divergence metrics read the same.
+
+Two drafters ship behind one interface:
+
+  * :class:`PromptLookupDrafter` — weight-free n-gram lookup: the longest
+    suffix of the slot's context (prompt + generated) that re-occurs
+    earlier in the context predicts its historical continuation.  Zero
+    model cost, surprisingly effective on extractive/repetitive workloads
+    (summarization, code edits), ideal for CPU tests.
+  * :class:`ModelDrafter` — a small same-family model (its own
+    ``ArchConfig`` + params) runs K+1 greedy one-token decode steps over
+    its OWN slot-aligned slab cache, batched across slots.  All its device
+    work routes through a ``serving.executor.Executor`` built over the
+    target engine's mesh, so drafting composes with ``MeshExecutor``
+    tensor parallelism.
+
+Correctness contract (the headline property): with greedy decoding the
+verify/accept rule commits EXACTLY the token stream the non-speculative
+engine would emit — ``argmax`` of the target logits at every position —
+so speculation changes step counts, never outputs.  Drafting is therefore
+greedy-only (``ServeConfig.temperature == 0``); temperature sampling would
+need the rejection-resampling scheme and is rejected with a clear error.
+
+Rollback lives in the cache managers, not here: the slab store simply
+advances ``cache_len`` by the committed count (rejected-draft K/V beyond
+it is masked and later overwritten); the paged store additionally releases
+whole tail blocks past the committed length (``PagedCacheManager.
+release_tail``) — never a shared block, because ``prepare_append``
+copy-on-writes any shared/registered block before the verify step writes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+
+class Drafter:
+    """Per-slot draft-token proposer driven by the ``ServeLoop``.
+
+    Lifecycle hooks mirror the target cache manager's slot lifecycle so a
+    stateful drafter (the model drafter's own KV cache) stays aligned with
+    the slots it drafts for; the weight-free drafter ignores them.
+    ``propose_all`` is called once per verify step with every slot that
+    will ride it and must return at most ``caps[slot]`` tokens per slot
+    (the loop caps drafts by each request's remaining output budget).
+    """
+
+    name = "none"
+
+    def propose_all(self, requests: Dict[int, object],
+                    caps: Dict[int, int]) -> Dict[int, np.ndarray]:
+        raise NotImplementedError
+
+    def on_admit(self, slot: int, req) -> None:     # noqa: B027
+        """A request was installed into ``slot`` (after target prefill)."""
+
+    def on_free(self, slot: int) -> None:           # noqa: B027
+        """``slot`` was released (finish or preemption)."""
+
+    def observe_commit(self, slot: int, committed_len: int) -> None:  # noqa: B027
+        """The verify step committed tokens: the slot's valid context
+        length (prompt + generated - 1 unfed token) is now
+        ``committed_len``.  Stateful drafters rewind here."""
+
+
+def _context(req) -> np.ndarray:
+    """The slot's full token context: prompt + every generated token
+    (including the last, not-yet-fed one)."""
+    return np.concatenate([np.asarray(req.prompt, np.int64),
+                           np.asarray(req.tokens, np.int64)])
+
+
+class PromptLookupDrafter(Drafter):
+    """Weight-free prompt-lookup (n-gram) drafting.
+
+    The last ``n`` context tokens (``n`` from ``max_ngram`` down to
+    ``min_ngram``) are searched for an earlier occurrence in the context;
+    on a hit, the tokens that historically followed the match are proposed
+    as the draft.  The most recent (rightmost) match wins — it is the best
+    local predictor of the continuation.  No weights, no device work: the
+    ideal CPU-test drafter, and a genuinely useful one on inputs that
+    reuse their own phrasing.
+    """
+
+    name = "prompt_lookup"
+
+    def __init__(self, num_draft_tokens: int, *, max_ngram: int = 3,
+                 min_ngram: int = 1):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError("need 1 <= min_ngram <= max_ngram")
+        self.k = int(num_draft_tokens)
+        self.max_ngram = int(max_ngram)
+        self.min_ngram = int(min_ngram)
+
+    def _lookup(self, ctx: np.ndarray, k: int) -> np.ndarray:
+        L = len(ctx)
+        for n in range(min(self.max_ngram, L - 1), self.min_ngram - 1, -1):
+            pat = ctx[L - n:]
+            # rightmost earlier occurrence of the suffix n-gram; the tokens
+            # that followed it are the proposal (they may reach into the
+            # suffix itself — that is exactly how a repeat extends)
+            for i in range(L - n - 1, -1, -1):
+                if np.array_equal(ctx[i:i + n], pat):
+                    return ctx[i + n:i + n + k].astype(np.int32)
+        return np.zeros(0, np.int32)
+
+    def propose_all(self, requests, caps):
+        return {slot: self._lookup(_context(req),
+                                   min(self.k, caps.get(slot, self.k)))
+                for slot, req in requests.items()}
+
+
+class ModelDrafter(Drafter):
+    """A small same-family draft model with its own slot-aligned cache.
+
+    The drafter owns a slab ``CacheManager`` over the DRAFT model's cache
+    shapes, one slot per target slot.  ``on_admit`` prefills the prompt
+    through the draft executor; ``propose_all`` runs K+1 batched greedy
+    decode steps (feeding each slot's last committed token, then its own
+    proposals) — the extra (K+1-th) feed integrates the K-th proposal's
+    K/V so a full acceptance (commit of K+1 tokens) still leaves the draft
+    cache covering every committed position; ``observe_commit`` rewinds
+    the draft ``cache_len`` to the committed context length, which IS the
+    rollback (a slab cache masks everything past ``cache_len``).
+
+    All device work (prefill/decode traces, cache allocation, placement)
+    goes through a ``serving.executor.Executor`` built for the draft
+    config — over the target's mesh when one is active, so drafting
+    composes with tensor-parallel serving.
+    """
+
+    name = "model"
+
+    def __init__(self, draft_cfg, executor, n_slots: int, cache_T: int,
+                 num_draft_tokens: int, target_cfg=None):
+        if target_cfg is not None:
+            if draft_cfg.family != target_cfg.family:
+                raise ValueError(
+                    f"draft family {draft_cfg.family!r} != target family "
+                    f"{target_cfg.family!r}: the draft must propose from "
+                    f"the same token space")
+            if draft_cfg.vocab_size != target_cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {draft_cfg.vocab_size} != target vocab "
+                    f"{target_cfg.vocab_size}")
+        from repro.serving.cache_manager import CacheManager
+        self.cfg = draft_cfg
+        self.executor = executor
+        self.k = int(num_draft_tokens)
+        # the draft cache must absorb the full speculative overhang
+        # (cache_len transiently reaches committed + K + 1 during a
+        # proposal run) — size it past the target's worst case
+        self.cm = CacheManager(draft_cfg, n_slots, cache_T + self.k + 1,
+                               executor=executor)
+        self.n_slots = n_slots
+        self._decode = executor.decode_sample_fn(0.0)   # greedy, slab
+        self._last: Dict[int, int] = {}                 # slot -> last fed tok
+        self._zero_keys = np.zeros((n_slots, 2), np.uint32)
+        self._zero_counts = np.zeros(n_slots, np.uint32)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def on_admit(self, slot: int, req):
+        self.cm.alloc(slot)     # draft slots mirror target slots 1:1
+        # right-pad the prompt to its pow2 bucket (ragged prefill gathers
+        # nothing — only the cache matters here) so draft prefill compiles
+        # O(log S) shape variants, not one per distinct prompt length
+        from repro.serving.scheduler import prefill_bucket_len
+        L = req.prompt_len
+        pad_to = prefill_bucket_len(L, self.cm.cache_T)
+        toks = np.zeros((1, pad_to), np.int32)
+        toks[0, :L] = np.asarray(req.prompt, np.int32)
+        _, cache = self.executor.prefill({"tokens": toks}, self.cm.cache_T,
+                                         prompt_lens=np.asarray([L]))
+        self.cm.insert(slot, cache, L)
+
+    def on_free(self, slot: int):
+        if self.cm._occupied[slot]:
+            self.cm.free(slot)
+        self._last.pop(slot, None)
+
+    def observe_commit(self, slot: int, committed_len: int):
+        # slab rollback: everything past cache_len is masked, so rewinding
+        # the position IS the rollback
+        self.cm.lengths[slot] = committed_len
+
+    # -- drafting -----------------------------------------------------------
+
+    def propose_all(self, requests, caps):
+        slots = list(requests.keys())
+        if not slots:
+            return {}
+        feed = np.zeros(self.n_slots, np.int32)
+        for s, req in requests.items():
+            feed[s] = req.tokens[-1]        # last committed, not yet fed
+        rows = []
+        for _ in range(self.k + 1):
+            step = {"tokens": jnp.asarray(feed[:, None]),
+                    "cache_len": self.cm.cache_len_vector()}
+            toks, new_cache = self._decode(self.cm.cache, step,
+                                           jnp.asarray(self._zero_keys),
+                                           jnp.asarray(self._zero_counts))
+            self.cm.update(new_cache)
+            self.cm.advance(slots)
+            feed = np.asarray(toks, np.int32).copy()
+            rows.append(feed)
+        grid = np.stack(rows, axis=1)       # (n_slots, K+1) greedy chain
+        return {s: grid[s, :min(self.k, caps.get(s, self.k))].astype(np.int32)
+                for s in slots}
+
+
+def make_drafter(serve_cfg, engine, *, n_slots: int,
+                 cache_T: int) -> Optional[Drafter]:
+    """Build the drafter selected by ``ServeConfig.draft`` for one serve
+    loop (``None`` for ``draft='none'``).  The model drafter's executor is
+    created by the engine (``ServingEngine.draft_executor``) so its traces
+    ride the same mesh/backend scoping as the target's."""
+    draft = getattr(serve_cfg, "draft", "none") or "none"
+    if draft == "none":
+        return None
+    from repro.models import api
+    if not api.supports_verify(engine.cfg):
+        raise ValueError(
+            f"family {engine.cfg.family!r} has no multi-token verify path: "
+            f"speculative decoding needs position-indexed KV that can be "
+            f"rewound on rejection; serve with draft='none'")
+    if serve_cfg.temperature > 0:
+        raise ValueError(
+            "speculative decoding is greedy-only (temperature == 0): the "
+            "accept rule compares argmax streams; temperature sampling "
+            "would need rejection resampling")
+    k = int(serve_cfg.num_draft_tokens)
+    if k < 1:
+        raise ValueError("num_draft_tokens must be >= 1 when drafting")
+    if draft == "prompt_lookup":
+        return PromptLookupDrafter(k)
+    if draft == "model":
+        executor = engine.draft_executor
+        if executor is None:
+            raise ValueError(
+                "draft='model' needs a draft model: construct the engine "
+                "with draft_cfg=<small ArchConfig> and draft_params")
+        return ModelDrafter(engine.draft_cfg, executor, n_slots, cache_T,
+                            k, target_cfg=engine.cfg)
+    raise ValueError(f"unknown draft {draft!r}; expected "
+                     f"'none', 'prompt_lookup' or 'model'")

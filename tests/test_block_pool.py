@@ -224,6 +224,88 @@ class TestPagedManagerInvariants:
         np.testing.assert_array_equal(
             np.asarray(cm.pages["k"][:, shared_tail]), before)
 
+    @given(st.lists(st.tuples(st.integers(0, 3),       # op kind
+                              st.integers(1, 12),      # prompt len / span
+                              st.booleans()),          # reuse a seen prompt
+                    min_size=1, max_size=14),
+           st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_spec_rollback_interleaved_invariants(self, ops, seed):
+        """Speculative append/rollback interleaved with admission,
+        preemption (free) and prefix sharing: never leaks, never
+        double-frees, never rewinds into (or mutates) a shared block —
+        checked against the full refcount/partition invariant after every
+        operation, plus byte-identity of every registered shared block."""
+        cfg = _cfg()
+        rng = np.random.default_rng(seed)
+        cm = PagedCacheManager(cfg, n_slots=3, cache_T=CACHE_T,
+                               block_size=BS, num_blocks=14)
+        src = _rand_src_cache(cfg, 1, cm.prefill_T, seed)
+        seen = []
+        # bid -> (trie key, page bytes) at registration time; the key pins
+        # identity across LRU-evict-then-re-register of the same block id
+        shared_content = {}
+
+        def snapshot_registered():
+            for bid, key in list(cm.pool._block_key.items()):
+                cur = shared_content.get(bid)
+                if cur is None or cur[0] != key:
+                    shared_content[bid] = (key, np.asarray(
+                        cm.pages["k"][:, bid]).copy())
+
+        def check_shared_untouched():
+            for bid, (key, want) in list(shared_content.items()):
+                if cm.pool._block_key.get(bid) == key:
+                    np.testing.assert_array_equal(
+                        np.asarray(cm.pages["k"][:, bid]), want,
+                        err_msg=f"registered block {bid} mutated in place")
+                else:
+                    del shared_content[bid]   # evicted: content reusable
+
+        for kind, n, reuse in ops:
+            occupied = np.flatnonzero(cm._occupied)
+            if kind == 0:                    # admit (insert, prefix-shared)
+                if cm.n_free == 0:
+                    continue
+                if reuse and seen:
+                    prompt = seen[int(rng.integers(len(seen)))][:max(n, 1)]
+                else:
+                    prompt = rng.integers(2, 30, size=n).tolist()
+                seen.append(prompt)
+                slot = cm.alloc()
+                try:
+                    cm.insert(slot, src, len(prompt), tokens=prompt)
+                    snapshot_registered()
+                except NoFreeBlocks:
+                    cm.free(slot)
+            elif kind == 1 and len(occupied):  # speculative append + commit
+                slot = int(rng.choice(occupied))
+                span = min(n, CACHE_T - int(cm.lengths[slot]))
+                if span < 1:
+                    continue
+                if cm.prepare_append([slot], [span]) is not None:
+                    continue                 # pool dry: skip (engine would
+                                             # preempt; covered by kind 3)
+                # verify writes the span, then commits a random prefix
+                commit = int(rng.integers(1, span + 1))
+                cm.advance([slot], [commit])
+                cm.release_tail(slot)
+            elif kind == 2 and len(occupied):  # rejection: commit nothing
+                slot = int(rng.choice(occupied))
+                if int(cm.lengths[slot]) >= CACHE_T:
+                    continue
+                if cm.prepare_append([slot], [min(n, 4)]) is not None:
+                    continue
+                cm.release_tail(slot)        # lengths unchanged: full rewind
+            elif kind == 3 and len(occupied):  # preemption / finish
+                cm.free(int(rng.choice(occupied)))
+            _check_refcounts(cm)
+            check_shared_untouched()
+        for s in np.flatnonzero(cm._occupied):
+            cm.free(int(s))
+        _check_refcounts(cm)
+        assert cm.pool.n_live == 0           # no leaked blocks
+
     def test_vectorized_advance_matches_loop(self):
         cfg = _cfg()
         cm = PagedCacheManager(cfg, n_slots=4, cache_T=CACHE_T,

@@ -100,6 +100,36 @@ def test_sharded_serve_bp_approx_int8_kv():
 
 
 @pytest.mark.slow
+def test_sharded_speculative_serve_token_identity():
+    """Speculative decoding composes with the mesh executor: the drafter's
+    traces ride the target's mesh, and 2x4 sharded speculative serve() is
+    token-identical to single-device NON-speculative greedy on both cache
+    backends.  Acceptance is asserted positive, not ~1: on a mesh the
+    draft chain (an S=1 decode program) and the verify (an S=K+1 program)
+    have different cross-shard reduction orders, so near-tie argmaxes can
+    flip between them — drafts are proposals, the verify is authoritative,
+    and token identity is the invariant that must survive."""
+    _run(_script("bp_exact", False, [], [], tail="""
+    for backend in ("slab", "paged"):
+        ref, base_eng = serve_tokens(None, backend)
+        spec = ServingEngine(cfg, params, ServeConfig(
+            max_new_tokens=8, temperature=0.0, cache_backend=backend,
+            block_size=4, mesh_shape=(2, 4), draft="model",
+            num_draft_tokens=3), draft_cfg=cfg, draft_params=params)
+        assert spec.draft_executor.mesh is spec.executor.mesh
+        reqs = [Request(prompt=prompts[i], max_new_tokens=[8, 3, 6, 8][i],
+                        arrival_time=float(i)) for i in range(4)]
+        rep = spec.serve(reqs, n_slots=2,
+                         sched_cfg=SchedulerConfig(lead_window=2))
+        got = [list(r.tokens) for r in
+               sorted(rep.results, key=lambda r: r.request_id)]
+        assert got == ref, (backend, ref, got)
+        assert rep.acceptance_rate > 0.0
+        print("OK spec", backend, rep.steps)
+"""))
+
+
+@pytest.mark.slow
 def test_sharded_static_generate_and_report_fields():
     """The static generate() path is mesh-identical as well, and the mesh
     engine keeps the deployment estimate + donation running."""
