@@ -1,0 +1,177 @@
+"""CI regression gate: diff current BENCH_*.json against a previous run.
+
+Usage::
+
+    python benchmarks/compare.py PREVIOUS CURRENT [--threshold 0.15]
+
+``PREVIOUS``/``CURRENT`` are either two BENCH_*.json files or two
+directories of them (matched by filename).  Every numeric value whose key
+ends in ``per_step_ms`` (lower is better) or ``tokens_per_s`` (higher is
+better) — at any nesting depth — is compared; a relative change past the
+threshold in the bad direction fails the gate (exit 1).
+
+Provenance rules (the ``_meta`` block stamped by ``benchmarks/common.py``):
+
+  * missing previous artifact  -> SKIP with a notice, exit 0 (first run on
+    a fresh trajectory must not fail CI);
+  * machine fingerprint differs (device kind / device count / jax version)
+    -> SKIP with a notice, exit 0 — cross-hardware deltas are not
+    regressions.  Hostname is provenance only, NOT part of the
+    fingerprint: ephemeral CI runners get a fresh hostname per run but are
+    the same machine class, and the threshold absorbs same-class noise.
+
+Exit codes: 0 ok/skipped, 1 regression, 2 usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+DEFAULT_THRESHOLD = 0.15
+
+#: metric-key suffix -> direction ("lower" / "higher" is better)
+METRIC_SUFFIXES = {
+    "per_step_ms": "lower",
+    "tokens_per_s": "higher",
+}
+
+#: _meta fields that must match for a comparison to be meaningful
+#: (hostname stays out: ephemeral CI runners rename per run)
+FINGERPRINT_KEYS = ("device_kind", "device_count", "jax_version")
+
+
+def collect_metrics(node, prefix: str = "") -> Dict[str, float]:
+    """Flatten every gated metric in a JSON tree to ``path -> value``."""
+    out: Dict[str, float] = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            if k == "_meta":
+                continue
+            out.update(collect_metrics(v, f"{prefix}{k}."))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            out.update(collect_metrics(v, f"{prefix}{i}."))
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        key = prefix[:-1]
+        leaf = key.rsplit(".", 1)[-1]
+        for suffix in METRIC_SUFFIXES:
+            if leaf.endswith(suffix):
+                out[key] = float(node)
+                break
+    return out
+
+
+def fingerprint(payload: dict) -> Optional[Tuple]:
+    meta = payload.get("_meta")
+    if not isinstance(meta, dict):
+        return None
+    return tuple(meta.get(k) for k in FINGERPRINT_KEYS)
+
+
+def compare_payloads(prev: dict, cur: dict, threshold: float,
+                     name: str = "") -> Tuple[List[str], List[str]]:
+    """Returns (regressions, notes) for one artifact pair."""
+    regressions: List[str] = []
+    notes: List[str] = []
+    fp_prev, fp_cur = fingerprint(prev), fingerprint(cur)
+    if fp_prev is None or fp_cur is None:
+        notes.append(f"{name}: SKIP (missing _meta provenance block)")
+        return regressions, notes
+    if fp_prev != fp_cur:
+        notes.append(
+            f"{name}: SKIP (machine fingerprint changed "
+            f"{dict(zip(FINGERPRINT_KEYS, fp_prev))} -> "
+            f"{dict(zip(FINGERPRINT_KEYS, fp_cur))}; cross-machine deltas "
+            f"are not regressions)")
+        return regressions, notes
+    prev_m, cur_m = collect_metrics(prev), collect_metrics(cur)
+    shared = sorted(set(prev_m) & set(cur_m))
+    if not shared:
+        notes.append(f"{name}: no shared gated metrics")
+        return regressions, notes
+    for key in shared:
+        p, c = prev_m[key], cur_m[key]
+        if p <= 0:
+            continue
+        leaf = key.rsplit(".", 1)[-1]
+        direction = next(d for s, d in METRIC_SUFFIXES.items()
+                         if leaf.endswith(s))
+        rel = (c - p) / p
+        bad = rel > threshold if direction == "lower" else rel < -threshold
+        line = (f"{name}:{key}: {p:.6g} -> {c:.6g} "
+                f"({rel * 100:+.1f}%, {direction} is better)")
+        if bad:
+            regressions.append("REGRESSION " + line)
+        else:
+            notes.append("ok " + line)
+    return regressions, notes
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _pairs(prev: str, cur: str) -> List[Tuple[str, Optional[str], str]]:
+    """(name, prev_path_or_None, cur_path) pairs for file or dir mode."""
+    if os.path.isdir(cur):
+        out = []
+        for fn in sorted(os.listdir(cur)):
+            if not (fn.startswith("BENCH_") and fn.endswith(".json")):
+                continue
+            pp = os.path.join(prev, fn) if os.path.isdir(prev) else None
+            out.append((fn, pp if pp and os.path.exists(pp) else None,
+                        os.path.join(cur, fn)))
+        return out
+    return [(os.path.basename(cur),
+             prev if os.path.exists(prev) else None, cur)]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("previous", help="previous BENCH_*.json file or dir")
+    ap.add_argument("current", help="current BENCH_*.json file or dir")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="max tolerated relative regression (default 0.15)")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.current):
+        print(f"compare: current artifact {args.current!r} not found",
+              file=sys.stderr)
+        return 2
+    if not os.path.exists(args.previous):
+        print(f"compare: SKIP — no previous artifact at {args.previous!r} "
+              f"(first run of the trajectory)")
+        return 0
+
+    pairs = _pairs(args.previous, args.current)
+    if not pairs:
+        print("compare: no BENCH_*.json artifacts in current dir",
+              file=sys.stderr)
+        return 2
+    all_regressions: List[str] = []
+    for name, prev_path, cur_path in pairs:
+        if prev_path is None:
+            print(f"{name}: SKIP (no previous artifact)")
+            continue
+        regs, notes = compare_payloads(_load(prev_path), _load(cur_path),
+                                       args.threshold, name=name)
+        for line in notes:
+            print(line)
+        for line in regs:
+            print(line)
+        all_regressions.extend(regs)
+    if all_regressions:
+        print(f"\ncompare: FAILED — {len(all_regressions)} metric(s) "
+              f"regressed past {args.threshold * 100:.0f}%")
+        return 1
+    print("\ncompare: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

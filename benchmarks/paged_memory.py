@@ -45,7 +45,7 @@ def run(tiny: bool = False, seed: int = 0, budget_slots: int = None,
     from repro.configs.base import get_arch
     from repro.models import api
     from repro.serving import (Request, SchedulerConfig, ServeConfig,
-                               ServingEngine)
+                               ServingEngine, percentiles)
 
     if budget_slots is None:
         budget_slots = 2 if tiny else 3      # HBM budget, in slab slots
@@ -133,6 +133,9 @@ def run(tiny: bool = False, seed: int = 0, budget_slots: int = None,
         "slab_decode_steps": int(slab.steps),
         "paged_decode_steps": int(paged.steps),
         "step_speedup": float(slab.steps / max(paged.steps, 1)),
+        "slab_per_step_ms": float(1e3 * slab.decode_s / max(slab.steps, 1)),
+        "paged_per_step_ms": float(1e3 * paged.decode_s
+                                   / max(paged.steps, 1)),
         "slab_tokens_per_s": float(slab.decode_tokens_per_s),
         "paged_tokens_per_s": float(paged.decode_tokens_per_s),
         "paged_prefix_hit_blocks": int(paged.prefix_hit_blocks),
@@ -141,6 +144,8 @@ def run(tiny: bool = False, seed: int = 0, budget_slots: int = None,
         "paged_peak_blocks_in_use": int(paged.peak_blocks_in_use),
         "mean_ttft_slab": float(np.mean(slab_ttft)) if slab_ttft else None,
         "mean_ttft_paged": float(np.mean(paged_ttft)) if paged_ttft else None,
+        "ttft_steps_pcts_slab": percentiles(slab_ttft),
+        "ttft_steps_pcts_paged": percentiles(paged_ttft),
         "token_mismatches": mismatches,
     }
 

@@ -10,6 +10,11 @@ E3Q2 so the utilization gains can be compared side by side.
 
     PYTHONPATH=src python benchmarks/serving_throughput.py [--tiny]
     PYTHONPATH=src python benchmarks/serving_throughput.py --lead-window 8
+    PYTHONPATH=src python benchmarks/serving_throughput.py --telemetry DIR
+
+``--telemetry DIR`` runs one extra (untimed) instrumented serve and writes
+``DIR/serving_metrics.jsonl`` + ``DIR/serving_trace.json`` — the artifacts
+CI uploads so a regressing run can be inspected in perfetto.
 """
 
 from __future__ import annotations
@@ -60,12 +65,15 @@ def _static_baseline(engine, prompts, max_news, n_slots, cache_T):
 
 
 def run(tiny: bool = False, seed: int = 0, lead_window: int = 4,
-        n_slots: int = None, n_requests: int = None, rate: float = 0.5):
+        n_slots: int = None, n_requests: int = None, rate: float = 0.5,
+        telemetry_dir: str = None):
+    import dataclasses
+
     from repro.configs.base import get_arch
     from repro.core.array_sim import ArrayConfig, run_experiment
     from repro.models import api
     from repro.serving import (Request, SchedulerConfig, ServeConfig,
-                               ServingEngine)
+                               ServingEngine, Telemetry, percentiles)
 
     if n_slots is None:
         n_slots = 2 if tiny else 4
@@ -142,6 +150,7 @@ def run(tiny: bool = False, seed: int = 0, lead_window: int = 4,
 
     ttfts = [r.ttft_steps for r in report.results
              if r.ttft_steps is not None]
+    ttft_pcts = percentiles(ttfts)      # shared repo-wide percentile rule
     result = {
         "n_requests": n_requests,
         "n_slots": n_slots,
@@ -149,8 +158,12 @@ def run(tiny: bool = False, seed: int = 0, lead_window: int = 4,
         "arrival_rate_per_step": rate,
         "static_tokens_per_s": static["tokens_per_s"],
         "static_decode_steps": static["steps"],
+        "static_per_step_ms": 1e3 * static["decode_s"]
+                              / max(static["steps"], 1),
         "continuous_tokens_per_s": report.decode_tokens_per_s,
         "continuous_decode_steps": report.steps,
+        "continuous_per_step_ms": 1e3 * report.decode_s
+                                  / max(report.steps, 1),
         "continuous_slot_utilization": report.slot_utilization,
         "continuous_n_syncs": report.n_syncs,
         "continuous_max_divergence": report.max_divergence,
@@ -158,11 +171,31 @@ def run(tiny: bool = False, seed: int = 0, lead_window: int = 4,
         "step_speedup": step_speedup,
         "token_mismatches": mismatches,
         "mean_ttft_steps": float(np.mean(ttfts)) if ttfts else None,
+        "ttft_steps_pcts": ttft_pcts,
+        "ttft_wall_ms_pcts": (
+            {k: v * 1e3 for k, v in report.ttft_wall.items()}
+            if report.ttft_wall else None),
         "array_sim_util_E0Q0": sim_sync.pe_utilization,
         "array_sim_util_E3Q2": sim_elastic.pe_utilization,
         "array_sim_util_gain": (sim_elastic.pe_utilization
                                 / max(sim_sync.pe_utilization, 1e-9)),
     }
+
+    if telemetry_dir:
+        # one extra UNTIMED serve with the sinks attached: the timed repeats
+        # above stay sink-free, and CI gets a fresh single-run JSONL + trace
+        metrics_path = os.path.join(telemetry_dir, "serving_metrics.jsonl")
+        trace_path = os.path.join(telemetry_dir, "serving_trace.json")
+        tel = Telemetry(metrics_path=metrics_path, trace_path=trace_path)
+        saved_cfg = engine.serve_cfg
+        engine.serve_cfg = dataclasses.replace(saved_cfg, telemetry=tel)
+        try:
+            _serve_once()
+        finally:
+            engine.serve_cfg = saved_cfg
+            tel.close()
+        result["telemetry_metrics"] = metrics_path
+        result["telemetry_trace"] = trace_path
     return result
 
 
@@ -176,13 +209,17 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--rate", type=float, default=0.5,
                     help="Poisson arrivals per decode step")
+    ap.add_argument("--telemetry", metavar="DIR", default=None,
+                    help="also run one instrumented serve and write "
+                         "DIR/serving_metrics.jsonl + DIR/serving_trace.json")
     args = ap.parse_args(argv)
 
     r = run(tiny=args.tiny, seed=args.seed, lead_window=args.lead_window,
-            n_slots=args.slots, n_requests=args.requests, rate=args.rate)
+            n_slots=args.slots, n_requests=args.requests, rate=args.rate,
+            telemetry_dir=args.telemetry)
 
     from benchmarks.common import save_artifact
-    path = save_artifact("serving_throughput", r)
+    path = save_artifact("BENCH_serving", r)
 
     print(f"requests={r['n_requests']} slots={r['n_slots']} "
           f"E={r['lead_window']} rate={r['arrival_rate_per_step']}/step")
@@ -190,8 +227,11 @@ def main(argv=None):
           f"({r['static_decode_steps']} lock-step decode steps)")
     print(f"continuous:  {r['continuous_tokens_per_s']:8.1f} tok/s "
           f"({r['continuous_decode_steps']} steps, "
+          f"{r['continuous_per_step_ms']:.2f} ms/step, "
           f"{r['continuous_slot_utilization']*100:.0f}% slot util, "
           f"{r['continuous_n_syncs']} admission syncs)")
+    if r.get("telemetry_metrics"):
+        print(f"telemetry: {r['telemetry_metrics']} + {r['telemetry_trace']}")
     print(f"speedup:     {r['speedup']:.2f}x wall-clock, "
           f"{r['step_speedup']:.2f}x per-decode-step (deterministic)   "
           f"token mismatches vs static: {r['token_mismatches']}")

@@ -112,6 +112,8 @@ def run(tiny: bool = False, seed: int = 0, n_requests: int = None,
             total_mismatches += mism
             cells[f"{draft}_{backend}"] = {
                 "decode_steps": int(rep.steps),
+                "per_step_ms": float(1e3 * rep.decode_s
+                                     / max(rep.steps, 1)),
                 "step_reduction": float(base.steps / max(rep.steps, 1)),
                 "drafted_tokens": int(rep.drafted_tokens),
                 "accepted_tokens": int(rep.accepted_tokens),
@@ -132,6 +134,8 @@ def run(tiny: bool = False, seed: int = 0, n_requests: int = None,
         "num_draft_tokens": num_draft_tokens,
         "block_size": block_size,
         "baseline_decode_steps": int(base.steps),
+        "baseline_per_step_ms": float(1e3 * base.decode_s
+                                      / max(base.steps, 1)),
         "baseline_tokens_per_s": float(base.decode_tokens_per_s),
         "cells": cells,
         # headline: deterministic self-speculation step reduction

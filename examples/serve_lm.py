@@ -8,6 +8,8 @@ KV cache, served by the quasi-sync continuous-batching engine.
     PYTHONPATH=src python examples/serve_lm.py --draft prompt_lookup
     PYTHONPATH=src python examples/serve_lm.py --draft model \
         --num-draft-tokens 4                  # speculative decoding
+    PYTHONPATH=src python examples/serve_lm.py \
+        --metrics run.jsonl --trace trace.json   # observability sinks
 """
 
 import argparse
@@ -52,7 +54,7 @@ from repro.configs.base import get_arch
 from repro.models import api
 from repro.models.layers import quantize_dense_params
 from repro.serving import (Request, SchedulerConfig, ServeConfig,
-                           ServingEngine)
+                           ServingEngine, Telemetry)
 
 
 def main():
@@ -88,6 +90,15 @@ def main():
                          "model (greedy only — forces temperature 0)")
     ap.add_argument("--num-draft-tokens", type=int, default=4,
                     help="K: draft tokens verified per decode step")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="append one JSONL record per serving step "
+                         "(docs/observability.md)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of serving spans — "
+                         "load it in https://ui.perfetto.dev")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace into DIR "
+                         "(view with tensorboard or perfetto)")
     args = ap.parse_args()
     mesh_shape = _MESH     # parsed+validated pre-import (sets XLA_FLAGS)
     if args.draft != "none" and args.temperature > 0:
@@ -143,16 +154,29 @@ def main():
                         arrival_time=float(arrivals[i]))
                 for i in range(args.requests)]
 
-    # warmup (compile prefill + vector-cache_len decode)
+    # warmup (compile prefill + vector-cache_len decode) — runs BEFORE the
+    # telemetry handle is attached so the sinks see only the measured serve
     engine.serve([Request(prompt=prompts[0], max_new_tokens=2)],
                  n_slots=args.slots,
                  cache_T=args.prompt_len + args.tokens
                  + engine.serve_cfg.cache_margin)
 
+    tel = None
+    if args.metrics or args.trace or args.profile_dir:
+        import dataclasses
+        tel = Telemetry(metrics_path=args.metrics, trace_path=args.trace,
+                        profile_dir=args.profile_dir)
+        engine.serve_cfg = dataclasses.replace(engine.serve_cfg,
+                                               telemetry=tel)
+
     report = engine.serve(
         requests, n_slots=args.slots,
         cache_T=args.prompt_len + args.tokens + engine.serve_cfg.cache_margin,
         sched_cfg=SchedulerConfig(lead_window=args.lead_window))
+    if tel is not None:
+        tel.close()
+        sinks = [p for p in (args.metrics, args.trace, args.profile_dir) if p]
+        print(f"telemetry: {', '.join(sinks)}")
 
     print(f"\nserved {args.requests} requests on {args.slots} slots "
           f"(E={args.lead_window}, Poisson rate {args.rate}/step)")

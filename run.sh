@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# Tuned launcher for every PYTHONPATH=src entry point (benchmarks, examples,
+# pytest).  Wraps the child in the allocator / logging / XLA environment the
+# serving benchmarks assume, so numbers taken through it are comparable:
+#
+#   ./run.sh benchmarks/serving_throughput.py --tiny
+#   ./run.sh --devices 8 benchmarks/sharded_serving.py --tiny
+#   ./run.sh -m pytest -q tests/test_telemetry.py
+#
+# --devices N forces N virtual CPU devices (XLA host-platform device count)
+# BEFORE jax initializes — required for mesh runs on a CPU-only box.  Flags
+# already present in a caller's XLA_FLAGS win over ours.
+set -euo pipefail
+
+usage() {
+    sed -n '2,10p' "$0" | sed 's/^# \{0,1\}//'
+    exit 2
+}
+
+devices=""
+while [[ $# -gt 0 ]]; do
+    case "$1" in
+        --devices) [[ $# -ge 2 ]] || usage; devices="$2"; shift 2 ;;
+        --devices=*) devices="${1#--devices=}"; shift ;;
+        -h|--help) usage ;;
+        *) break ;;
+    esac
+done
+[[ $# -gt 0 ]] || usage
+
+# tcmalloc beats glibc malloc on the fragmented host-side allocation pattern
+# of a serving loop (per-step numpy staging buffers); skip silently when the
+# library isn't installed
+for so in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+          /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4; do
+    if [[ -z "${LD_PRELOAD:-}" && -e "$so" ]]; then
+        export LD_PRELOAD="$so"
+        break
+    fi
+done
+# silence tcmalloc's large-alloc warnings (weight + KV-cache buffers trip it)
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="${TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD:-60000000000}"
+# mute TF/XLA C++ chatter that would interleave with benchmark CSV output
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+
+export XLA_FLAGS="${XLA_FLAGS:-}"
+if [[ -n "$devices" ]]; then
+    case "$XLA_FLAGS" in
+        *--xla_force_host_platform_device_count=*) ;;   # caller pinned it
+        *) export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=$devices" ;;
+    esac
+fi
+
+repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")" && pwd)"
+export PYTHONPATH="$repo_root/src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec /usr/bin/env python3 "$@"

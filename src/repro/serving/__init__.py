@@ -20,6 +20,9 @@ from repro.serving.queue import Request, RequestQueue, RequestState
 from repro.serving.scheduler import QuasiSyncScheduler, SchedulerConfig
 from repro.serving.speculative import (Drafter, ModelDrafter,
                                        PromptLookupDrafter, make_drafter)
+from repro.serving.telemetry import (SCHEMA_VERSION, MetricsLogger,
+                                     StreamSummary, Telemetry, Tracer,
+                                     percentiles, read_jsonl, reduce_stream)
 
 __all__ = [
     "BaseCacheManager",
@@ -29,6 +32,7 @@ __all__ = [
     "Executor",
     "GenerationResult",
     "MeshExecutor",
+    "MetricsLogger",
     "ModelDrafter",
     "NoFreeBlocks",
     "PagedCacheManager",
@@ -38,14 +42,21 @@ __all__ = [
     "RequestQueue",
     "RequestResult",
     "RequestState",
+    "SCHEMA_VERSION",
     "ServeConfig",
     "ServeLoop",
     "ServeReport",
     "ServingEngine",
     "SchedulerConfig",
     "SingleDeviceExecutor",
+    "StreamSummary",
+    "Telemetry",
+    "Tracer",
     "make_cache_manager",
     "make_drafter",
     "make_executor",
     "make_serving_mesh",
+    "percentiles",
+    "read_jsonl",
+    "reduce_stream",
 ]

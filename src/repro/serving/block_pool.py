@@ -239,11 +239,13 @@ class PagedCacheManager(BaseCacheManager):
 
     def __init__(self, cfg, n_slots: int, cache_T: int, *,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 executor=None):
+                 executor=None, telemetry=None):
+        from repro.serving.telemetry import NULL_TELEMETRY
         if cfg.family not in ("dense", "moe", "vlm"):
             raise ValueError(
                 f"cache_backend='paged' supports position-indexed KV "
                 f"families (dense/moe/vlm), not {cfg.family!r}; use 'slab'")
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
         self.block_size = block_size
         # blocks per sequence: logical capacity rounded up to whole blocks
         self.blocks_per_seq = -(-cache_T // block_size)
@@ -391,8 +393,11 @@ class PagedCacheManager(BaseCacheManager):
         ids = np.full(self.blocks_per_seq, TRASH_BLOCK, np.int32)
         skip = n_hit + (1 if adopted_partial else 0)
         ids[skip:n_total] = table[skip:n_total]
-        self.pages = self.executor.paged_insert(self.pages, src_cache,
-                                                ids, src_index)
+        with self.telemetry.span("block_insert", slot=slot,
+                                 n_blocks=n_total - skip,
+                                 prefix_hits=n_counted_hits):
+            self.pages = self.executor.paged_insert(self.pages, src_cache,
+                                                    ids, src_index)
         # register freshly written FULL blocks; on a same-content collision
         # (two identical prompts in one prefill group) swap to the canonical
         # block so the copies share
@@ -457,8 +462,10 @@ class PagedCacheManager(BaseCacheManager):
                             new = self.pool.alloc()
                         except NoFreeBlocks:
                             return s
-                        self.pages = self.executor.copy_block(self.pages,
-                                                              new, bid)
+                        with self.telemetry.span("cow", slot=s,
+                                                 src=bid, dst=new):
+                            self.pages = self.executor.copy_block(
+                                self.pages, new, bid)
                         self.pool.decref(bid)
                         self.tables[s, bi] = new
                         self.pool.n_cow += 1
@@ -474,6 +481,9 @@ class PagedCacheManager(BaseCacheManager):
         is asserted, not assumed."""
         n_keep = -(-int(self.lengths[slot]) // self.block_size)
         k = int(self._n_blocks_of[slot])
+        if k > n_keep:
+            self.telemetry.instant("release_tail", slot=slot,
+                                   n_blocks=k - n_keep)
         for bi in range(n_keep, k):
             bid = int(self.tables[slot, bi])
             if (self.pool.refcount[bid] != 1

@@ -117,9 +117,12 @@ class CacheManager(BaseCacheManager):
     manager directly without one builds a default single-device executor.
     """
 
-    def __init__(self, cfg, n_slots: int, cache_T: int, executor=None):
+    def __init__(self, cfg, n_slots: int, cache_T: int, executor=None,
+                 telemetry=None):
+        from repro.serving.telemetry import NULL_TELEMETRY
         super().__init__(cfg, n_slots)
         self.cache_T = cache_T
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
         if executor is None:
             from repro.serving.executor import make_executor
             executor = make_executor(cfg)
@@ -142,8 +145,9 @@ class CacheManager(BaseCacheManager):
             raise ValueError(f"slot {slot} must be alloc()ed before insert")
         # executor op: jitted once per executor (one compiled insert covers
         # every (slot, src_index) pair), pool buffer donated in place
-        self.cache = self.executor.slot_insert(self.cache, src_cache,
-                                               slot, src_index)
+        with self.telemetry.span("slot_insert", slot=slot, length=length):
+            self.cache = self.executor.slot_insert(self.cache, src_cache,
+                                                   slot, src_index)
         self.lengths[slot] = length
 
     def update(self, new_cache):
@@ -154,15 +158,17 @@ class CacheManager(BaseCacheManager):
 def make_cache_manager(cfg, n_slots: int, cache_T: int, *,
                        backend: str = "slab", block_size: int = 16,
                        num_blocks: Optional[int] = None,
-                       executor=None) -> BaseCacheManager:
+                       executor=None, telemetry=None) -> BaseCacheManager:
     """Facade: build the backing store selected by ``backend``, with its
-    device ops routed through ``executor`` (None -> single-device)."""
+    device ops routed through ``executor`` (None -> single-device) and its
+    spans on ``telemetry`` (None -> no-op)."""
     if backend == "slab":
-        return CacheManager(cfg, n_slots, cache_T, executor=executor)
+        return CacheManager(cfg, n_slots, cache_T, executor=executor,
+                            telemetry=telemetry)
     if backend == "paged":
         from repro.serving.block_pool import PagedCacheManager
         return PagedCacheManager(cfg, n_slots, cache_T,
                                  block_size=block_size, num_blocks=num_blocks,
-                                 executor=executor)
+                                 executor=executor, telemetry=telemetry)
     raise ValueError(f"unknown cache_backend {backend!r}; "
                      f"expected 'slab' or 'paged'")

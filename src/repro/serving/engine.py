@@ -56,6 +56,8 @@ from repro.serving.executor import Executor, make_executor
 from repro.serving.queue import Request, RequestQueue, RequestState
 from repro.serving.scheduler import (QuasiSyncScheduler, SchedulerConfig,
                                      prefill_bucket_len)
+from repro.serving.telemetry import (SCHEMA_VERSION, Telemetry, percentiles,
+                                     reduce_stream)
 
 
 @dataclasses.dataclass
@@ -79,6 +81,10 @@ class ServeConfig:
     # identical to non-speculative greedy, steps shrink with acceptance.
     draft: str = "none"
     num_draft_tokens: int = 4         # K: drafts verified per step
+    # observability: a ``serving.telemetry.Telemetry`` handle (metrics JSONL
+    # / Chrome-trace / jax.profiler sinks).  None (the default) builds a
+    # disabled no-op handle — no files written, token-identical outputs.
+    telemetry: Optional[Telemetry] = None
 
 
 def tokens_per_second(n_tokens: int, decode_s: float, prefill_s: float = 0.0,
@@ -92,12 +98,9 @@ def tokens_per_second(n_tokens: int, decode_s: float, prefill_s: float = 0.0,
     return n_tokens / max(decode_s, 1e-9)
 
 
-def _percentiles(samples) -> Optional[Dict[str, float]]:
-    """{p50, p90, p99} of a wall-clock latency sample set (seconds)."""
-    xs = np.asarray([s for s in samples if s is not None], np.float64)
-    if xs.size == 0:
-        return None
-    return {f"p{q}": float(np.percentile(xs, q)) for q in (50, 90, 99)}
+# THE percentile rule lives in serving.telemetry now so the report and the
+# benchmark scripts share one implementation; alias kept for existing callers.
+_percentiles = percentiles
 
 
 @dataclasses.dataclass
@@ -191,6 +194,23 @@ class ServeLoop:
         self.engine = engine
         self.executor: Executor = engine.executor
         self.serve_cfg = engine.serve_cfg
+        # observability: sinks ride the config's handle; a fresh disabled
+        # handle otherwise.  The executors get the handle BEFORE any cache
+        # is built so their host->device transfers count from step zero.
+        self.tel: Telemetry = (self.serve_cfg.telemetry
+                               if self.serve_cfg.telemetry is not None
+                               else Telemetry())
+        engine.executor.set_telemetry(self.tel)
+        if engine.draft_executor is not None:
+            engine.draft_executor.set_telemetry(self.tel)
+        # the in-memory step-record stream: ALWAYS accumulated (host dicts,
+        # negligible next to a device dispatch) so ``report()`` is a pure
+        # reduction over it whether or not any sink is attached — the
+        # aggregate counters and the stream can never disagree
+        self.stream: List[dict] = []
+        self._wall0 = time.perf_counter()
+        self._h2d_mark = int(self.tel.counters.get("h2d_bytes", 0))
+        self._d2h_mark = int(self.tel.counters.get("d2h_bytes", 0))
         requests = sorted(requests,
                           key=lambda r: (r.arrival_time, r.request_id))
         self.requests = requests
@@ -201,7 +221,8 @@ class ServeLoop:
                                      backend=self.serve_cfg.cache_backend,
                                      block_size=self.serve_cfg.block_size,
                                      num_blocks=num_blocks,
-                                     executor=engine.executor)
+                                     executor=engine.executor,
+                                     telemetry=self.tel)
         self.paged = isinstance(self.cm, PagedCacheManager)
         # prefill caches must slice into whole blocks on the paged store
         self.cache_T = self.cm.prefill_T if self.paged else cache_T
@@ -213,8 +234,10 @@ class ServeLoop:
                          and not extras)
             sched_cfg = dataclasses.replace(
                 sched_cfg, prefill_bucketing="pow2" if ragged_ok else "exact")
-        self.rq = RequestQueue(max_waiting=sched_cfg.max_waiting)
-        self.sched = QuasiSyncScheduler(self.rq, self.cm, sched_cfg)
+        self.rq = RequestQueue(max_waiting=sched_cfg.max_waiting,
+                               on_reject=self._on_reject)
+        self.sched = QuasiSyncScheduler(self.rq, self.cm, sched_cfg,
+                                        telemetry=self.tel)
         self.ragged = self.sched.bucketing == "pow2"
         self.extras = extras
         self.n_slots = n_slots
@@ -236,12 +259,62 @@ class ServeLoop:
         # VARIABLE 1..K+1 tokens per step (greedy-only, token-identical)
         from repro.serving.speculative import make_drafter
         self.drafter = make_drafter(self.serve_cfg, engine,
-                                    n_slots=n_slots, cache_T=self.cache_T)
+                                    n_slots=n_slots, cache_T=self.cache_T,
+                                    telemetry=self.tel)
         self.n_drafted = 0
         self.n_accepted = 0
         if self.drafter is not None:
             self._verify_fn = engine.executor.verify_sample_fn(
                 paged=self.paged)
+        mesh = self.executor.mesh
+        self._emit("run",
+                   cache_backend=str(self.serve_cfg.cache_backend),
+                   n_slots=int(n_slots), cache_T=int(self.cache_T),
+                   draft=(self.drafter.name if self.drafter is not None
+                          else "none"),
+                   temperature=float(self.serve_cfg.temperature),
+                   mesh_shape=(None if mesh is None else
+                               [int(d) for d in mesh.devices.shape]),
+                   block_size=int(self.serve_cfg.block_size))
+
+    # -- telemetry plumbing --------------------------------------------------
+
+    def _emit(self, kind: str, **fields) -> dict:
+        """Append one record to the step stream and forward it to the
+        metrics sink.  Values must already be native Python scalars — the
+        JSONL line and the in-memory record are the SAME dict, which is
+        what makes the file reduction byte-equal to the live one."""
+        rec = {"schema": SCHEMA_VERSION, "kind": kind,
+               "ts_s": time.perf_counter() - self._wall0}
+        rec.update(fields)
+        self.stream.append(rec)
+        self.tel.emit(rec)
+        return rec
+
+    def _on_reject(self, req: Request):
+        self._emit("reject", step=int(self.sched.n_decode_steps),
+                   request_id=int(req.request_id))
+
+    def _byte_deltas(self) -> Tuple[int, int]:
+        """Host<->device bytes moved since the previous step record."""
+        c = self.tel.counters
+        h2d, d2h = int(c.get("h2d_bytes", 0)), int(c.get("d2h_bytes", 0))
+        out = (h2d - self._h2d_mark, d2h - self._d2h_mark)
+        self._h2d_mark, self._d2h_mark = h2d, d2h
+        return out
+
+    def _pool_gauges(self) -> dict:
+        """Block-pool gauges for one step record (zeros on the slab store).
+        Hit/CoW/peak counters are CUMULATIVE snapshots — monotone, so the
+        stream reduction recovers the totals with a running max."""
+        if not self.paged:
+            return {"blocks_in_use": 0, "prefix_hit_blocks": 0,
+                    "cow_blocks": 0, "peak_blocks_in_use": 0}
+        pool = self.cm.pool
+        return {"blocks_in_use": int(pool.n_live),
+                "prefix_hit_blocks": int(pool.n_prefix_hits),
+                "cow_blocks": int(pool.n_cow),
+                "peak_blocks_in_use": int(pool.peak_live)}
 
     # -- admission / preemption --------------------------------------------
 
@@ -271,12 +344,18 @@ class ServeLoop:
         """Evict ``slot``'s request back to the queue head with its
         generated tokens queued for token-exact replay."""
         req = self.active.pop(slot)
-        self.cm.free(slot)
-        if self.drafter is not None:
-            self.drafter.on_free(slot)
-        req.preempt()           # -> WAITING, tokens queued for replay
-        self.rq.push_front(req)
+        discarded = len(req.tokens)
+        with self.tel.span("preempt", slot=slot,
+                           request_id=req.request_id):
+            self.cm.free(slot)
+            if self.drafter is not None:
+                self.drafter.on_free(slot)
+            req.preempt()       # -> WAITING, tokens queued for replay
+            self.rq.push_front(req)
         self.n_preemptions += 1
+        self._emit("preempt", step=int(self.sched.n_decode_steps),
+                   slot=int(slot), request_id=int(req.request_id),
+                   discarded_tokens=int(discarded))
 
     def insert_with_preemption(self, slot: int, cache, req: Request,
                                src_index: int):
@@ -297,11 +376,15 @@ class ServeLoop:
                         "request; increase num_blocks")
                 self.preempt(victim)
 
-    def admit(self, group: List[Request]):
+    def admit(self, group: List[Request], new_sync: bool = True):
         """Fused prefill of one admission group: run the prompts, sample
         (or replay) each request's first token, and install survivors into
-        slots."""
+        slots.  ``new_sync`` marks the group as opening a fresh admission
+        sync in the metrics stream — ``run()`` passes True only for the
+        first group of each ``plan_admissions()`` batch, so the stream's
+        sync count matches the scheduler's."""
         engine = self.engine
+        t_start = time.perf_counter()
         for req in group:
             req.transition(RequestState.PREFILL)
             req.admitted_at = self.now
@@ -332,40 +415,63 @@ class ServeLoop:
                         f"extra input {k!r} (missing for {missing})")
                 batch[k] = np.stack(
                     [np.asarray(extras[r.request_id][k]) for r in group])
+        self.tel.count("h2d_bytes", sum(int(np.asarray(v).nbytes)
+                                        for v in batch.values()))
         t0 = time.perf_counter()
-        if self.ragged:
-            logits, cache = self.executor.prefill(batch, self.cache_T,
-                                                  prompt_lens=lens)
-        else:
-            logits, cache = self.executor.prefill(batch, self.cache_T)
-        logits.block_until_ready()
-        wall = time.perf_counter()
-        self.prefill_s += wall - t0
-        for j, req in enumerate(group):
-            if req.replay:
-                # preempted request: re-emit its original first token
-                tok = req.replay.pop(0)
+        with self.tel.span("prefill", group_size=len(group), pad_to=pad_to):
+            if self.ragged:
+                logits, cache = self.executor.prefill(batch, self.cache_T,
+                                                      prompt_lens=lens)
             else:
-                tok = int(np.asarray(engine._sample(
-                    logits[j:j + 1], engine._request_key(req, 0)))[0])
-            self._append_token(req, tok, wall)
-            if req.first_token_at is None:
-                req.first_token_at = self.now
-            reason = engine._finished(req, tok)
-            if reason is not None:
-                req.finish(self.now, reason)
-                continue
-            slot = self.cm.alloc()
-            self.insert_with_preemption(slot, cache, req, j)
-            req.slot = slot
-            req.transition(RequestState.DECODE)
-            self.active[slot] = req
-            self.last_tok[slot] = tok
-            if self.serve_cfg.temperature > 0:
-                self.slot_keys[slot] = np.asarray(
-                    engine._request_key_base(req))
-            if self.drafter is not None:
-                self.drafter.on_admit(slot, req)
+                logits, cache = self.executor.prefill(batch, self.cache_T)
+            logits.block_until_ready()
+        wall = time.perf_counter()
+        dispatch_s = wall - t0
+        self.prefill_s += dispatch_s
+        t_inst = time.perf_counter()
+        with self.tel.span("install", group_size=len(group)):
+            for j, req in enumerate(group):
+                if req.replay:
+                    # preempted request: re-emit its original first token
+                    tok = req.replay.pop(0)
+                else:
+                    arr = np.asarray(engine._sample(
+                        logits[j:j + 1], engine._request_key(req, 0)))
+                    self.tel.count("d2h_bytes", arr.nbytes)
+                    tok = int(arr[0])
+                self._append_token(req, tok, wall)
+                if req.first_token_at is None:
+                    req.first_token_at = self.now
+                reason = engine._finished(req, tok)
+                if reason is not None:
+                    req.finish(self.now, reason)
+                    continue
+                slot = self.cm.alloc()
+                self.insert_with_preemption(slot, cache, req, j)
+                req.slot = slot
+                req.transition(RequestState.DECODE)
+                self.active[slot] = req
+                self.last_tok[slot] = tok
+                if self.serve_cfg.temperature > 0:
+                    self.slot_keys[slot] = np.asarray(
+                        engine._request_key_base(req))
+                if self.drafter is not None:
+                    self.drafter.on_admit(slot, req)
+        install_s = time.perf_counter() - t_inst
+        h2d, d2h = self._byte_deltas()
+        self._emit("prefill", step=int(self.sched.n_decode_steps),
+                   wall_s=time.perf_counter() - t_start,
+                   phases={"dispatch_s": dispatch_s,
+                           "install_s": install_s},
+                   group_size=int(len(group)), pad_to=int(pad_to),
+                   prompt_tokens=int(lens.sum()),
+                   # every request emits exactly one token at prefill
+                   # (sampled or replayed), finished-at-prefill included
+                   committed_tokens=int(len(group)),
+                   new_sync=bool(new_sync),
+                   active_slots=int(self.cm.n_active),
+                   h2d_bytes=h2d, d2h_bytes=d2h,
+                   **self._pool_gauges())
 
     @staticmethod
     def _append_token(req: Request, tok: int, wall: float):
@@ -399,10 +505,13 @@ class ServeLoop:
             slots = list(self.active.keys())
         return slots
 
-    def decode_once(self, slots: List[int]):
+    def decode_once(self, slots: List[int], prepare_s: float = 0.0):
         """One batched decode step: fixed (n_slots, ...) shapes, decode +
         fold + sample fused into ONE jitted dispatch with the cache buffer
-        donated; only the (n_slots,) sampled tokens transfer to host."""
+        donated; only the (n_slots,) sampled tokens transfer to host.
+        ``prepare_s`` is the caller-measured ``writable_slots`` wall (block
+        allocation / CoW on the paged store) for the step record."""
+        t_start = time.perf_counter()
         counts = np.zeros(self.n_slots, np.uint32)
         for s in slots:
             counts[s] = len(self.active[s].tokens)
@@ -410,35 +519,60 @@ class ServeLoop:
                 "cache_len": self.cm.cache_len_vector()}
         if self.paged:
             step["block_tables"] = self.cm.block_tables_device()
+        self.tel.count("h2d_bytes",
+                       int(step["tokens"].nbytes)
+                       + int(step["cache_len"].nbytes)
+                       + int(self.slot_keys.nbytes) + int(counts.nbytes))
         t0 = time.perf_counter()
-        toks, new_cache = self._decode_fn(self.cm.cache, step,
-                                          jnp.asarray(self.slot_keys),
-                                          jnp.asarray(counts))
-        toks.block_until_ready()
+        with self.tel.span("decode", n_slots=len(slots)):
+            toks, new_cache = self._decode_fn(self.cm.cache, step,
+                                              jnp.asarray(self.slot_keys),
+                                              jnp.asarray(counts))
+            toks.block_until_ready()
         wall = time.perf_counter()
-        self.decode_s += wall - t0
+        dispatch_s = wall - t0
+        self.decode_s += dispatch_s
         self.cm.update(new_cache)
         self.cm.advance(slots)
         self.sched.observe_decode_step(n_committed=len(slots))
+        # occupancy/divergence captured HERE (before finished slots free)
+        # so the record sees exactly what the scheduler observed
+        occupancy = self.cm.n_active / self.cm.n_slots
+        divergence = int(self.cm.divergence())
         self.peak_active = max(self.peak_active, len(slots))
         self.now += 1.0
         toks_np = np.asarray(toks)
-        for slot in slots:
-            req = self.active[slot]
-            if req.replay:
-                # replaying a preemption: force the recorded token (the
-                # greedy resample equals it; this also pins temperature
-                # sampling to the original stream)
-                tok = req.replay.pop(0)
-            else:
-                tok = int(toks_np[slot])
-            self._append_token(req, tok, wall)
-            self.last_tok[slot] = tok
-            reason = self.engine._finished(req, tok)
-            if reason is not None:
-                del self.active[slot]
-                self.cm.free(slot)
-                req.finish(self.now, reason)
+        self.tel.count("d2h_bytes", int(toks_np.nbytes))
+        t_commit = time.perf_counter()
+        with self.tel.span("commit", n_slots=len(slots)):
+            for slot in slots:
+                req = self.active[slot]
+                if req.replay:
+                    # replaying a preemption: force the recorded token (the
+                    # greedy resample equals it; this also pins temperature
+                    # sampling to the original stream)
+                    tok = req.replay.pop(0)
+                else:
+                    tok = int(toks_np[slot])
+                self._append_token(req, tok, wall)
+                self.last_tok[slot] = tok
+                reason = self.engine._finished(req, tok)
+                if reason is not None:
+                    del self.active[slot]
+                    self.cm.free(slot)
+                    req.finish(self.now, reason)
+        commit_s = time.perf_counter() - t_commit
+        h2d, d2h = self._byte_deltas()
+        self._emit("decode", step=int(self.sched.n_decode_steps),
+                   wall_s=time.perf_counter() - t_start,
+                   phases={"prepare_s": float(prepare_s),
+                           "dispatch_s": dispatch_s,
+                           "commit_s": commit_s},
+                   active_slots=int(len(slots)), n_slots=int(self.n_slots),
+                   occupancy=occupancy, divergence=divergence,
+                   committed_tokens=int(len(slots)),
+                   h2d_bytes=h2d, d2h_bytes=d2h,
+                   **self._pool_gauges())
 
     def decode_once_spec(self):
         """One speculative step: draft up to K tokens per slot, verify all
@@ -451,25 +585,31 @@ class ServeLoop:
         there is pure waste), and the verify batch rides one fixed
         (n_slots, K+1) shape — slots with no usable draft simply commit
         their single greedy token, exactly like a classic step."""
+        t_start = time.perf_counter()
         K = self.serve_cfg.num_draft_tokens
         slots = list(self.active.keys())
         caps = {s: max(min(K, self.active[s].max_new_tokens
                            - len(self.active[s].tokens) - 1), 0)
                 for s in slots}
-        if any(caps.values()):
-            drafts = self.drafter.propose_all(
-                {s: self.active[s] for s in slots}, caps)
-        else:
-            # every slot is within one token of its budget: the step
-            # degenerates to a classic decode — don't burn drafter work
-            # on proposals that would be truncated to empty
-            drafts = {}
+        t_draft = time.perf_counter()
+        with self.tel.span("draft", n_slots=len(slots)):
+            if any(caps.values()):
+                drafts = self.drafter.propose_all(
+                    {s: self.active[s] for s in slots}, caps)
+            else:
+                # every slot is within one token of its budget: the step
+                # degenerates to a classic decode — don't burn drafter work
+                # on proposals that would be truncated to empty
+                drafts = {}
+        draft_s = time.perf_counter() - t_draft
         drafts = {s: np.asarray(drafts.get(s, ()), np.int32)[:caps[s]]
                   for s in slots}
         # the paged store needs writable blocks over each slot's full
         # append span; preemption inside may shrink the slot set
+        t_prep = time.perf_counter()
         slots = self.writable_slots(
             {s: len(drafts[s]) + 1 for s in slots})
+        prepare_s = time.perf_counter() - t_prep
         if not slots:
             return
         toks = np.zeros((self.n_slots, K + 1), np.int32)
@@ -481,51 +621,66 @@ class ServeLoop:
                 "cache_len": self.cm.cache_len_vector()}
         if self.paged:
             step["block_tables"] = self.cm.block_tables_device()
+        self.tel.count("h2d_bytes", int(step["tokens"].nbytes)
+                       + int(step["cache_len"].nbytes))
         t0 = time.perf_counter()
-        greedy, new_cache = self._verify_fn(self.cm.cache, step)
-        greedy.block_until_ready()
+        with self.tel.span("verify", n_slots=len(slots)):
+            greedy, new_cache = self._verify_fn(self.cm.cache, step)
+            greedy.block_until_ready()
         wall = time.perf_counter()
-        self.decode_s += wall - t0
+        dispatch_s = wall - t0
+        self.decode_s += dispatch_s
         self.cm.update(new_cache)
         greedy_np = np.asarray(greedy)      # (n_slots, K+1) argmax stream
+        self.tel.count("d2h_bytes", int(greedy_np.nbytes))
+        drafted0, accepted0 = self.n_drafted, self.n_accepted
         commits: Dict[int, int] = {}
         finished: Dict[int, str] = {}
         n_committed = 0
-        for slot in slots:
-            req = self.active[slot]
-            d = drafts[slot]
-            # greedy accept: drafts match the target's argmax stream up to
-            # the first miss; the miss position's argmax is the bonus token
-            m = 1
-            while m <= len(d) and greedy_np[slot, m - 1] == d[m - 1]:
-                m += 1
-            self.n_drafted += len(d)
-            self.n_accepted += m - 1
-            appended = 0
-            for j in range(m):
-                if req.replay:
-                    # replay equals the greedy stream (token identity holds
-                    # across preemption under speculation too)
-                    tok = req.replay.pop(0)
-                else:
-                    tok = int(greedy_np[slot, j])
-                self._append_token(req, tok, wall)
-                self.last_tok[slot] = tok
-                appended += 1
-                reason = self.engine._finished(req, tok)
-                if reason is not None:
-                    finished[slot] = reason
-                    break
-            commits[slot] = appended
-            n_committed += appended
+        t_commit = time.perf_counter()
+        with self.tel.span("commit", n_slots=len(slots)):
+            for slot in slots:
+                req = self.active[slot]
+                d = drafts[slot]
+                # greedy accept: drafts match the target's argmax stream up
+                # to the first miss; the miss position's argmax is the
+                # bonus token
+                m = 1
+                while m <= len(d) and greedy_np[slot, m - 1] == d[m - 1]:
+                    m += 1
+                self.n_drafted += len(d)
+                self.n_accepted += m - 1
+                appended = 0
+                for j in range(m):
+                    if req.replay:
+                        # replay equals the greedy stream (token identity
+                        # holds across preemption under speculation too)
+                        tok = req.replay.pop(0)
+                    else:
+                        tok = int(greedy_np[slot, j])
+                    self._append_token(req, tok, wall)
+                    self.last_tok[slot] = tok
+                    appended += 1
+                    reason = self.engine._finished(req, tok)
+                    if reason is not None:
+                        finished[slot] = reason
+                        break
+                commits[slot] = appended
+                n_committed += appended
+        commit_s = time.perf_counter() - t_commit
         # commit the positions, then roll the paged store's speculative
         # tail blocks back BEFORE any slot is freed (free() releases whole
         # tables; release_tail only ever touches private draft-span blocks)
         self.cm.advance(slots, [commits[s] for s in slots])
+        t_rb = time.perf_counter()
         if self.paged:
-            for slot in slots:
-                self.cm.release_tail(slot)
+            with self.tel.span("rollback", n_slots=len(slots)):
+                for slot in slots:
+                    self.cm.release_tail(slot)
+        rollback_s = time.perf_counter() - t_rb
         self.sched.observe_decode_step(n_committed=n_committed)
+        occupancy = self.cm.n_active / self.cm.n_slots
+        divergence = int(self.cm.divergence())
         self.peak_active = max(self.peak_active, len(slots))
         self.now += 1.0
         for slot in slots:
@@ -537,32 +692,63 @@ class ServeLoop:
             else:
                 self.drafter.observe_commit(slot,
                                             int(self.cm.lengths[slot]))
+        h2d, d2h = self._byte_deltas()
+        self._emit("verify", step=int(self.sched.n_decode_steps),
+                   wall_s=time.perf_counter() - t_start,
+                   phases={"draft_s": draft_s, "prepare_s": prepare_s,
+                           "dispatch_s": dispatch_s, "commit_s": commit_s,
+                           "rollback_s": rollback_s},
+                   active_slots=int(len(slots)), n_slots=int(self.n_slots),
+                   occupancy=occupancy, divergence=divergence,
+                   committed_tokens=int(n_committed),
+                   drafted_tokens=int(self.n_drafted - drafted0),
+                   accepted_tokens=int(self.n_accepted - accepted0),
+                   h2d_bytes=h2d, d2h_bytes=d2h,
+                   **self._pool_gauges())
 
     def run(self) -> ServeReport:
-        self.submit_arrivals()
-        while self.arrivals or len(self.rq) or self.active:
-            for group in self.sched.plan_admissions():
-                self.admit(group)
-            if not self.active:
-                if not self.arrivals and not len(self.rq):
-                    break
-                if not len(self.rq) and self.arrivals:
-                    # idle: jump the virtual clock to the next arrival
-                    self.now = max(self.now, self.arrivals[0].arrival_time)
+        self.tel.start_profile()
+        try:
+            with self.tel.span("serve"):
+                self.submit_arrivals()
+                while self.arrivals or len(self.rq) or self.active:
+                    # one plan_admissions() batch is ONE admission sync;
+                    # only its first group opens the sync in the stream
+                    for gi, group in enumerate(self.sched.plan_admissions()):
+                        self.admit(group, new_sync=(gi == 0))
+                    if not self.active:
+                        if not self.arrivals and not len(self.rq):
+                            break
+                        if not len(self.rq) and self.arrivals:
+                            # idle: jump the virtual clock to the next
+                            # arrival
+                            self.now = max(self.now,
+                                           self.arrivals[0].arrival_time)
+                            self.submit_arrivals()
+                        continue
+                    if self.drafter is not None:
+                        self.decode_once_spec()
+                    else:
+                        t_prep = time.perf_counter()
+                        slots = self.writable_slots()
+                        prepare_s = time.perf_counter() - t_prep
+                        if not slots:
+                            continue
+                        self.decode_once(slots, prepare_s=prepare_s)
                     self.submit_arrivals()
-                continue
-            if self.drafter is not None:
-                self.decode_once_spec()
-            else:
-                slots = self.writable_slots()
-                if not slots:
-                    continue
-                self.decode_once(slots)
-            self.submit_arrivals()
-        return self.report()
+            return self.report()
+        finally:
+            self.tel.stop_profile()
+            self.tel.flush()
 
     def report(self) -> ServeReport:
-        cm, paged = self.cm, self.paged
+        """Build the report as a PURE REDUCTION over the step-record stream
+        (``telemetry.reduce_stream``): every aggregate counter is folded
+        from the same records the metrics sink saw, so the report and the
+        JSONL file can never disagree (pinned byte-equal by
+        ``tests/test_telemetry.py``).  Only the per-request results and
+        wall-clock latency percentiles come from the Request objects — they
+        are per-request artifacts, not step aggregates."""
 
         def ttft_wall(r: Request) -> Optional[float]:
             if not r.wall_token_times or r.wall_submitted_at is None:
@@ -582,39 +768,36 @@ class ServeLoop:
             )
             for r in sorted(self.requests, key=lambda r: r.request_id)
         ]
-        total_new = sum(len(r.tokens) for r in results
-                        if r.finish_reason != "rejected")
         itl = [b - a for r in self.requests
                for a, b in zip(r.wall_token_times, r.wall_token_times[1:])]
         mesh = self.executor.mesh
+        s = reduce_stream(self.stream)
         return ServeReport(
             results=results,
-            prefill_s=self.prefill_s,
-            decode_s=self.decode_s,
-            steps=self.sched.n_decode_steps,
-            n_syncs=self.sched.n_syncs,
-            n_rejected=self.rq.n_rejected,
-            total_new_tokens=total_new,
-            slot_utilization=self.sched.slot_utilization,
-            max_divergence=self.sched.max_divergence,
+            prefill_s=s.prefill_s,
+            decode_s=s.decode_s,
+            steps=s.steps,
+            n_syncs=s.n_syncs,
+            n_rejected=s.n_rejected,
+            total_new_tokens=s.total_new_tokens,
+            slot_utilization=s.slot_utilization,
+            max_divergence=s.max_divergence,
             deployment=self.engine.deployment_estimate(),
             cache_backend=self.serve_cfg.cache_backend,
-            n_preemptions=self.n_preemptions,
-            prefix_hit_blocks=(cm.pool.n_prefix_hits if paged else 0),
-            cow_blocks=(cm.pool.n_cow if paged else 0),
-            # the pool's own high-water mark: catches allocation peaks hit
-            # during prefill inserts, not just post-decode-step samples
-            peak_blocks_in_use=(cm.pool.peak_live if paged else 0),
-            peak_active_slots=self.peak_active,
+            n_preemptions=s.n_preemptions,
+            prefix_hit_blocks=s.prefix_hit_blocks,
+            cow_blocks=s.cow_blocks,
+            peak_blocks_in_use=s.peak_blocks_in_use,
+            peak_active_slots=s.peak_active_slots,
             mesh_shape=(None if mesh is None
                         else tuple(int(d) for d in mesh.devices.shape)),
             draft=(self.drafter.name if self.drafter is not None
                    else "none"),
-            drafted_tokens=self.n_drafted,
-            accepted_tokens=self.n_accepted,
-            committed_tokens_per_step=self.sched.committed_tokens_per_step,
-            ttft_wall=_percentiles([ttft_wall(r) for r in self.requests]),
-            itl_wall=_percentiles(itl),
+            drafted_tokens=s.drafted_tokens,
+            accepted_tokens=s.accepted_tokens,
+            committed_tokens_per_step=s.committed_tokens_per_step,
+            ttft_wall=percentiles([ttft_wall(r) for r in self.requests]),
+            itl_wall=percentiles(itl),
         )
 
 

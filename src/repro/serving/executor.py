@@ -68,12 +68,24 @@ class Executor:
 
     def __init__(self, cfg, params=None,
                  matmul_backend: Optional[str] = None):
+        from repro.serving import telemetry as _telemetry
         self.cfg = cfg
         self.matmul_backend = (getattr(cfg, "matmul_backend", "auto")
                                if matmul_backend is None else matmul_backend)
+        # observability handle: the serve loop attaches its own via
+        # ``set_telemetry`` so ``put`` transfers count against the run;
+        # default is the shared no-op handle (zero overhead)
+        self.telemetry = _telemetry.NULL_TELEMETRY
         self._params = (self._place_params(params)
                         if params is not None else None)
         self._jits: Dict[tuple, object] = {}
+
+    def set_telemetry(self, telemetry) -> None:
+        """Attach a serve loop's telemetry handle (byte counters / spans);
+        None reverts to the shared no-op handle."""
+        from repro.serving import telemetry as _telemetry
+        self.telemetry = (telemetry if telemetry is not None
+                          else _telemetry.NULL_TELEMETRY)
 
     # -- placement hooks (single-device defaults) ---------------------------
 
@@ -89,8 +101,11 @@ class Executor:
         return cache
 
     def put(self, x):
-        """Host array -> device array (replicated under a mesh)."""
-        return jnp.asarray(x)
+        """Host array -> device array (replicated under a mesh); the bytes
+        moved count against the attached telemetry handle."""
+        x = jnp.asarray(x)
+        self.telemetry.count("h2d_bytes", getattr(x, "nbytes", 0))
+        return x
 
     def _trace_scopes(self):
         """Context managers entered INSIDE the traced function — they set
@@ -396,6 +411,7 @@ class MeshExecutor(Executor):
 
     def put(self, x):
         x = jnp.asarray(x)
+        self.telemetry.count("h2d_bytes", getattr(x, "nbytes", 0))
         return jax.device_put(
             x, NamedSharding(self._mesh, P(*([None] * x.ndim))))
 

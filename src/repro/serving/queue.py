@@ -118,12 +118,19 @@ class Request:
 
 
 class RequestQueue:
-    """Bounded FIFO of WAITING requests (admission control at submit)."""
+    """Bounded FIFO of WAITING requests (admission control at submit).
 
-    def __init__(self, max_waiting: Optional[int] = None):
+    ``on_reject`` is an optional callback invoked with each rejected
+    request — the serve loop uses it to emit a ``reject`` record into the
+    telemetry stream from the ONE central rejection path (both the
+    capacity rejection in ``submit`` and the engine's explicit
+    cannot-ever-fit rejection funnel through :meth:`reject`)."""
+
+    def __init__(self, max_waiting: Optional[int] = None, on_reject=None):
         if max_waiting is not None and max_waiting < 1:
             raise ValueError("max_waiting must be >= 1 (or None)")
         self.max_waiting = max_waiting
+        self.on_reject = on_reject
         self._waiting: List[Request] = []
         self.n_rejected = 0
 
@@ -147,6 +154,8 @@ class RequestQueue:
         """Mark a request rejected (admission control) and count it."""
         self.n_rejected += 1
         request.finish(now, "rejected")
+        if self.on_reject is not None:
+            self.on_reject(request)
 
     def submit(self, request: Request, now: float = 0.0) -> bool:
         """Enqueue; returns False (and marks the request rejected) when the

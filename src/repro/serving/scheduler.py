@@ -69,9 +69,11 @@ def prefill_bucket_len(prompt_len: int, cache_T: Optional[int] = None) -> int:
 
 class QuasiSyncScheduler:
     def __init__(self, queue: RequestQueue, cache_mgr: BaseCacheManager,
-                 cfg: SchedulerConfig = None):
+                 cfg: SchedulerConfig = None, *, telemetry=None):
+        from repro.serving.telemetry import NULL_TELEMETRY
         self.queue = queue
         self.cache_mgr = cache_mgr
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
         self.cfg = cfg if cfg is not None else SchedulerConfig()
         if self.cfg.prefill_bucketing not in (None, "exact", "pow2"):
             raise ValueError(
@@ -115,6 +117,8 @@ class QuasiSyncScheduler:
             return []
         self.pending_wait = 0
         self.n_syncs += 1
+        self.telemetry.instant("admission_sync", admitted=admissible,
+                               n_free_slots=self.cache_mgr.n_free)
         admits = self.queue.pop(admissible)
         groups: Dict[int, List[Request]] = {}
         for req in admits:

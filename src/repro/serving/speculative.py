@@ -148,7 +148,7 @@ class ModelDrafter(Drafter):
     name = "model"
 
     def __init__(self, draft_cfg, executor, n_slots: int, cache_T: int,
-                 num_draft_tokens: int, target_cfg=None):
+                 num_draft_tokens: int, target_cfg=None, telemetry=None):
         if target_cfg is not None:
             if draft_cfg.family != target_cfg.family:
                 raise ValueError(
@@ -160,8 +160,10 @@ class ModelDrafter(Drafter):
                     f"draft vocab {draft_cfg.vocab_size} != target vocab "
                     f"{target_cfg.vocab_size}")
         from repro.serving.cache_manager import CacheManager
+        from repro.serving.telemetry import NULL_TELEMETRY
         self.cfg = draft_cfg
         self.executor = executor
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
         self.k = int(num_draft_tokens)
         # the draft cache must absorb the full speculative overhang
         # (cache_len transiently reaches committed + K + 1 during a
@@ -186,9 +188,12 @@ class ModelDrafter(Drafter):
         pad_to = prefill_bucket_len(L, self.cm.cache_T)
         toks = np.zeros((1, pad_to), np.int32)
         toks[0, :L] = np.asarray(req.prompt, np.int32)
-        _, cache = self.executor.prefill({"tokens": toks}, self.cm.cache_T,
-                                         prompt_lens=np.asarray([L]))
-        self.cm.insert(slot, cache, L)
+        with self.telemetry.span("draft_prefill", slot=slot, pad_to=pad_to):
+            self.telemetry.count("h2d_bytes", toks.nbytes)
+            _, cache = self.executor.prefill({"tokens": toks},
+                                             self.cm.cache_T,
+                                             prompt_lens=np.asarray([L]))
+            self.cm.insert(slot, cache, L)
 
     def on_free(self, slot: int):
         if self.cm._occupied[slot]:
@@ -210,27 +215,34 @@ class ModelDrafter(Drafter):
         for s, req in requests.items():
             feed[s] = req.tokens[-1]        # last committed, not yet fed
         rows = []
-        for _ in range(self.k + 1):
-            step = {"tokens": jnp.asarray(feed[:, None]),
-                    "cache_len": self.cm.cache_len_vector()}
-            toks, new_cache = self._decode(self.cm.cache, step,
-                                           jnp.asarray(self._zero_keys),
-                                           jnp.asarray(self._zero_counts))
-            self.cm.update(new_cache)
-            self.cm.advance(slots)
-            feed = np.asarray(toks, np.int32).copy()
-            rows.append(feed)
+        with self.telemetry.span("draft_propose", n_slots=len(slots),
+                                 k=self.k):
+            for _ in range(self.k + 1):
+                step = {"tokens": jnp.asarray(feed[:, None]),
+                        "cache_len": self.cm.cache_len_vector()}
+                self.telemetry.count("h2d_bytes",
+                                     int(step["tokens"].nbytes)
+                                     + int(step["cache_len"].nbytes))
+                toks, new_cache = self._decode(self.cm.cache, step,
+                                               jnp.asarray(self._zero_keys),
+                                               jnp.asarray(self._zero_counts))
+                self.cm.update(new_cache)
+                self.cm.advance(slots)
+                feed = np.asarray(toks, np.int32).copy()
+                self.telemetry.count("d2h_bytes", feed.nbytes)
+                rows.append(feed)
         grid = np.stack(rows, axis=1)       # (n_slots, K+1) greedy chain
         return {s: grid[s, :min(self.k, caps.get(s, self.k))].astype(np.int32)
                 for s in slots}
 
 
-def make_drafter(serve_cfg, engine, *, n_slots: int,
-                 cache_T: int) -> Optional[Drafter]:
+def make_drafter(serve_cfg, engine, *, n_slots: int, cache_T: int,
+                 telemetry=None) -> Optional[Drafter]:
     """Build the drafter selected by ``ServeConfig.draft`` for one serve
     loop (``None`` for ``draft='none'``).  The model drafter's executor is
     created by the engine (``ServingEngine.draft_executor``) so its traces
-    ride the same mesh/backend scoping as the target's."""
+    ride the same mesh/backend scoping as the target's; ``telemetry`` (the
+    loop's handle) gives the model drafter spans + byte counters."""
     draft = getattr(serve_cfg, "draft", "none") or "none"
     if draft == "none":
         return None
@@ -257,6 +269,6 @@ def make_drafter(serve_cfg, engine, *, n_slots: int,
                 "draft='model' needs a draft model: construct the engine "
                 "with draft_cfg=<small ArchConfig> and draft_params")
         return ModelDrafter(engine.draft_cfg, executor, n_slots, cache_T,
-                            k, target_cfg=engine.cfg)
+                            k, target_cfg=engine.cfg, telemetry=telemetry)
     raise ValueError(f"unknown draft {draft!r}; expected "
                      f"'none', 'prompt_lookup' or 'model'")

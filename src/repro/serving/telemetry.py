@@ -1,0 +1,375 @@
+"""Serving observability: per-step metrics stream, span tracing, reduction.
+
+The serving stack's correctness story is token identity; its *performance*
+story is the paper's quasi-synchronous occupancy claim — MAC/slot
+utilization under fluctuating per-op work.  Until this module, that claim
+was only visible as end-of-run aggregates (``ServeReport``); nobody could
+see where one step's time went or whether a commit regressed it.  Three
+pieces fix that:
+
+  * :class:`MetricsLogger` — a dependency-free JSONL sink: ONE
+    schema-versioned record per prefill / decode / verify step (wall time,
+    per-phase durations, committed tokens, acceptance, active slots,
+    occupancy/divergence, block-pool gauges, host<->device bytes) plus
+    ``preempt`` / ``reject`` lifecycle records.  The stream is the raw
+    material for any downstream dashboard — and for the CI regression gate
+    (``benchmarks/compare.py``).
+  * :class:`Tracer` — Chrome-trace-event JSON ("X" complete events) around
+    admission, prefill, draft, verify, commit, preemption, and block-pool
+    operations.  The file loads directly in https://ui.perfetto.dev (or
+    ``chrome://tracing``).  With ``annotate_device=True`` every span also
+    enters a ``jax.profiler.TraceAnnotation`` so host spans line up with
+    device traces captured via ``profile_dir``.
+  * :func:`reduce_stream` — the PURE reduction from step records to the
+    ``ServeReport`` aggregates.  ``ServeLoop.report()`` calls exactly this
+    over exactly the records it emitted, so the aggregate counters and the
+    metrics stream can never disagree (pinned byte-equal by
+    ``tests/test_telemetry.py``).
+
+The :class:`Telemetry` handle bundles the sinks and rides
+``ServeConfig.telemetry`` through the engine into the scheduler, cache
+managers, block pool, drafters, and executors.  Disabled (the default —
+no paths set) it is a strict no-op: spans are a shared null context
+manager, ``emit`` writes nothing, and serve() outputs are token-identical
+to a run without the handle.  The in-memory step stream lives in the
+``ServeLoop`` (not here), so a ``Telemetry`` object can be shared across
+serve calls; each run's records append to the same JSONL file.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+SCHEMA_VERSION = 1
+
+#: Required keys per record kind — the golden schema pinned by
+#: ``tests/test_telemetry.py``.  Extending a record is fine (consumers
+#: must ignore unknown keys); removing or renaming one of these is a
+#: breaking change and must bump :data:`SCHEMA_VERSION`.
+_STEP_KEYS = {"schema", "kind", "ts_s", "step", "wall_s", "phases",
+              "active_slots", "committed_tokens", "h2d_bytes", "d2h_bytes",
+              "blocks_in_use", "prefix_hit_blocks", "cow_blocks",
+              "peak_blocks_in_use"}
+STEP_SCHEMA: Dict[str, set] = {
+    "run": {"schema", "kind", "ts_s", "cache_backend", "n_slots", "draft",
+            "temperature", "mesh_shape", "block_size"},
+    "prefill": _STEP_KEYS | {"group_size", "pad_to", "prompt_tokens",
+                             "new_sync"},
+    "decode": _STEP_KEYS | {"n_slots", "occupancy", "divergence"},
+    "verify": _STEP_KEYS | {"n_slots", "occupancy", "divergence",
+                            "drafted_tokens", "accepted_tokens"},
+    "preempt": {"schema", "kind", "ts_s", "step", "slot", "request_id",
+                "discarded_tokens"},
+    "reject": {"schema", "kind", "ts_s", "step", "request_id"},
+}
+
+
+def percentiles(samples, qs=(50, 90, 99)) -> Optional[Dict[str, float]]:
+    """{p50, p90, p99} (or custom ``qs``) of a sample set, or None when no
+    sample exists.  THE percentile rule for the whole repo: the engine's
+    ttft/itl wall-clock report fields and every benchmark summary go
+    through this one helper instead of hand-rolling the math."""
+    xs = np.asarray([s for s in samples if s is not None], np.float64)
+    if xs.size == 0:
+        return None
+    return {f"p{q}": float(np.percentile(xs, q)) for q in qs}
+
+
+class _NullSpan:
+    """Shared do-nothing context manager: the disabled-telemetry span.
+    Identity-pinned by tests — the hot loop must not allocate per span
+    when tracing is off."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+NULL_SPAN = _NullSpan()
+
+
+class MetricsLogger:
+    """Append-only JSONL sink: one line per record, flushed per write so a
+    crashed run still leaves a readable stream.  Dependency-free by
+    design (the ROADMAP's 'wandblog in spirit, local JSONL sink')."""
+
+    def __init__(self, path: str):
+        self.path = path
+        d = os.path.dirname(os.path.abspath(path))
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(path, "a", encoding="utf-8")
+
+    def log(self, record: dict):
+        self._f.write(json.dumps(record, default=float) + "\n")
+        self._f.flush()
+
+    def close(self):
+        if not self._f.closed:
+            self._f.close()
+
+
+class Tracer:
+    """Chrome-trace-event recorder (complete "X" events, µs timestamps).
+
+    Spans nest by construction: events are emitted on one host thread with
+    monotonic ``time.perf_counter`` stamps, so a child span is always fully
+    contained in its parent — the property ``tests/test_telemetry.py``
+    checks on the written file.  ``write()`` dumps the standard
+    ``{"traceEvents": [...]}`` wrapper that perfetto / chrome://tracing
+    load directly.
+    """
+
+    def __init__(self, *, annotate_device: bool = False):
+        self.events: List[dict] = []
+        self.annotate_device = annotate_device
+        self._t0 = time.perf_counter()
+        self._pid = os.getpid()
+        self.events.append({
+            "name": "process_name", "ph": "M", "pid": self._pid, "tid": 0,
+            "args": {"name": "repro.serving"},
+        })
+
+    def _now_us(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e6
+
+    @contextlib.contextmanager
+    def span(self, name: str, cat: str = "serving", **args):
+        ann = None
+        if self.annotate_device:
+            try:
+                import jax
+                ann = jax.profiler.TraceAnnotation(name)
+                ann.__enter__()
+            except Exception:   # profiler unavailable: host span still works
+                ann = None
+        t0 = self._now_us()
+        try:
+            yield self
+        finally:
+            t1 = self._now_us()
+            if ann is not None:
+                ann.__exit__(None, None, None)
+            self.events.append({
+                "name": name, "cat": cat, "ph": "X", "ts": t0,
+                "dur": t1 - t0, "pid": self._pid, "tid": 0,
+                "args": {k: _jsonable(v) for k, v in args.items()},
+            })
+
+    def instant(self, name: str, cat: str = "serving", **args):
+        self.events.append({
+            "name": name, "cat": cat, "ph": "i", "s": "t",
+            "ts": self._now_us(), "pid": self._pid, "tid": 0,
+            "args": {k: _jsonable(v) for k, v in args.items()},
+        })
+
+    def write(self, path: str):
+        d = os.path.dirname(os.path.abspath(path))
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump({"traceEvents": self.events,
+                       "displayTimeUnit": "ms"}, f, default=float)
+
+
+def _jsonable(v):
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    return v
+
+
+class Telemetry:
+    """The serving observability handle: metrics + trace + profiler sinks.
+
+    Construct with no arguments for the disabled no-op handle (what the
+    engine builds when ``ServeConfig.telemetry`` is None).  ``span`` /
+    ``instant`` / ``emit`` are safe to call unconditionally — disabled
+    they cost a dict lookup, not an allocation.  ``counters`` tracks
+    cumulative host<->device byte movement (the loop snapshots deltas per
+    step record); counting stays on even when sinks are off so the step
+    stream is identical either way.
+    """
+
+    def __init__(self, metrics_path: Optional[str] = None,
+                 trace_path: Optional[str] = None, *,
+                 profile_dir: Optional[str] = None,
+                 annotate_device: bool = False):
+        self.metrics = MetricsLogger(metrics_path) if metrics_path else None
+        self.trace_path = trace_path
+        self.tracer = (Tracer(annotate_device=annotate_device)
+                       if (trace_path or annotate_device) else None)
+        self.profile_dir = profile_dir
+        self.counters: Dict[str, int] = {"h2d_bytes": 0, "d2h_bytes": 0}
+        self._profiling = False
+
+    @property
+    def enabled(self) -> bool:
+        return (self.metrics is not None or self.tracer is not None
+                or self.profile_dir is not None)
+
+    # -- sinks ---------------------------------------------------------------
+
+    def span(self, name: str, **args):
+        if self.tracer is None:
+            return NULL_SPAN
+        return self.tracer.span(name, **args)
+
+    def instant(self, name: str, **args):
+        if self.tracer is not None:
+            self.tracer.instant(name, **args)
+
+    def emit(self, record: dict):
+        if self.metrics is not None:
+            self.metrics.log(record)
+
+    def count(self, key: str, n) -> None:
+        self.counters[key] = self.counters.get(key, 0) + int(n)
+
+    # -- device profiler hooks ----------------------------------------------
+
+    def start_profile(self):
+        """Start a ``jax.profiler`` trace into ``profile_dir`` (no-op when
+        unset or the profiler is unavailable)."""
+        if self.profile_dir is None or self._profiling:
+            return
+        try:
+            import jax
+            jax.profiler.start_trace(self.profile_dir)
+            self._profiling = True
+        except Exception:
+            self._profiling = False
+
+    def stop_profile(self):
+        if not self._profiling:
+            return
+        try:
+            import jax
+            jax.profiler.stop_trace()
+        except Exception:
+            pass
+        self._profiling = False
+
+    def flush(self):
+        if self.tracer is not None and self.trace_path:
+            self.tracer.write(self.trace_path)
+
+    def close(self):
+        self.stop_profile()
+        self.flush()
+        if self.metrics is not None:
+            self.metrics.close()
+
+
+#: Shared disabled handle for components constructed without one (direct
+#: cache-manager / executor construction in tests).  Its counters are a
+#: write-only sink nothing reads.
+NULL_TELEMETRY = Telemetry()
+
+
+# ---------------------------------------------------------------------------
+# Stream reduction: step records -> ServeReport aggregates
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StreamSummary:
+    """Aggregates of one serve call's step-record stream.  Every field maps
+    1:1 onto a ``ServeReport`` counter; ``ServeLoop.report()`` is a pure
+    function of this object plus the per-request results."""
+
+    prefill_s: float = 0.0            # sum of prefill dispatch walls
+    decode_s: float = 0.0             # sum of decode/verify dispatch walls
+    steps: int = 0                    # decode + verify records
+    n_syncs: int = 0                  # prefill records opening a sync
+    total_new_tokens: int = 0         # emitted - discarded-at-preemption
+    committed_decode_tokens: int = 0  # decode/verify commits only
+    slot_utilization: float = 0.0
+    committed_tokens_per_step: float = 0.0
+    max_divergence: int = 0
+    n_preemptions: int = 0
+    n_rejected: int = 0
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+    peak_active_slots: int = 0
+    prefix_hit_blocks: int = 0
+    cow_blocks: int = 0
+    peak_blocks_in_use: int = 0
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+
+
+def reduce_stream(records) -> StreamSummary:
+    """Fold a step-record stream (dicts, in emission order) into the
+    ``ServeReport`` aggregates.  Accepts both live records and records
+    parsed back from the JSONL file — the float math is order-preserving
+    sums of the recorded values, so the two reductions are byte-equal
+    (JSON round-trips binary64 exactly)."""
+    s = StreamSummary()
+    occupancy_sum = 0.0
+    emitted = 0
+    discarded = 0
+    for r in records:
+        kind = r.get("kind")
+        if kind == "prefill":
+            s.prefill_s += r["phases"]["dispatch_s"]
+            if r["new_sync"]:
+                s.n_syncs += 1
+            emitted += r["committed_tokens"]
+        elif kind in ("decode", "verify"):
+            s.steps += 1
+            s.decode_s += r["phases"]["dispatch_s"]
+            occupancy_sum += r["occupancy"]
+            s.committed_decode_tokens += r["committed_tokens"]
+            emitted += r["committed_tokens"]
+            s.max_divergence = max(s.max_divergence, int(r["divergence"]))
+            s.peak_active_slots = max(s.peak_active_slots,
+                                      int(r["active_slots"]))
+            if kind == "verify":
+                s.drafted_tokens += int(r["drafted_tokens"])
+                s.accepted_tokens += int(r["accepted_tokens"])
+        elif kind == "preempt":
+            s.n_preemptions += 1
+            discarded += int(r["discarded_tokens"])
+            continue
+        elif kind == "reject":
+            s.n_rejected += 1
+            continue
+        else:
+            continue
+        # pool gauges are cumulative snapshots; max == final (monotone)
+        s.prefix_hit_blocks = max(s.prefix_hit_blocks,
+                                  int(r["prefix_hit_blocks"]))
+        s.cow_blocks = max(s.cow_blocks, int(r["cow_blocks"]))
+        s.peak_blocks_in_use = max(s.peak_blocks_in_use,
+                                   int(r["peak_blocks_in_use"]))
+        s.h2d_bytes += int(r["h2d_bytes"])
+        s.d2h_bytes += int(r["d2h_bytes"])
+    s.total_new_tokens = emitted - discarded
+    if s.steps:
+        s.slot_utilization = occupancy_sum / s.steps
+        s.committed_tokens_per_step = s.committed_decode_tokens / s.steps
+    return s
+
+
+def read_jsonl(path: str) -> List[dict]:
+    """Parse a metrics JSONL file back into the record stream."""
+    out = []
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

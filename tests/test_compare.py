@@ -1,0 +1,161 @@
+"""benchmarks/compare.py — the CI regression gate — and the artifact
+provenance stamping in benchmarks/common.py."""
+
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import common
+from benchmarks.compare import (collect_metrics, compare_payloads,
+                                fingerprint, main)
+
+META = {"schema": 1, "git_sha": "abc", "hostname": "ci-box",
+        "jax_version": "0.4.0", "device_kind": "cpu", "device_count": 1,
+        "timestamp_utc": "2026-01-01T00:00:00Z"}
+
+
+def _artifact(per_step_ms=2.0, tokens_per_s=500.0, meta=META):
+    return {
+        "continuous_per_step_ms": per_step_ms,
+        "continuous_tokens_per_s": tokens_per_s,
+        "cells": {"model_slab": {"per_step_ms": per_step_ms,
+                                 "tokens_per_s": tokens_per_s}},
+        "n_requests": 8,                 # not a gated metric
+        "_meta": dict(meta),
+    }
+
+
+def _write(path, payload):
+    os.makedirs(os.path.dirname(str(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    return str(path)
+
+
+class TestCollectMetrics:
+    def test_flattens_suffix_matched_leaves_at_any_depth(self):
+        m = collect_metrics(_artifact())
+        assert m == {
+            "continuous_per_step_ms": 2.0,
+            "continuous_tokens_per_s": 500.0,
+            "cells.model_slab.per_step_ms": 2.0,
+            "cells.model_slab.tokens_per_s": 500.0,
+        }
+
+    def test_meta_and_non_metrics_excluded(self):
+        m = collect_metrics({"_meta": {"x_per_step_ms": 9},
+                             "flag_tokens_per_s": True,
+                             "n_requests": 8})
+        assert m == {}                   # bool and _meta never gate
+
+
+class TestComparePayloads:
+    def test_twenty_percent_latency_regression_fails(self):
+        regs, _ = compare_payloads(_artifact(per_step_ms=2.0),
+                                   _artifact(per_step_ms=2.4), 0.15)
+        assert len(regs) == 2            # top-level + nested cell
+        assert all("REGRESSION" in r for r in regs)
+
+    def test_throughput_drop_fails_improvement_passes(self):
+        regs, _ = compare_payloads(_artifact(tokens_per_s=500.0),
+                                   _artifact(tokens_per_s=390.0), 0.15)
+        assert regs
+        regs, _ = compare_payloads(_artifact(per_step_ms=2.0),
+                                   _artifact(per_step_ms=1.0), 0.15)
+        assert regs == []                # faster is never a regression
+
+    def test_identical_passes(self):
+        regs, notes = compare_payloads(_artifact(), _artifact(), 0.15)
+        assert regs == [] and notes
+
+    def test_fingerprint_mismatch_skips(self):
+        other = dict(META, device_kind="TPU v4")
+        regs, notes = compare_payloads(_artifact(per_step_ms=2.0),
+                                       _artifact(per_step_ms=99.0,
+                                                 meta=other), 0.15)
+        assert regs == []
+        assert any("SKIP" in n for n in notes)
+
+    def test_hostname_change_still_compares(self):
+        # ephemeral CI runners: new hostname per run, same machine class
+        other = dict(META, hostname="fv-az123", git_sha="def")
+        regs, _ = compare_payloads(_artifact(per_step_ms=2.0),
+                                   _artifact(per_step_ms=2.4, meta=other),
+                                   0.15)
+        assert regs
+
+    def test_missing_meta_skips(self):
+        prev = _artifact()
+        cur = _artifact(per_step_ms=99.0)
+        del cur["_meta"]
+        regs, notes = compare_payloads(prev, cur, 0.15)
+        assert regs == [] and any("SKIP" in n for n in notes)
+        assert fingerprint(cur) is None
+
+
+class TestMainExitCodes:
+    def test_regression_exits_1(self, tmp_path):
+        prev = _write(tmp_path / "prev" / "BENCH_x.json", _artifact(2.0))
+        cur = _write(tmp_path / "cur" / "BENCH_x.json", _artifact(2.4))
+        assert main([prev, cur]) == 1
+
+    def test_identical_exits_0(self, tmp_path):
+        prev = _write(tmp_path / "prev" / "BENCH_x.json", _artifact())
+        cur = _write(tmp_path / "cur" / "BENCH_x.json", _artifact())
+        assert main([prev, cur]) == 0
+
+    def test_missing_previous_skips_exit_0(self, tmp_path):
+        cur = _write(tmp_path / "cur" / "BENCH_x.json", _artifact())
+        assert main([str(tmp_path / "nope"), cur]) == 0
+
+    def test_missing_current_is_usage_error(self, tmp_path):
+        assert main([str(tmp_path / "a"), str(tmp_path / "b")]) == 2
+
+    def test_dir_mode_matches_by_filename(self, tmp_path):
+        _write(tmp_path / "prev" / "BENCH_a.json", _artifact(2.0))
+        _write(tmp_path / "cur" / "BENCH_a.json", _artifact(2.4))
+        _write(tmp_path / "cur" / "BENCH_new.json", _artifact())  # no prev
+        _write(tmp_path / "cur" / "notes.json", _artifact(9.0))   # unmatched
+        assert main([str(tmp_path / "prev"), str(tmp_path / "cur")]) == 1
+
+    def test_threshold_flag_loosens_gate(self, tmp_path):
+        prev = _write(tmp_path / "p" / "BENCH_x.json", _artifact(2.0))
+        cur = _write(tmp_path / "c" / "BENCH_x.json", _artifact(2.4))
+        assert main([prev, cur, "--threshold", "0.25"]) == 0
+
+
+class TestArtifactMeta:
+    def test_save_artifact_stamps_meta(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(common, "ARTIFACT_DIR", str(tmp_path))
+        path = common.save_artifact("BENCH_t", {"x_per_step_ms": 1.0})
+        with open(path) as f:
+            payload = json.load(f)
+        meta = payload["_meta"]
+        assert meta["schema"] == common.ARTIFACT_SCHEMA_VERSION
+        for key in ("git_sha", "hostname", "timestamp_utc", "jax_version",
+                    "device_kind", "device_count"):
+            assert key in meta
+        assert fingerprint(payload) is not None
+
+    def test_existing_meta_not_overwritten(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(common, "ARTIFACT_DIR", str(tmp_path))
+        payload = copy.deepcopy(_artifact())
+        path = common.save_artifact("BENCH_t2", payload)
+        with open(path) as f:
+            assert json.load(f)["_meta"]["hostname"] == "ci-box"
+
+    def test_two_stamped_artifacts_share_a_fingerprint(self, tmp_path,
+                                                       monkeypatch):
+        monkeypatch.setattr(common, "ARTIFACT_DIR", str(tmp_path))
+        a = common.save_artifact("BENCH_a", {"v_tokens_per_s": 1.0})
+        b = common.save_artifact("BENCH_b", {"v_tokens_per_s": 2.0})
+        with open(a) as f:
+            fa = fingerprint(json.load(f))
+        with open(b) as f:
+            fb = fingerprint(json.load(f))
+        assert fa == fb                  # same machine -> comparable

@@ -1,0 +1,287 @@
+"""Serving observability: golden JSONL schema, Chrome-trace validity,
+telemetry-on/off token identity, and the report-equals-stream-reduction
+invariant (ServeReport is a pure fold over the metrics records)."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs.base import get_arch
+from repro.models import api
+from repro.serving import (Request, SchedulerConfig, ServeConfig,
+                           ServingEngine, Telemetry, percentiles,
+                           read_jsonl, reduce_stream)
+from repro.serving.telemetry import (NULL_SPAN, NULL_TELEMETRY, SCHEMA_VERSION,
+                                     STEP_SCHEMA)
+
+jax.config.update("jax_default_matmul_precision", "float32")
+
+
+def _dense_cfg(**kw):
+    return get_arch("qwen2-1.5b").reduced().replace(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=128, head_dim=16, **kw)
+
+
+def _engine(cfg, backend="slab", max_new=8, block_size=4, draft="none",
+            telemetry=None, seed=0):
+    params = api.init(jax.random.PRNGKey(seed), cfg)
+    return ServingEngine(cfg, params, ServeConfig(
+        max_new_tokens=max_new, temperature=0.0, cache_backend=backend,
+        block_size=block_size, draft=draft, num_draft_tokens=3,
+        telemetry=telemetry))
+
+
+def _prompts(cfg, B, S, seed=1):
+    return np.asarray(
+        jax.random.randint(jax.random.PRNGKey(seed), (B, S), 2,
+                           cfg.vocab_size), np.int32)
+
+
+def _spec_prompts(cfg, n, seed=1):
+    """Repeated-phrase prompts so the prompt-lookup drafter has material."""
+    phrase = _prompts(cfg, 1, 4, seed=seed)[0]
+    out = []
+    for i in range(n):
+        uniq = _prompts(cfg, 1, 2, seed=seed + 10 + i)[0]
+        out.append(np.concatenate([phrase, phrase, uniq, phrase]))
+    return out
+
+
+def _mixed_serve(tmp_path, telemetry=True):
+    """The acceptance-criteria workload: paged backend, speculative
+    decoding, and a pool sized to force preemption-and-replay."""
+    cfg = _dense_cfg()
+    prompts = _spec_prompts(cfg, 3, seed=3)
+    tel = None
+    if telemetry:
+        tel = Telemetry(metrics_path=str(tmp_path / "metrics.jsonl"),
+                        trace_path=str(tmp_path / "trace.json"))
+    eng = _engine(cfg, backend="paged", draft="prompt_lookup", telemetry=tel)
+    reqs = [Request(prompt=prompts[i], max_new_tokens=8, arrival_time=0.0)
+            for i in range(3)]
+    report = eng.serve(reqs, n_slots=3, cache_T=28, num_blocks=10,
+                       sched_cfg=SchedulerConfig(lead_window=2))
+    if tel is not None:
+        tel.close()
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Golden schema: every emitted record carries its kind's required keys
+# ---------------------------------------------------------------------------
+
+class TestMetricsSchema:
+    def test_mixed_stream_matches_golden_schema(self, tmp_path):
+        report = _mixed_serve(tmp_path)
+        records = read_jsonl(str(tmp_path / "metrics.jsonl"))
+        assert records, "metrics sink wrote nothing"
+        kinds = {r["kind"] for r in records}
+        # run header + prefill + verify steps must appear; the forced-dry
+        # pool must have produced preempt records too
+        assert {"run", "prefill", "verify"} <= kinds
+        assert report.n_preemptions > 0 and "preempt" in kinds
+        for r in records:
+            required = STEP_SCHEMA[r["kind"]]
+            missing = required - set(r)
+            assert not missing, (r["kind"], missing)
+            assert r["schema"] == SCHEMA_VERSION
+
+    def test_plain_decode_and_reject_records(self, tmp_path):
+        cfg = _dense_cfg()
+        tel = Telemetry(metrics_path=str(tmp_path / "m.jsonl"))
+        eng = _engine(cfg, telemetry=tel)
+        ok = Request(prompt=_prompts(cfg, 1, 4)[0], max_new_tokens=3)
+        big = Request(prompt=_prompts(cfg, 1, 4)[0], max_new_tokens=64)
+        report = eng.serve([ok, big], n_slots=2, cache_T=8)
+        tel.close()
+        records = read_jsonl(str(tmp_path / "m.jsonl"))
+        kinds = {r["kind"] for r in records}
+        assert {"run", "prefill", "decode", "reject"} <= kinds
+        assert report.n_rejected == 1
+        run = next(r for r in records if r["kind"] == "run")
+        assert run["cache_backend"] == "slab" and run["draft"] == "none"
+        for r in records:
+            assert STEP_SCHEMA[r["kind"]] <= set(r)
+
+    def test_decode_record_values_are_consistent(self, tmp_path):
+        cfg = _dense_cfg()
+        tel = Telemetry(metrics_path=str(tmp_path / "m.jsonl"))
+        eng = _engine(cfg, telemetry=tel)
+        reqs = [Request(prompt=_prompts(cfg, 2, 4)[i], max_new_tokens=4)
+                for i in range(2)]
+        eng.serve(reqs, n_slots=2, cache_T=16)
+        tel.close()
+        for r in read_jsonl(str(tmp_path / "m.jsonl")):
+            if r["kind"] != "decode":
+                continue
+            assert 0 <= r["active_slots"] <= r["n_slots"]
+            assert r["occupancy"] == r["active_slots"] / r["n_slots"]
+            assert r["wall_s"] >= r["phases"]["dispatch_s"] >= 0
+            assert r["committed_tokens"] >= 1
+            assert r["h2d_bytes"] > 0     # step inputs cross to the device
+            assert r["d2h_bytes"] > 0     # sampled tokens cross back
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace validity
+# ---------------------------------------------------------------------------
+
+class TestTraceFile:
+    def test_trace_parses_and_spans_nest(self, tmp_path):
+        _mixed_serve(tmp_path)
+        with open(tmp_path / "trace.json") as f:
+            doc = json.load(f)
+        events = doc["traceEvents"]
+        assert isinstance(events, list) and events
+        assert any(e["ph"] == "M" and e["name"] == "process_name"
+                   for e in events)
+        spans = [e for e in events if e["ph"] == "X"]
+        assert spans, "no complete spans recorded"
+        names = {e["name"] for e in spans}
+        assert {"serve", "prefill", "verify", "commit", "preempt"} <= names
+        for e in spans:
+            assert e["dur"] >= 0 and e["ts"] >= 0
+            assert isinstance(e["pid"], int)
+        # emission order is span-END order on one thread: end stamps must
+        # be monotonic, and any two spans either nest or are disjoint
+        ends = [e["ts"] + e["dur"] for e in spans]
+        assert all(b >= a - 1e-6 for a, b in zip(ends, ends[1:]))
+        for i, a in enumerate(spans):
+            for b in spans[i + 1:]:
+                a0, a1 = a["ts"], a["ts"] + a["dur"]
+                b0, b1 = b["ts"], b["ts"] + b["dur"]
+                overlap = min(a1, b1) - max(a0, b0)
+                if overlap > 1e-6:          # they intersect: must nest
+                    assert (a0 <= b0 and b1 <= a1) or \
+                           (b0 <= a0 and a1 <= b1), (a, b)
+
+    def test_instant_events_marked(self, tmp_path):
+        _mixed_serve(tmp_path)
+        with open(tmp_path / "trace.json") as f:
+            events = json.load(f)["traceEvents"]
+        instants = [e for e in events if e["ph"] == "i"]
+        assert any(e["name"] == "admission_sync" for e in instants)
+        for e in instants:
+            assert e["s"] == "t"
+
+
+# ---------------------------------------------------------------------------
+# Token identity: sinks must never perturb outputs
+# ---------------------------------------------------------------------------
+
+class TestTokenIdentity:
+    @pytest.mark.parametrize("backend", ["slab", "paged"])
+    @pytest.mark.parametrize("draft", ["none", "prompt_lookup"])
+    def test_on_off_identical(self, tmp_path, backend, draft):
+        cfg = _dense_cfg()
+        prompts = _spec_prompts(cfg, 3, seed=5)
+
+        def serve(tel):
+            eng = _engine(cfg, backend=backend, draft=draft, telemetry=tel)
+            reqs = [Request(prompt=prompts[i], max_new_tokens=6,
+                            arrival_time=float(i)) for i in range(3)]
+            kw = dict(num_blocks=10) if backend == "paged" else {}
+            return eng.serve(reqs, n_slots=3, cache_T=26,
+                             sched_cfg=SchedulerConfig(lead_window=2), **kw)
+
+        off = serve(None)
+        on = serve(Telemetry(
+            metrics_path=str(tmp_path / f"{backend}_{draft}.jsonl"),
+            trace_path=str(tmp_path / f"{backend}_{draft}.json")))
+        for a, b in zip(sorted(off.results, key=lambda r: r.request_id),
+                        sorted(on.results, key=lambda r: r.request_id)):
+            assert a.finish_reason == b.finish_reason
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert off.steps == on.steps
+        assert off.total_new_tokens == on.total_new_tokens
+
+    def test_mixed_preempting_workload_identical(self, tmp_path):
+        off = _mixed_serve(tmp_path / "off", telemetry=False)
+        on = _mixed_serve(tmp_path / "on", telemetry=True)
+        assert on.n_preemptions == off.n_preemptions > 0
+        for a, b in zip(sorted(off.results, key=lambda r: r.request_id),
+                        sorted(on.results, key=lambda r: r.request_id)):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+# ---------------------------------------------------------------------------
+# Report == stream reduction (byte-equal floats, not approx)
+# ---------------------------------------------------------------------------
+
+class TestReportReduction:
+    def test_report_equals_reduction_of_written_jsonl(self, tmp_path):
+        report = _mixed_serve(tmp_path)
+        s = reduce_stream(read_jsonl(str(tmp_path / "metrics.jsonl")))
+        # exact equality: the reduction re-folds the very floats the sink
+        # serialized, and JSON round-trips binary64 exactly
+        assert report.prefill_s == s.prefill_s
+        assert report.decode_s == s.decode_s
+        assert report.steps == s.steps
+        assert report.n_syncs == s.n_syncs
+        assert report.n_rejected == s.n_rejected
+        assert report.total_new_tokens == s.total_new_tokens
+        assert report.slot_utilization == s.slot_utilization
+        assert report.committed_tokens_per_step == s.committed_tokens_per_step
+        assert report.max_divergence == s.max_divergence
+        assert report.n_preemptions == s.n_preemptions
+        assert report.drafted_tokens == s.drafted_tokens
+        assert report.accepted_tokens == s.accepted_tokens
+        assert report.peak_active_slots == s.peak_active_slots
+        assert report.prefix_hit_blocks == s.prefix_hit_blocks
+        assert report.cow_blocks == s.cow_blocks
+        assert report.peak_blocks_in_use == s.peak_blocks_in_use
+
+    def test_stream_values_are_plain_json_scalars(self, tmp_path):
+        _mixed_serve(tmp_path)
+        text = (tmp_path / "metrics.jsonl").read_text()
+        for line in text.splitlines():
+            rec = json.loads(line)
+            assert json.dumps(rec)      # round-trips without default= hooks
+
+
+# ---------------------------------------------------------------------------
+# Disabled handle: strict no-op, no allocation in the hot path
+# ---------------------------------------------------------------------------
+
+class TestDisabledTelemetry:
+    def test_null_span_is_shared_singleton(self):
+        tel = Telemetry()
+        assert not tel.enabled
+        assert tel.span("decode") is NULL_SPAN
+        assert tel.span("anything", slot=3) is NULL_SPAN
+        assert NULL_TELEMETRY.span("x") is NULL_SPAN
+        with tel.span("decode"):
+            pass                        # usable as a context manager
+
+    def test_disabled_emit_and_flush_write_nothing(self, tmp_path):
+        tel = Telemetry()
+        tel.emit({"kind": "decode"})
+        tel.instant("x")
+        tel.flush()
+        tel.close()
+        assert list(tmp_path.iterdir()) == []
+
+    def test_counters_accumulate_even_when_disabled(self):
+        tel = Telemetry()
+        tel.count("h2d_bytes", 128)
+        tel.count("h2d_bytes", np.int64(64))
+        assert tel.counters["h2d_bytes"] == 192
+
+
+class TestPercentilesHelper:
+    def test_empty_and_none_filtered(self):
+        assert percentiles([]) is None
+        assert percentiles([None, None]) is None
+
+    def test_values(self):
+        p = percentiles(list(range(1, 101)))
+        assert set(p) == {"p50", "p90", "p99"}
+        assert p["p50"] == pytest.approx(50.5)
+        assert p["p50"] <= p["p90"] <= p["p99"]
+
+    def test_custom_qs(self):
+        p = percentiles([1.0, 2.0, None, 3.0], qs=(0, 100))
+        assert p == {"p0": 1.0, "p100": 3.0}
