@@ -1,0 +1,168 @@
+"""Chaos smoke: a seeded fault-injection serve as a CI gate.
+
+Runs one fault-free reference serve and one serve under a seeded
+``FaultInjector`` schedule (transient step faults, pool exhaustion,
+simulated OOM, NaN logits, drafter failures, chaos cancellations) on the
+paged + speculative path, then checks the robustness invariants that
+``tests/test_faults.py`` pins in depth:
+
+  * every request reaches a terminal state and ``serve()`` returns;
+  * survivors are TOKEN-IDENTICAL to the fault-free run;
+  * the block pool is leak-free after the queue drains;
+  * every injected fault is visible in the telemetry stream.
+
+    PYTHONPATH=src python benchmarks/chaos_smoke.py [--tiny]
+    PYTHONPATH=src python benchmarks/chaos_smoke.py --telemetry DIR
+
+``--telemetry DIR`` writes ``DIR/chaos_metrics.jsonl`` — the full step +
+fault/retry/degrade/recover record stream CI uploads next to the other
+bench artifacts.  Counters are reported in the artifact but no wall-clock
+metric is gated: a chaos run's latency is injection noise by design.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+import jax
+
+if __package__ in (None, ""):  # ran as a script: make `benchmarks.` importable
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+
+def run(tiny: bool = False, seed: int = 0, telemetry_dir: str = None):
+    from repro.configs.base import get_arch
+    from repro.models import api
+    from repro.serving import (FaultInjector, Request, SchedulerConfig,
+                               ServeConfig, ServingEngine, Telemetry)
+
+    n_requests = 6 if tiny else 16
+    prompt_len = 6 if tiny else 12
+    max_new = 8 if tiny else 16
+    n_slots = 2 if tiny else 4
+
+    cfg = get_arch("qwen2-1.5b").reduced().replace(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=256, head_dim=16)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1),
+                           (n_requests, prompt_len), 2, cfg.vocab_size),
+        np.int32)
+    rng = np.random.default_rng(seed)
+    max_news = rng.integers(2, max_new + 1, size=n_requests).tolist()
+    arrivals = np.cumsum(rng.exponential(2.0, size=n_requests))
+
+    def requests():
+        return [Request(prompt=prompts[i], max_new_tokens=int(max_news[i]),
+                        arrival_time=float(arrivals[i]))
+                for i in range(n_requests)]
+
+    def serve_once(faults=None, telemetry=None):
+        engine = ServingEngine(cfg, params, ServeConfig(
+            max_new_tokens=max_new, temperature=0.0,
+            cache_backend="paged", block_size=4,
+            draft="prompt_lookup", num_draft_tokens=3,
+            faults=faults, telemetry=telemetry,
+            max_step_retries=1, max_recoveries=50))
+        loop = engine.make_loop(requests(), n_slots=n_slots,
+                                sched_cfg=SchedulerConfig(lead_window=2))
+        return loop.run(), loop
+
+    baseline, _ = serve_once()
+    base_tokens = [list(r.tokens) for r in baseline.results]
+
+    injector = FaultInjector(
+        seed=seed,
+        rates={"step": 0.05, "prefill": 0.05, "pool": 0.05, "oom": 0.03,
+               "nan": 0.01, "drafter": 0.10, "cancel": 0.01},
+        max_faults=10)
+    tel = None
+    if telemetry_dir:
+        os.makedirs(telemetry_dir, exist_ok=True)
+        tel = Telemetry(metrics_path=os.path.join(telemetry_dir,
+                                                  "chaos_metrics.jsonl"))
+    try:
+        report, loop = serve_once(faults=injector, telemetry=tel)
+    finally:
+        if tel is not None:
+            tel.close()
+
+    mismatches = 0
+    survivors = 0
+    for i, res in enumerate(report.results):
+        if res.finish_reason in ("eos", "length"):
+            survivors += 1
+            if list(res.tokens) != base_tokens[i]:
+                mismatches += 1
+
+    pool = loop.cm.pool
+    leaked = int(pool.n_live) + int(
+        (pool.num_blocks - 1) - pool.n_free)
+    injected_records = sum(1 for r in loop.stream
+                           if r["kind"] == "fault" and r.get("injected"))
+    unaccounted = len(injector.injected) - injected_records
+
+    result = {
+        "n_requests": n_requests,
+        "n_injected_faults": len(injector.injected),
+        "injected_by_site": {
+            site: sum(1 for s, _, _ in injector.injected if s == site)
+            for site in sorted({s for s, _, _ in injector.injected})},
+        "n_retries": report.n_retries,
+        "n_recoveries": report.n_recoveries,
+        "n_degrades": report.n_degrades,
+        "n_cancelled": report.n_cancelled,
+        "n_failed": report.n_failed,
+        "n_survivors": survivors,
+        "survivor_token_mismatches": mismatches,
+        "pool_leaked_blocks": leaked,
+        "unaccounted_injections": unaccounted,
+    }
+    if telemetry_dir:
+        result["telemetry_metrics"] = os.path.join(telemetry_dir,
+                                                   "chaos_metrics.jsonl")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke size (seconds, not minutes)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", metavar="DIR", default=None,
+                    help="write DIR/chaos_metrics.jsonl (full fault/step "
+                         "record stream)")
+    args = ap.parse_args(argv)
+
+    r = run(tiny=args.tiny, seed=args.seed, telemetry_dir=args.telemetry)
+
+    from benchmarks.common import save_artifact
+    path = save_artifact("BENCH_chaos", r)
+
+    print(f"requests={r['n_requests']} injected={r['n_injected_faults']} "
+          f"({r['injected_by_site']})")
+    print(f"retries={r['n_retries']} recoveries={r['n_recoveries']} "
+          f"degrades={r['n_degrades']} cancelled={r['n_cancelled']} "
+          f"failed={r['n_failed']}")
+    print(f"survivors: {r['n_survivors']}/{r['n_requests']} "
+          f"(token mismatches: {r['survivor_token_mismatches']})")
+    print(f"pool leaked blocks: {r['pool_leaked_blocks']}   "
+          f"unaccounted injections: {r['unaccounted_injections']}")
+    if r.get("telemetry_metrics"):
+        print(f"telemetry: {r['telemetry_metrics']}")
+    print(f"artifact: {path}")
+    bad = (r["survivor_token_mismatches"] or r["pool_leaked_blocks"]
+           or r["unaccounted_injections"])
+    if bad:
+        print("ERROR: chaos run violated a robustness invariant",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import sys
 from typing import Dict, List, Optional, Tuple
@@ -95,11 +96,24 @@ def compare_payloads(prev: dict, cur: dict, threshold: float,
         return regressions, notes
     for key in shared:
         p, c = prev_m[key], cur_m[key]
-        if p <= 0:
-            continue
         leaf = key.rsplit(".", 1)[-1]
         direction = next(d for s, d in METRIC_SUFFIXES.items()
                          if leaf.endswith(s))
+        if not math.isfinite(c):
+            # NaN compares False against every threshold — without this
+            # guard a NaN'd current metric would sail through as "ok"
+            regressions.append(
+                f"REGRESSION {name}:{key}: current value {c!r} is not "
+                f"finite")
+            continue
+        if not math.isfinite(p) or p <= 0:
+            # a zero/NaN baseline makes the relative delta meaningless
+            # (division by zero / NaN); say so instead of silently
+            # dropping the metric from the gate
+            notes.append(
+                f"{name}:{key}: SKIP (baseline {p!r} is not a positive "
+                f"finite number; relative delta undefined)")
+            continue
         rel = (c - p) / p
         bad = rel > threshold if direction == "lower" else rel < -threshold
         line = (f"{name}:{key}: {p:.6g} -> {c:.6g} "

@@ -50,6 +50,11 @@ BENCHMARKS = [
      lambda r: f"model_step_reduction={r['model_step_reduction']:.2f}x;"
                f"pl_accept={r['prompt_lookup_acceptance_rate']:.2f};"
                f"mismatches={r['token_mismatches']}"),
+    ("chaos_smoke", "benchmarks.chaos_smoke",
+     lambda r: f"injected={r['n_injected_faults']};"
+               f"recoveries={r['n_recoveries']};"
+               f"mismatches={r['survivor_token_mismatches']};"
+               f"leaked={r['pool_leaked_blocks']}"),
 ]
 
 

@@ -16,6 +16,9 @@ from repro.serving.engine import (GenerationResult, RequestResult,
 from repro.serving.executor import (Executor, MeshExecutor,
                                     SingleDeviceExecutor, make_executor,
                                     make_serving_mesh)
+from repro.serving.faults import (NULL_INJECTOR, DeviceOOM, DrafterFault,
+                                  FaultInjector, InjectedFault, StepFault,
+                                  StepTimeout, TransientStepFault)
 from repro.serving.queue import Request, RequestQueue, RequestState
 from repro.serving.scheduler import QuasiSyncScheduler, SchedulerConfig
 from repro.serving.speculative import (Drafter, ModelDrafter,
@@ -28,12 +31,17 @@ __all__ = [
     "BaseCacheManager",
     "BlockPool",
     "CacheManager",
+    "DeviceOOM",
     "Drafter",
+    "DrafterFault",
     "Executor",
+    "FaultInjector",
     "GenerationResult",
+    "InjectedFault",
     "MeshExecutor",
     "MetricsLogger",
     "ModelDrafter",
+    "NULL_INJECTOR",
     "NoFreeBlocks",
     "PagedCacheManager",
     "PromptLookupDrafter",
@@ -49,7 +57,10 @@ __all__ = [
     "ServingEngine",
     "SchedulerConfig",
     "SingleDeviceExecutor",
+    "StepFault",
+    "StepTimeout",
     "StreamSummary",
+    "TransientStepFault",
     "Telemetry",
     "Tracer",
     "make_cache_manager",

@@ -37,6 +37,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.serving.cache_manager import BaseCacheManager
+from repro.serving.faults import InjectedFault, NULL_INJECTOR
 
 TRASH_BLOCK = 0  # reserved scratch block id (never allocated, never shared)
 
@@ -44,6 +45,15 @@ TRASH_BLOCK = 0  # reserved scratch block id (never allocated, never shared)
 class NoFreeBlocks(RuntimeError):
     """Raised when an allocation cannot be satisfied even after evicting
     every unreferenced cached block (the engine preempts a request then)."""
+
+
+class InjectedPoolExhaustion(NoFreeBlocks, InjectedFault):
+    """Injected pool exhaustion: rides the normal ``NoFreeBlocks``
+    preempt-and-retry path, but — being an :class:`InjectedFault` — stays
+    recoverable when no preemption victim exists (a REAL exhaustion with
+    no victim is a sizing error and keeps raising)."""
+
+    site = "pool"
 
 
 class BlockPool:
@@ -54,13 +64,14 @@ class BlockPool:
     the block ids this pool hands out.
     """
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int, *, faults=None):
         if num_blocks < 2:
             raise ValueError("num_blocks must be >= 2 (block 0 is reserved)")
         if block_size < 1:
             raise ValueError("block_size must be >= 1")
         self.num_blocks = num_blocks
         self.block_size = block_size
+        self.faults = faults if faults is not None else NULL_INJECTOR
         # block 0 is the trash block; ids [1, num_blocks) are allocatable
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
         self.refcount = np.zeros(num_blocks, np.int32)
@@ -96,6 +107,8 @@ class BlockPool:
     def alloc(self) -> int:
         """Allocate a private (refcount 1, unregistered) block; evicts the
         LRU cached prefix block if the free list is empty."""
+        if self.faults.fire("pool"):
+            raise InjectedPoolExhaustion("injected pool exhaustion")
         if self._free:
             bid = self._free.pop()
         elif self._cached:
@@ -239,7 +252,7 @@ class PagedCacheManager(BaseCacheManager):
 
     def __init__(self, cfg, n_slots: int, cache_T: int, *,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 executor=None, telemetry=None):
+                 executor=None, telemetry=None, faults=None):
         from repro.serving.telemetry import NULL_TELEMETRY
         if cfg.family not in ("dense", "moe", "vlm"):
             raise ValueError(
@@ -254,7 +267,7 @@ class PagedCacheManager(BaseCacheManager):
             num_blocks = n_slots * self.blocks_per_seq + 1
         super().__init__(cfg, n_slots)
         self.num_blocks = num_blocks
-        self.pool = BlockPool(num_blocks, block_size)
+        self.pool = BlockPool(num_blocks, block_size, faults=faults)
         # device ops (page allocation, the jitted+donating scatter insert
         # and copy-on-write block copy) live behind the executor; page
         # leaves stay replicated under a mesh (no batch/seq axis to shard)
@@ -393,11 +406,20 @@ class PagedCacheManager(BaseCacheManager):
         ids = np.full(self.blocks_per_seq, TRASH_BLOCK, np.int32)
         skip = n_hit + (1 if adopted_partial else 0)
         ids[skip:n_total] = table[skip:n_total]
-        with self.telemetry.span("block_insert", slot=slot,
-                                 n_blocks=n_total - skip,
-                                 prefix_hits=n_counted_hits):
-            self.pages = self.executor.paged_insert(self.pages, src_cache,
-                                                    ids, src_index)
+        try:
+            with self.telemetry.span("block_insert", slot=slot,
+                                     n_blocks=n_total - skip,
+                                     prefix_hits=n_counted_hits):
+                self.pages = self.executor.paged_insert(self.pages, src_cache,
+                                                        ids, src_index)
+        except Exception:
+            # the device scatter failed (e.g. injected OOM) AFTER the table
+            # refs were taken: release them or the pool leaks every block
+            # this request claimed
+            for bid in table:
+                self.pool.decref(bid)
+            self.pool.n_prefix_hits -= n_counted_hits
+            raise
         # register freshly written FULL blocks; on a same-content collision
         # (two identical prompts in one prefill group) swap to the canonical
         # block so the copies share
@@ -462,10 +484,16 @@ class PagedCacheManager(BaseCacheManager):
                             new = self.pool.alloc()
                         except NoFreeBlocks:
                             return s
-                        with self.telemetry.span("cow", slot=s,
-                                                 src=bid, dst=new):
-                            self.pages = self.executor.copy_block(
-                                self.pages, new, bid)
+                        try:
+                            with self.telemetry.span("cow", slot=s,
+                                                     src=bid, dst=new):
+                                self.pages = self.executor.copy_block(
+                                    self.pages, new, bid)
+                        except Exception:
+                            # device copy failed: the fresh private block
+                            # would leak (nothing references it yet)
+                            self.pool.decref(new)
+                            raise
                         self.pool.decref(bid)
                         self.tables[s, bi] = new
                         self.pool.n_cow += 1

@@ -158,10 +158,12 @@ class CacheManager(BaseCacheManager):
 def make_cache_manager(cfg, n_slots: int, cache_T: int, *,
                        backend: str = "slab", block_size: int = 16,
                        num_blocks: Optional[int] = None,
-                       executor=None, telemetry=None) -> BaseCacheManager:
+                       executor=None, telemetry=None,
+                       faults=None) -> BaseCacheManager:
     """Facade: build the backing store selected by ``backend``, with its
-    device ops routed through ``executor`` (None -> single-device) and its
-    spans on ``telemetry`` (None -> no-op)."""
+    device ops routed through ``executor`` (None -> single-device), its
+    spans on ``telemetry`` (None -> no-op), and — paged only — its pool
+    allocations checked against the ``faults`` injector (None -> no-op)."""
     if backend == "slab":
         return CacheManager(cfg, n_slots, cache_T, executor=executor,
                             telemetry=telemetry)
@@ -169,6 +171,7 @@ def make_cache_manager(cfg, n_slots: int, cache_T: int, *,
         from repro.serving.block_pool import PagedCacheManager
         return PagedCacheManager(cfg, n_slots, cache_T,
                                  block_size=block_size, num_blocks=num_blocks,
-                                 executor=executor, telemetry=telemetry)
+                                 executor=executor, telemetry=telemetry,
+                                 faults=faults)
     raise ValueError(f"unknown cache_backend {backend!r}; "
                      f"expected 'slab' or 'paged'")

@@ -41,23 +41,32 @@ modeled cycles/energy) when a quantized matmul mode is active.
 from __future__ import annotations
 
 import collections
+import concurrent.futures
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.bp_matmul import resolve_matmul_backend
 from repro.models.layers import quantize_dense_params
 from repro.serving.block_pool import NoFreeBlocks, PagedCacheManager
 from repro.serving.cache_manager import make_cache_manager
 from repro.serving.executor import Executor, make_executor
+from repro.serving.faults import (NULL_INJECTOR, DrafterFault, FaultInjector,
+                                  InjectedFault, StepFault, StepTimeout)
 from repro.serving.queue import Request, RequestQueue, RequestState
 from repro.serving.scheduler import (QuasiSyncScheduler, SchedulerConfig,
                                      prefill_bucket_len)
 from repro.serving.telemetry import (SCHEMA_VERSION, Telemetry, percentiles,
                                      reduce_stream)
+
+#: errors the serve loop survives via rebuild-and-replay recovery: injected
+#: faults that exhausted their retry budget, watchdog aborts, and wrapped
+#: real executor failures.  Everything else (config/user errors) raises.
+RECOVERABLE_ERRORS = (InjectedFault, StepTimeout, StepFault)
 
 
 @dataclasses.dataclass
@@ -85,6 +94,29 @@ class ServeConfig:
     # / Chrome-trace / jax.profiler sinks).  None (the default) builds a
     # disabled no-op handle — no files written, token-identical outputs.
     telemetry: Optional[Telemetry] = None
+    # -- robustness (docs/robustness.md) ------------------------------------
+    # fault injection: a ``serving.faults.FaultInjector`` threaded to the
+    # executor / cache managers / block pool / drafter exactly like the
+    # telemetry handle.  None = the no-op NULL_INJECTOR (pinned a strict
+    # no-op by token-identity tests).
+    faults: Optional[FaultInjector] = None
+    # bounded retry on transient (injected) step faults, with exponential
+    # backoff base retry_backoff_s * 2**attempt (0 = immediate retry)
+    max_step_retries: int = 2
+    retry_backoff_s: float = 0.0
+    # full rebuild-and-replay recoveries allowed per serve() before the
+    # loop fails every in-flight request and returns
+    max_recoveries: int = 3
+    # wall-clock watchdog: abort any single dispatch exceeding this budget
+    # (None = no watchdog; the aborted step recovers like a failed one)
+    step_timeout_s: Optional[float] = None
+    # degradation ladder thresholds: consecutive drafter faults before
+    # speculation is disabled; recoveries before a non-XLA matmul backend
+    # falls back to the XLA oracle; preemptions between ladder checks
+    # before the lead window is halved (0 disables the rung)
+    drafter_fault_limit: int = 2
+    kernel_fault_limit: int = 2
+    pool_pressure_limit: int = 8
 
 
 def tokens_per_second(n_tokens: int, decode_s: float, prefill_s: float = 0.0,
@@ -158,6 +190,15 @@ class ServeReport:
     # inter-token gap pooled over every request's consecutive emissions
     ttft_wall: Optional[Dict[str, float]] = None
     itl_wall: Optional[Dict[str, float]] = None
+    # robustness (docs/robustness.md): lifecycle evictions + fault ledger
+    n_cancelled: int = 0              # requests cancelled (API or chaos)
+    n_timed_out: int = 0              # requests past deadline_s/ttft budget
+    n_failed: int = 0                 # requests failed (NaN guard / abort)
+    n_faults: int = 0                 # fault records (injected + detected)
+    n_injected_faults: int = 0        # fault records with injected=True
+    n_retries: int = 0                # transient-fault dispatch retries
+    n_degrades: int = 0               # degradation-ladder transitions
+    n_recoveries: int = 0             # rebuild-and-replay recoveries
 
     @property
     def acceptance_rate(self) -> float:
@@ -211,18 +252,24 @@ class ServeLoop:
         self._wall0 = time.perf_counter()
         self._h2d_mark = int(self.tel.counters.get("h2d_bytes", 0))
         self._d2h_mark = int(self.tel.counters.get("d2h_bytes", 0))
+        # fault injection rides the config exactly like telemetry; the
+        # executors get the handle before any cache op can fire a check
+        self.faults: FaultInjector = (self.serve_cfg.faults
+                                      if self.serve_cfg.faults is not None
+                                      else NULL_INJECTOR)
+        self.faults.bind(self._emit_injected)
+        engine.executor.set_faults(self.faults)
         requests = sorted(requests,
                           key=lambda r: (r.arrival_time, r.request_id))
         self.requests = requests
         if cache_T is None:
             need = [r.prompt_len + r.max_new_tokens for r in requests] or [1]
             cache_T = max(need) + self.serve_cfg.cache_margin
-        self.cm = make_cache_manager(engine.cfg, n_slots, cache_T,
-                                     backend=self.serve_cfg.cache_backend,
-                                     block_size=self.serve_cfg.block_size,
-                                     num_blocks=num_blocks,
-                                     executor=engine.executor,
-                                     telemetry=self.tel)
+        # constructor args kept so ``recover()`` can rebuild a fresh store
+        self.n_slots = n_slots
+        self._cache_T_arg = cache_T
+        self._num_blocks = num_blocks
+        self.cm = self._build_cm()
         self.paged = isinstance(self.cm, PagedCacheManager)
         # prefill caches must slice into whole blocks on the paged store
         self.cache_T = self.cm.prefill_T if self.paged else cache_T
@@ -240,7 +287,6 @@ class ServeLoop:
                                         telemetry=self.tel)
         self.ragged = self.sched.bucketing == "pow2"
         self.extras = extras
-        self.n_slots = n_slots
         # deque: submit_arrivals pops from the head every decode step, and
         # list.pop(0) is O(n) — O(n^2) over long request streams
         self.arrivals = collections.deque(requests)
@@ -252,8 +298,18 @@ class ServeLoop:
         self.decode_s = 0.0
         self.n_preemptions = 0
         self.peak_active = 0
-        self._decode_fn = engine.executor.decode_sample_fn(
-            self.serve_cfg.temperature, paged=self.paged)
+        # robustness state: pending cancellations, recovery/ladder counters,
+        # and whether any request carries a wall-clock deadline (the sweep
+        # stays O(1) when nothing can cancel or expire)
+        self._cancel_ids: Set[int] = set()
+        self._any_deadlines = any(
+            r.deadline_s is not None or r.ttft_deadline_s is not None
+            for r in requests)
+        self.n_recoveries = 0
+        self._drafter_faults = 0
+        self._pressure_mark = 0
+        #: optional test/debug hook called after every loop iteration
+        self.on_step_end: Optional[Callable[["ServeLoop"], None]] = None
         # speculative decoding: a drafter proposes up to K tokens per slot,
         # one multi-token verify step checks them all, slots commit a
         # VARIABLE 1..K+1 tokens per step (greedy-only, token-identical)
@@ -261,21 +317,41 @@ class ServeLoop:
         self.drafter = make_drafter(self.serve_cfg, engine,
                                     n_slots=n_slots, cache_T=self.cache_T,
                                     telemetry=self.tel)
+        self.draft_name = (self.drafter.name if self.drafter is not None
+                           else "none")
+        if self.drafter is not None:
+            self.drafter.faults = self.faults
         self.n_drafted = 0
         self.n_accepted = 0
-        if self.drafter is not None:
-            self._verify_fn = engine.executor.verify_sample_fn(
-                paged=self.paged)
+        self._bind_step_fns()
         mesh = self.executor.mesh
         self._emit("run",
                    cache_backend=str(self.serve_cfg.cache_backend),
                    n_slots=int(n_slots), cache_T=int(self.cache_T),
-                   draft=(self.drafter.name if self.drafter is not None
-                          else "none"),
+                   draft=self.draft_name,
                    temperature=float(self.serve_cfg.temperature),
                    mesh_shape=(None if mesh is None else
                                [int(d) for d in mesh.devices.shape]),
                    block_size=int(self.serve_cfg.block_size))
+
+    def _build_cm(self):
+        return make_cache_manager(self.engine.cfg, self.n_slots,
+                                  self._cache_T_arg,
+                                  backend=self.serve_cfg.cache_backend,
+                                  block_size=self.serve_cfg.block_size,
+                                  num_blocks=self._num_blocks,
+                                  executor=self.engine.executor,
+                                  telemetry=self.tel, faults=self.faults)
+
+    def _bind_step_fns(self):
+        """(Re-)fetch the jitted step entry points from the executor —
+        called at construction and again after a recovery rebuild or a
+        matmul-backend downgrade invalidates the executor's trace cache."""
+        self._decode_fn = self.engine.executor.decode_sample_fn(
+            self.serve_cfg.temperature, paged=self.paged)
+        if self.drafter is not None:
+            self._verify_fn = self.engine.executor.verify_sample_fn(
+                paged=self.paged)
 
     # -- telemetry plumbing --------------------------------------------------
 
@@ -294,6 +370,20 @@ class ServeLoop:
     def _on_reject(self, req: Request):
         self._emit("reject", step=int(self.sched.n_decode_steps),
                    request_id=int(req.request_id))
+
+    def _step_clock(self) -> int:
+        # the injector can fire during construction, before the scheduler
+        # exists; everything after __init__ reads the real step clock
+        sched = getattr(self, "sched", None)
+        return int(sched.n_decode_steps) if sched is not None else 0
+
+    def _emit_injected(self, site: str, **ctx) -> None:
+        """Telemetry callback bound into the fault injector: every fired
+        injection becomes a stream ``fault`` record with ``injected=True``
+        (the chaos suite audits the stream 1:1 against the injector's
+        ledger)."""
+        self._emit("fault", step=self._step_clock(), site=site,
+                   injected=True, **ctx)
 
     def _byte_deltas(self) -> Tuple[int, int]:
         """Host<->device bytes moved since the previous step record."""
@@ -315,6 +405,163 @@ class ServeLoop:
                 "prefix_hit_blocks": int(pool.n_prefix_hits),
                 "cow_blocks": int(pool.n_cow),
                 "peak_blocks_in_use": int(pool.peak_live)}
+
+    # -- lifecycle: cancellation + deadlines --------------------------------
+
+    def _live_requests(self) -> List[Request]:
+        """Every request still in flight: not yet submitted, waiting, or
+        active in a slot (terminal requests are no longer reachable)."""
+        return (list(self.arrivals) + list(self.rq.peek())
+                + list(self.active.values()))
+
+    def _evict(self, slot: int) -> Request:
+        """Remove ``slot``'s request from the batch and release every
+        resource it holds (cache slot / block table, drafter state)."""
+        req = self.active.pop(slot)
+        self.cm.free(slot)
+        if self.drafter is not None:
+            self.drafter.on_free(slot)
+        return req
+
+    def sweep(self):
+        """Run once per loop iteration BEFORE planning admissions: collect
+        injector- and API-requested cancellations, then expire requests
+        whose wall-clock deadline passed.  Evicted actives free their slot
+        and blocks immediately, so the very next admission plan sees the
+        reclaimed capacity."""
+        if self.faults.enabled:
+            live = [int(r.request_id) for r in self._live_requests()]
+            self._cancel_ids.update(self.faults.cancel_requests(live))
+        pending = self.engine._pending_cancels
+        if pending:
+            self._cancel_ids.update(pending)
+            pending.clear()
+        if self._cancel_ids:
+            self._apply_cancels()
+        if self._any_deadlines:
+            self._apply_deadlines()
+
+    def _finish_evicted(self, req: Request, reason: str, kind: str,
+                        where: str, **fields):
+        req.finish(self.now, reason)
+        self._emit(kind, step=int(self.sched.n_decode_steps),
+                   request_id=int(req.request_id), where=where, **fields)
+
+    def _apply_cancels(self):
+        ids, self._cancel_ids = self._cancel_ids, set()
+        for req in [r for r in self.arrivals if int(r.request_id) in ids]:
+            self.arrivals.remove(req)
+            self._finish_evicted(req, "cancelled", "cancel", "arrivals")
+        for req in [r for r in self.rq.peek() if int(r.request_id) in ids]:
+            self.rq.remove(req)
+            self._finish_evicted(req, "cancelled", "cancel", "waiting")
+        for slot in [s for s, r in self.active.items()
+                     if int(r.request_id) in ids]:
+            req = self._evict(slot)
+            self._finish_evicted(req, "cancelled", "cancel", "active")
+        # ids for unknown/already-finished requests are dropped silently:
+        # cancel() is idempotent and may race a natural finish
+
+    def _apply_deadlines(self):
+        wall = time.perf_counter()
+
+        def expired(req: Request) -> Optional[str]:
+            t0 = req.wall_submitted_at
+            if t0 is None:
+                return None       # not yet submitted: deadlines start then
+            if (req.ttft_deadline_s is not None
+                    and req.first_token_at is None
+                    and wall - t0 >= req.ttft_deadline_s):
+                return "ttft"
+            if (req.deadline_s is not None
+                    and wall - t0 >= req.deadline_s):
+                return "total"
+            return None
+
+        for req in list(self.rq.peek()):
+            which = expired(req)
+            if which is not None:
+                self.rq.remove(req)
+                self._finish_evicted(req, "timeout", "timeout", "waiting",
+                                     deadline=which)
+        for slot in list(self.active):
+            req = self.active[slot]
+            which = expired(req)
+            if which is not None:
+                self._evict(slot)
+                self._finish_evicted(req, "timeout", "timeout", "active",
+                                     deadline=which)
+
+    # -- fault-hardened dispatch --------------------------------------------
+
+    def _with_watchdog(self, fn):
+        """Run one device dispatch under the wall-clock watchdog.  The jit
+        call runs in a worker thread; if it exceeds the budget the loop
+        raises :class:`StepTimeout` and recovery rebuilds the executor —
+        the stuck computation's results are never adopted."""
+        budget = self.serve_cfg.step_timeout_s
+        if budget is None:
+            return fn()
+        pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        try:
+            fut = pool.submit(fn)
+            try:
+                return fut.result(timeout=budget)
+            except concurrent.futures.TimeoutError:
+                raise StepTimeout(
+                    f"step exceeded the {budget:g}s watchdog budget"
+                ) from None
+        finally:
+            pool.shutdown(wait=False, cancel_futures=True)
+
+    def _dispatch(self, site: str, fn):
+        """Fault boundary around one device dispatch: bounded retry with
+        exponential backoff on injected transients (raised BEFORE the jit
+        call, so the donated cache is untouched and a retry is safe), and
+        real executor failures wrapped into :class:`StepFault` so ``run()``
+        can tell recoverable infrastructure faults from plain bugs."""
+        attempt = 0
+        while True:
+            try:
+                return self._with_watchdog(fn)
+            except StepTimeout:
+                raise
+            except InjectedFault as e:
+                if attempt >= self.serve_cfg.max_step_retries:
+                    raise
+                attempt += 1
+                self._emit("retry", step=int(self.sched.n_decode_steps),
+                           site=str(getattr(e, "site", site)),
+                           attempt=int(attempt))
+                backoff = self.serve_cfg.retry_backoff_s
+                if backoff > 0:
+                    time.sleep(backoff * 2 ** (attempt - 1))
+            except Exception as e:
+                raise StepFault(site, e) from e
+
+    def _maybe_inject_nan(self, step: dict, slots: List[int]) -> None:
+        """Chaos only: poison the logits of injector-chosen slots with NaN
+        inside the jitted step.  The mask key is added ONLY when an
+        injector is live, so fault-free runs trace the exact same step
+        structure as the seed."""
+        if not self.faults.enabled:
+            return
+        bad = self.faults.nan_slots(slots)
+        if not bad:
+            return
+        mask = np.zeros(self.n_slots, bool)
+        mask[list(bad)] = True
+        step["nan_mask"] = jnp.asarray(mask)
+
+    def _fail_slot(self, slot: int):
+        """The fused finite-logits guard flagged this slot (-1 sentinel):
+        its logits were non-finite, so its stream cannot continue.  Fail
+        just this request and release its resources — the batch survives."""
+        req = self._evict(slot)
+        req.finish(self.now, "failed")
+        self._emit("fault", step=int(self.sched.n_decode_steps),
+                   site="nan_guard", request_id=int(req.request_id),
+                   slot=int(slot))
 
     # -- admission / preemption --------------------------------------------
 
@@ -356,6 +603,17 @@ class ServeLoop:
         self._emit("preempt", step=int(self.sched.n_decode_steps),
                    slot=int(slot), request_id=int(req.request_id),
                    discarded_tokens=int(discarded))
+        # degradation ladder: sustained pool pressure (preemption churn)
+        # halves the lead window — smaller admission bursts trade fusion
+        # for fewer evictions
+        lim = self.serve_cfg.pool_pressure_limit
+        if (lim and self.n_preemptions - self._pressure_mark >= lim
+                and self.sched.cfg.lead_window > 0):
+            self._pressure_mark = self.n_preemptions
+            new_e = self.sched.cfg.lead_window // 2
+            self.sched.set_lead_window(new_e)
+            self._emit("degrade", step=int(self.sched.n_decode_steps),
+                       action="shrink_lead_window", lead_window=int(new_e))
 
     def insert_with_preemption(self, slot: int, cache, req: Request,
                                src_index: int):
@@ -366,11 +624,16 @@ class ServeLoop:
                 self.cm.insert(slot, cache, req.prompt_len,
                                src_index=src_index, tokens=req.prompt)
                 return
-            except NoFreeBlocks:
+            except NoFreeBlocks as e:
                 # the inserting request holds no slot entry in `active`
                 # yet, so it can never preempt itself here
                 victim = self.pick_victim()
                 if victim is None:
+                    if isinstance(e, InjectedFault):
+                        # injected exhaustion with nobody to preempt is an
+                        # infrastructure fault — recoverable, not a sizing
+                        # bug
+                        raise
                     raise RuntimeError(
                         "paged pool cannot hold a single admitted "
                         "request; increase num_blocks")
@@ -418,13 +681,18 @@ class ServeLoop:
         self.tel.count("h2d_bytes", sum(int(np.asarray(v).nbytes)
                                         for v in batch.values()))
         t0 = time.perf_counter()
-        with self.tel.span("prefill", group_size=len(group), pad_to=pad_to):
+
+        def dispatch():
             if self.ragged:
                 logits, cache = self.executor.prefill(batch, self.cache_T,
                                                       prompt_lens=lens)
             else:
                 logits, cache = self.executor.prefill(batch, self.cache_T)
             logits.block_until_ready()
+            return logits, cache
+
+        with self.tel.span("prefill", group_size=len(group), pad_to=pad_to):
+            logits, cache = self._dispatch("prefill", dispatch)
         wall = time.perf_counter()
         dispatch_s = wall - t0
         self.prefill_s += dispatch_s
@@ -447,7 +715,14 @@ class ServeLoop:
                     req.finish(self.now, reason)
                     continue
                 slot = self.cm.alloc()
-                self.insert_with_preemption(slot, cache, req, j)
+                try:
+                    self.insert_with_preemption(slot, cache, req, j)
+                except BaseException:
+                    # never leak the slot: a failed install (injected OOM
+                    # past its retries, recoverable exhaustion) must leave
+                    # the pool exactly as it found it
+                    self.cm.free(slot)
+                    raise
                 req.slot = slot
                 req.transition(RequestState.DECODE)
                 self.active[slot] = req
@@ -519,16 +794,22 @@ class ServeLoop:
                 "cache_len": self.cm.cache_len_vector()}
         if self.paged:
             step["block_tables"] = self.cm.block_tables_device()
+        self._maybe_inject_nan(step, slots)
         self.tel.count("h2d_bytes",
                        int(step["tokens"].nbytes)
                        + int(step["cache_len"].nbytes)
                        + int(self.slot_keys.nbytes) + int(counts.nbytes))
         t0 = time.perf_counter()
-        with self.tel.span("decode", n_slots=len(slots)):
+
+        def dispatch():
             toks, new_cache = self._decode_fn(self.cm.cache, step,
                                               jnp.asarray(self.slot_keys),
                                               jnp.asarray(counts))
             toks.block_until_ready()
+            return toks, new_cache
+
+        with self.tel.span("decode", n_slots=len(slots)):
+            toks, new_cache = self._dispatch("decode", dispatch)
         wall = time.perf_counter()
         dispatch_s = wall - t0
         self.decode_s += dispatch_s
@@ -543,6 +824,7 @@ class ServeLoop:
         self.now += 1.0
         toks_np = np.asarray(toks)
         self.tel.count("d2h_bytes", int(toks_np.nbytes))
+        n_committed = 0
         t_commit = time.perf_counter()
         with self.tel.span("commit", n_slots=len(slots)):
             for slot in slots:
@@ -554,14 +836,26 @@ class ServeLoop:
                     tok = req.replay.pop(0)
                 else:
                     tok = int(toks_np[slot])
+                    if tok < 0:
+                        # non-finite logits (the fused guard's -1 sentinel):
+                        # fail ONLY the poisoned slot — its KV state is
+                        # suspect, everyone else's tokens commit normally
+                        self._fail_slot(slot)
+                        continue
                 self._append_token(req, tok, wall)
                 self.last_tok[slot] = tok
+                n_committed += 1
                 reason = self.engine._finished(req, tok)
                 if reason is not None:
                     del self.active[slot]
                     self.cm.free(slot)
                     req.finish(self.now, reason)
         commit_s = time.perf_counter() - t_commit
+        if n_committed != len(slots):
+            # nan-guard failures committed nothing: correct the scheduler's
+            # optimistic per-slot count (observed above, before the frees,
+            # so occupancy accounting matches the fault-free path exactly)
+            self.sched.n_committed_tokens -= len(slots) - n_committed
         h2d, d2h = self._byte_deltas()
         self._emit("decode", step=int(self.sched.n_decode_steps),
                    wall_s=time.perf_counter() - t_start,
@@ -570,7 +864,7 @@ class ServeLoop:
                            "commit_s": commit_s},
                    active_slots=int(len(slots)), n_slots=int(self.n_slots),
                    occupancy=occupancy, divergence=divergence,
-                   committed_tokens=int(len(slots)),
+                   committed_tokens=int(n_committed),
                    h2d_bytes=h2d, d2h_bytes=d2h,
                    **self._pool_gauges())
 
@@ -591,11 +885,28 @@ class ServeLoop:
         caps = {s: max(min(K, self.active[s].max_new_tokens
                            - len(self.active[s].tokens) - 1), 0)
                 for s in slots}
+        # the drafter may be disabled mid-step by the degradation ladder;
+        # slot bookkeeping below must keep using the one that drafted
+        drafter = self.drafter
         t_draft = time.perf_counter()
         with self.tel.span("draft", n_slots=len(slots)):
             if any(caps.values()):
-                drafts = self.drafter.propose_all(
-                    {s: self.active[s] for s in slots}, caps)
+                try:
+                    drafts = drafter.propose_all(
+                        {s: self.active[s] for s in slots}, caps)
+                    self._drafter_faults = 0
+                except DrafterFault:
+                    # a failed drafter costs speculation, never correctness:
+                    # the step proceeds draft-less (1 committed token per
+                    # slot, exactly a classic decode)
+                    drafts = {}
+                    self._drafter_faults += 1
+                    lim = self.serve_cfg.drafter_fault_limit
+                    if lim and self._drafter_faults >= lim:
+                        self.drafter = None
+                        self._emit("degrade",
+                                   step=int(self.sched.n_decode_steps),
+                                   action="disable_speculation")
             else:
                 # every slot is within one token of its budget: the step
                 # degenerates to a classic decode — don't burn drafter work
@@ -621,12 +932,18 @@ class ServeLoop:
                 "cache_len": self.cm.cache_len_vector()}
         if self.paged:
             step["block_tables"] = self.cm.block_tables_device()
+        self._maybe_inject_nan(step, slots)
         self.tel.count("h2d_bytes", int(step["tokens"].nbytes)
                        + int(step["cache_len"].nbytes))
         t0 = time.perf_counter()
-        with self.tel.span("verify", n_slots=len(slots)):
+
+        def dispatch():
             greedy, new_cache = self._verify_fn(self.cm.cache, step)
             greedy.block_until_ready()
+            return greedy, new_cache
+
+        with self.tel.span("verify", n_slots=len(slots)):
+            greedy, new_cache = self._dispatch("verify", dispatch)
         wall = time.perf_counter()
         dispatch_s = wall - t0
         self.decode_s += dispatch_s
@@ -658,6 +975,11 @@ class ServeLoop:
                         tok = req.replay.pop(0)
                     else:
                         tok = int(greedy_np[slot, j])
+                        if tok < 0:
+                            # fused finite-logits guard tripped: fail this
+                            # slot at the poisoned position, keep the prefix
+                            finished[slot] = "failed"
+                            break
                     self._append_token(req, tok, wall)
                     self.last_tok[slot] = tok
                     appended += 1
@@ -687,11 +1009,16 @@ class ServeLoop:
             if slot in finished:
                 req = self.active.pop(slot)
                 self.cm.free(slot)
-                self.drafter.on_free(slot)
+                drafter.on_free(slot)
                 req.finish(self.now, finished[slot])
+                if finished[slot] == "failed":
+                    self._emit("fault", step=int(self.sched.n_decode_steps),
+                               site="nan_guard",
+                               request_id=int(req.request_id),
+                               slot=int(slot))
             else:
-                self.drafter.observe_commit(slot,
-                                            int(self.cm.lengths[slot]))
+                drafter.observe_commit(slot,
+                                       int(self.cm.lengths[slot]))
         h2d, d2h = self._byte_deltas()
         self._emit("verify", step=int(self.sched.n_decode_steps),
                    wall_s=time.perf_counter() - t_start,
@@ -712,34 +1039,123 @@ class ServeLoop:
             with self.tel.span("serve"):
                 self.submit_arrivals()
                 while self.arrivals or len(self.rq) or self.active:
-                    # one plan_admissions() batch is ONE admission sync;
-                    # only its first group opens the sync in the stream
-                    for gi, group in enumerate(self.sched.plan_admissions()):
-                        self.admit(group, new_sync=(gi == 0))
-                    if not self.active:
-                        if not self.arrivals and not len(self.rq):
-                            break
-                        if not len(self.rq) and self.arrivals:
-                            # idle: jump the virtual clock to the next
-                            # arrival
-                            self.now = max(self.now,
-                                           self.arrivals[0].arrival_time)
-                            self.submit_arrivals()
-                        continue
-                    if self.drafter is not None:
-                        self.decode_once_spec()
-                    else:
-                        t_prep = time.perf_counter()
-                        slots = self.writable_slots()
-                        prepare_s = time.perf_counter() - t_prep
-                        if not slots:
-                            continue
-                        self.decode_once(slots, prepare_s=prepare_s)
-                    self.submit_arrivals()
+                    # lifecycle sweep first: cancellations/expiries free
+                    # capacity that this iteration's admission plan sees
+                    self.sweep()
+                    if not (self.arrivals or len(self.rq) or self.active):
+                        break
+                    try:
+                        self._step()
+                    except RECOVERABLE_ERRORS as e:
+                        self.recover(e)
+                    if self.on_step_end is not None:
+                        self.on_step_end(self)
             return self.report()
         finally:
             self.tel.stop_profile()
             self.tel.flush()
+
+    def _step(self):
+        """One loop iteration: admissions, then one batched decode/verify.
+        Raising out of here with a RECOVERABLE error leaves no partial
+        state — failed admissions are rolled back to the queue head."""
+        groups = self.sched.plan_admissions()
+        try:
+            # one plan_admissions() batch is ONE admission sync;
+            # only its first group opens the sync in the stream
+            for gi, group in enumerate(groups):
+                self.admit(group, new_sync=(gi == 0))
+        except RECOVERABLE_ERRORS:
+            self._rollback_admissions(groups)
+            raise
+        if not self.active:
+            if not len(self.rq) and self.arrivals:
+                # idle: jump the virtual clock to the next arrival
+                self.now = max(self.now, self.arrivals[0].arrival_time)
+                self.submit_arrivals()
+            return
+        if self.drafter is not None:
+            self.decode_once_spec()
+        else:
+            t_prep = time.perf_counter()
+            slots = self.writable_slots()
+            prepare_s = time.perf_counter() - t_prep
+            if not slots:
+                return
+            self.decode_once(slots, prepare_s=prepare_s)
+        self.submit_arrivals()
+
+    def _rollback_admissions(self, groups: List[List[Request]]):
+        """A recoverable fault escaped mid-admission: return every
+        not-yet-installed request to the queue head (tokens it already
+        emitted ride the replay list), newest last-pushed so the original
+        admission order is preserved."""
+        queued = set(map(id, self.rq.peek()))
+        for group in reversed(groups):
+            for req in reversed(group):
+                if req.state is RequestState.PREFILL:
+                    req.preempt()          # -> WAITING, tokens -> replay
+                    self.rq.push_front(req)
+                elif (req.state is RequestState.WAITING
+                      and id(req) not in queued):
+                    # WAITING but already queued happens when the faulting
+                    # insert preempted a groupmate: preempt() requeued it,
+                    # a second push would double-admit it later
+                    self.rq.push_front(req)
+                # DECODE (already installed) and terminal states stay put
+
+    # -- recovery -----------------------------------------------------------
+
+    def recover(self, error: BaseException):
+        """Rebuild-and-replay after a recoverable step failure: preempt
+        every active request (token-exact replay), rebuild the executor's
+        trace cache and a FRESH backing store, and let the loop re-admit.
+        Past ``max_recoveries`` the loop degrades to failing all in-flight
+        requests so ``serve()`` always returns."""
+        step = int(self.sched.n_decode_steps)
+        site = str(getattr(error, "site", "executor"))
+        if not isinstance(error, InjectedFault):
+            # injected faults were already recorded at fire time; real
+            # failures (StepFault/StepTimeout) get their record here
+            self._emit("fault", step=step, site=site,
+                       error=f"{type(error).__name__}: {error}")
+        self.n_recoveries += 1
+        if self.n_recoveries > self.serve_cfg.max_recoveries:
+            self._fail_inflight(error)
+            return
+        with self.tel.span("recover", site=site):
+            n_requeued = 0
+            while self.active:
+                self.preempt(self.pick_victim())
+                n_requeued += 1
+            self.executor.reset()
+            # degradation ladder: repeated kernel-layer faults fall back
+            # to the XLA oracle backend (correctness over speed)
+            lim = self.serve_cfg.kernel_fault_limit
+            if (lim and self.n_recoveries >= lim
+                    and resolve_matmul_backend(
+                        self.executor.matmul_backend) != "xla"):
+                self.executor.set_matmul_backend("xla")
+                self._emit("degrade", step=step, action="xla_fallback")
+            self.cm = self._build_cm()
+            self.sched.cache_mgr = self.cm
+            self._bind_step_fns()
+        self._emit("recover", step=step, n_requeued=int(n_requeued))
+
+    def _fail_inflight(self, error: BaseException):
+        """Terminal degradation: the recovery budget is spent.  Fail every
+        in-flight request (releasing all slots/blocks) so the loop drains
+        and ``serve()`` returns a report instead of hanging or raising."""
+        self._emit("degrade", step=int(self.sched.n_decode_steps),
+                   action="abort",
+                   error=f"{type(error).__name__}: {error}")
+        for slot in list(self.active):
+            req = self._evict(slot)
+            req.finish(self.now, "failed")
+        for req in self.rq.pop(len(self.rq)):
+            req.finish(self.now, "failed")
+        while self.arrivals:
+            self.arrivals.popleft().finish(self.now, "failed")
 
     def report(self) -> ServeReport:
         """Build the report as a PURE REDUCTION over the step-record stream
@@ -791,8 +1207,17 @@ class ServeLoop:
             peak_active_slots=s.peak_active_slots,
             mesh_shape=(None if mesh is None
                         else tuple(int(d) for d in mesh.devices.shape)),
-            draft=(self.drafter.name if self.drafter is not None
-                   else "none"),
+            # ladder transitions may null the drafter mid-run; the report
+            # names the drafter the run STARTED with
+            draft=self.draft_name,
+            n_cancelled=s.n_cancelled,
+            n_timed_out=s.n_timed_out,
+            n_failed=sum(1 for r in results if r.finish_reason == "failed"),
+            n_faults=s.n_faults,
+            n_injected_faults=s.n_injected_faults,
+            n_retries=s.n_retries,
+            n_degrades=s.n_degrades,
+            n_recoveries=s.n_recoveries,
             drafted_tokens=s.drafted_tokens,
             accepted_tokens=s.accepted_tokens,
             committed_tokens_per_step=s.committed_tokens_per_step,
@@ -833,6 +1258,19 @@ class ServingEngine:
             self.draft_executor = make_executor(draft_cfg, draft_params,
                                                 mesh=executor.mesh)
         self._deployment_cache: Dict[int, Optional[dict]] = {}
+        # request ids queued for cancellation; the serve loop's sweep
+        # drains this set once per iteration (idempotent — unknown or
+        # already-finished ids are ignored)
+        self._pending_cancels: Set[int] = set()
+
+    def cancel(self, request_id: int) -> None:
+        """Request cancellation of an in-flight request.  Applied at the
+        serve loop's next lifecycle sweep: the request reaches the
+        CANCELLED terminal state, its slot and blocks are freed, and a
+        ``cancel`` record lands in the metrics stream.  Safe to call from
+        a ``ServeLoop.on_step_end`` hook or before ``serve()`` starts;
+        cancelling an unknown or finished request is a no-op."""
+        self._pending_cancels.add(int(request_id))
 
     @property
     def params(self):

@@ -69,6 +69,7 @@ class Executor:
     def __init__(self, cfg, params=None,
                  matmul_backend: Optional[str] = None):
         from repro.serving import telemetry as _telemetry
+        from repro.serving import faults as _faults
         self.cfg = cfg
         self.matmul_backend = (getattr(cfg, "matmul_backend", "auto")
                                if matmul_backend is None else matmul_backend)
@@ -76,6 +77,10 @@ class Executor:
         # ``set_telemetry`` so ``put`` transfers count against the run;
         # default is the shared no-op handle (zero overhead)
         self.telemetry = _telemetry.NULL_TELEMETRY
+        # fault-injection handle, threaded exactly like telemetry; checks
+        # fire BEFORE a jit dispatch so an injected fault never consumes
+        # the donated cache (retry-safe by construction)
+        self.faults = _faults.NULL_INJECTOR
         self._params = (self._place_params(params)
                         if params is not None else None)
         self._jits: Dict[tuple, object] = {}
@@ -86,6 +91,25 @@ class Executor:
         from repro.serving import telemetry as _telemetry
         self.telemetry = (telemetry if telemetry is not None
                           else _telemetry.NULL_TELEMETRY)
+
+    def set_faults(self, injector) -> None:
+        """Attach a fault injector (None reverts to the no-op handle)."""
+        from repro.serving import faults as _faults
+        self.faults = (injector if injector is not None
+                       else _faults.NULL_INJECTOR)
+
+    def reset(self) -> None:
+        """Drop every cached jitted entry point (recovery path: after an
+        executor failure the serve loop rebuilds its step functions from a
+        clean trace cache and replays in-flight requests)."""
+        self._jits.clear()
+
+    def set_matmul_backend(self, backend: str) -> None:
+        """Switch the matmul backend (degradation ladder: repeated kernel
+        faults fall back to the XLA oracle) and invalidate every trace
+        compiled under the old one."""
+        self.matmul_backend = backend
+        self._jits.clear()
 
     # -- placement hooks (single-device defaults) ---------------------------
 
@@ -180,6 +204,7 @@ class Executor:
         """Compiled prefill; ``prompt_lens`` selects the ragged right-padded
         variant (per-row last-position logits, pow2 prefill buckets)."""
         self._require_params()
+        self.faults.check("prefill")
         cfg = self.cfg
         if prompt_lens is None:
             fn = self._get(("prefill",), lambda: self._jit(
@@ -217,7 +242,13 @@ class Executor:
             decode = api.decode_step_paged if paged else api.decode_step
 
             def step_fn(p, cache, step, keys, counts):
-                logits, new_cache = decode(p, cfg, dict(step, cache=cache))
+                step = dict(step, cache=cache)
+                # optional fault-injection mask (n_slots,) bool: NaN the
+                # whole logit row for flagged slots (exercises the guard)
+                nan_mask = step.pop("nan_mask", None)
+                logits, new_cache = decode(p, cfg, step)
+                if nan_mask is not None:
+                    logits = jnp.where(nan_mask[:, None], jnp.nan, logits)
                 # pin the output layout to the input layout so the donated
                 # buffer aliases instead of resharding (no-op off-mesh)
                 new_cache = api.shard_cache(cfg, new_cache, paged=paged)
@@ -227,11 +258,18 @@ class Executor:
                     ks = jax.vmap(jax.random.fold_in)(keys, counts)
                     tok = jax.vmap(jax.random.categorical)(
                         ks, logits / temperature)
+                # NaN guard, fused into the step: a non-finite logit row
+                # yields the -1 sentinel (argmax/categorical are always
+                # >= 0) so the loop can fail ONLY the affected slot
+                ok = jnp.isfinite(logits).all(axis=-1)
+                tok = jnp.where(ok, tok, -1)
                 return tok.astype(jnp.int32), new_cache
 
             jitted = self._jit(step_fn, donate_argnums=(1,))
 
             def fn(cache, step, keys, counts):
+                self.faults.check("step")
+                self.faults.delay()
                 return jitted(self._params, cache, step, keys, counts)
 
             fn.lower = lambda cache, step, keys, counts: jitted.lower(
@@ -257,13 +295,24 @@ class Executor:
             verify = api.verify_step_paged if paged else api.verify_step
 
             def step_fn(p, cache, step):
-                logits, new_cache = verify(p, cfg, dict(step, cache=cache))
+                step = dict(step, cache=cache)
+                nan_mask = step.pop("nan_mask", None)
+                logits, new_cache = verify(p, cfg, step)
+                if nan_mask is not None:
+                    logits = jnp.where(nan_mask[:, None, None], jnp.nan,
+                                       logits)
                 new_cache = api.shard_cache(cfg, new_cache, paged=paged)
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+                tok = jnp.argmax(logits, axis=-1)
+                # same -1 sentinel as the decode step, per (slot, position)
+                ok = jnp.isfinite(logits).all(axis=-1)
+                tok = jnp.where(ok, tok, -1)
+                return tok.astype(jnp.int32), new_cache
 
             jitted = self._jit(step_fn, donate_argnums=(1,))
 
             def fn(cache, step):
+                self.faults.check("step")
+                self.faults.delay()
                 return jitted(self._params, cache, step)
 
             fn.lower = lambda cache, step: jitted.lower(self._params, cache,
@@ -331,6 +380,7 @@ class Executor:
         """Install request ``src_index`` of a prefill cache into ``slot`` of
         the pooled cache; the pool buffer is donated (in-place surgery, no
         second pool-sized allocation)."""
+        self.faults.check("oom")
         cfg = self.cfg
         fn = self._get(("slot_insert",), lambda: self._jit(
             lambda pool, src, slot, i: api.shard_cache(
@@ -341,6 +391,7 @@ class Executor:
     def paged_insert(self, pages, src, block_ids, src_index: int = 0):
         """Scatter a prefill cache into physical pages through ``block_ids``
         (trash-redirected entries skip shared blocks); pages donated."""
+        self.faults.check("oom")
         cfg = self.cfg
         fn = self._get(("paged_insert",), lambda: self._jit(
             lambda pages, src, ids, i: api.shard_cache(
@@ -352,6 +403,7 @@ class Executor:
     def copy_block(self, pages, dst: int, src: int):
         """Copy physical page ``src`` -> ``dst`` (copy-on-write); pages
         donated."""
+        self.faults.check("oom")
         cfg = self.cfg
         fn = self._get(("copy_block",), lambda: self._jit(
             lambda pages, dst, src: api.shard_cache(

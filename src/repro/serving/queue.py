@@ -5,7 +5,11 @@ Each request walks a strict state machine
     WAITING -> PREFILL -> DECODE -> DONE
 
 (PREFILL may jump straight to DONE when the first sampled token already
-terminates the request).  The ``RequestQueue`` is the serving analogue of the
+terminates the request).  Three extra terminal states are reachable from
+every non-terminal state — CANCELLED (explicit ``engine.cancel`` or chaos
+injection), TIMED_OUT (per-request ``deadline_s`` / ``ttft_deadline_s``
+wall-clock budgets), FAILED (NaN guard or exhausted recovery) — see
+``docs/robustness.md``.  The ``RequestQueue`` is the serving analogue of the
 quasi-sync array's per-PE operand queue: a bounded FIFO that decouples
 arrivals from the lock-step decode batch.  Submissions beyond ``max_waiting``
 are rejected (admission control) rather than growing latency unboundedly.
@@ -28,21 +32,46 @@ class RequestState(enum.Enum):
     PREFILL = "prefill"
     DECODE = "decode"
     DONE = "done"
+    CANCELLED = "cancelled"
+    TIMED_OUT = "timed_out"
+    FAILED = "failed"
 
+
+#: terminal states a request may be evicted into from any live state
+_TERMINAL = {RequestState.DONE, RequestState.CANCELLED,
+             RequestState.TIMED_OUT, RequestState.FAILED}
 
 _ALLOWED = {
-    RequestState.WAITING: {RequestState.PREFILL, RequestState.DONE},
-    RequestState.PREFILL: {RequestState.DECODE, RequestState.DONE},
+    RequestState.WAITING: {RequestState.PREFILL} | _TERMINAL,
+    # PREFILL -> WAITING is the admission-failure rollback: a fault while
+    # installing the group requeues the request for a token-exact replay
+    RequestState.PREFILL: {RequestState.DECODE, RequestState.WAITING}
+                          | _TERMINAL,
     # DECODE -> WAITING is preemption: the paged backend reclaims the
     # request's blocks and requeues it for a token-exact replay
-    RequestState.DECODE: {RequestState.DONE, RequestState.WAITING},
+    RequestState.DECODE: {RequestState.WAITING} | _TERMINAL,
     RequestState.DONE: set(),
+    RequestState.CANCELLED: set(),
+    RequestState.TIMED_OUT: set(),
+    RequestState.FAILED: set(),
+}
+
+#: finish_reason -> terminal state (anything else, e.g. "eos" / "length"
+#: / "rejected", lands in DONE)
+_REASON_STATE = {
+    "cancelled": RequestState.CANCELLED,
+    "timeout": RequestState.TIMED_OUT,
+    "failed": RequestState.FAILED,
 }
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
     """One generation request plus its lifecycle bookkeeping.
+
+    ``eq=False``: requests compare (and hash) by IDENTITY.  The generated
+    field-wise ``__eq__`` would compare numpy prompts elementwise and
+    break every ``in`` / ``remove`` the queues and sweeps rely on.
 
     Times are in scheduler-clock units (decode steps) so that runs are
     deterministic and replayable; wall-clock throughput is measured by the
@@ -60,7 +89,13 @@ class Request:
     admitted_at: Optional[float] = None      # prefill (admission sync) time
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
-    finish_reason: Optional[str] = None      # "eos" | "length" | "rejected"
+    # "eos" | "length" | "rejected" | "cancelled" | "timeout" | "failed"
+    finish_reason: Optional[str] = None
+    # wall-clock budgets, measured from wall_submitted_at (None = no
+    # budget): total completion deadline, and a tighter first-token
+    # deadline that only applies while the request is still waiting
+    deadline_s: Optional[float] = None
+    ttft_deadline_s: Optional[float] = None
     # tokens generated before a preemption, re-emitted verbatim on replay
     # (the engine forces them over the resampled ones, so a preempted
     # request finishes with exactly the tokens it would have produced)
@@ -101,8 +136,12 @@ class Request:
                 f"{self.state.value} -> {new_state.value}")
         self.state = new_state
 
+    @property
+    def is_terminal(self) -> bool:
+        return self.state in _TERMINAL
+
     def finish(self, now: float, reason: str):
-        self.transition(RequestState.DONE)
+        self.transition(_REASON_STATE.get(reason, RequestState.DONE))
         self.finished_at = now
         self.finish_reason = reason
         self.slot = None
@@ -149,6 +188,15 @@ class RequestQueue:
             raise ValueError(
                 f"cannot requeue request in state {request.state}")
         self._waiting.insert(0, request)
+
+    def remove(self, request: Request) -> bool:
+        """Drop one waiting request (cancellation / deadline sweep);
+        returns False when it is not queued."""
+        try:
+            self._waiting.remove(request)
+            return True
+        except ValueError:
+            return False
 
     def reject(self, request: Request, now: float):
         """Mark a request rejected (admission control) and count it."""

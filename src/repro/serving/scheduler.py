@@ -129,6 +129,12 @@ class QuasiSyncScheduler:
                 out.append(reqs[i:i + self.cfg.max_prefill_batch])
         return out
 
+    def set_lead_window(self, lead_window: int) -> None:
+        """Shrink/grow E at runtime (degradation ladder: sustained pool
+        pressure trades admission fusion for fewer preemptions)."""
+        self.cfg = dataclasses.replace(self.cfg,
+                                       lead_window=max(int(lead_window), 0))
+
     # -- metrics ------------------------------------------------------------
 
     def observe_decode_step(self, n_committed: Optional[int] = None):

@@ -49,6 +49,8 @@ from typing import Dict, Optional
 import numpy as np
 import jax.numpy as jnp
 
+from repro.serving.faults import NULL_INJECTOR
+
 
 class Drafter:
     """Per-slot draft-token proposer driven by the ``ServeLoop``.
@@ -62,6 +64,11 @@ class Drafter:
     """
 
     name = "none"
+    # fault-injection handle (threaded by the serve loop like telemetry);
+    # ``propose_all`` implementations check the "drafter" site on entry —
+    # the loop catches the raised ``DrafterFault`` and falls back to a
+    # plain decode step (degrading to no speculation after repeats)
+    faults = NULL_INJECTOR
 
     def propose_all(self, requests: Dict[int, object],
                     caps: Dict[int, int]) -> Dict[int, np.ndarray]:
@@ -121,6 +128,7 @@ class PromptLookupDrafter(Drafter):
         return np.zeros(0, np.int32)
 
     def propose_all(self, requests, caps):
+        self.faults.check("drafter")
         return {slot: self._lookup(_context(req),
                                    min(self.k, caps.get(slot, self.k)))
                 for slot, req in requests.items()}
@@ -208,6 +216,7 @@ class ModelDrafter(Drafter):
     # -- drafting -----------------------------------------------------------
 
     def propose_all(self, requests, caps):
+        self.faults.check("drafter")
         slots = list(requests.keys())
         if not slots:
             return {}

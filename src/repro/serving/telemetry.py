@@ -68,6 +68,16 @@ STEP_SCHEMA: Dict[str, set] = {
     "preempt": {"schema", "kind", "ts_s", "step", "slot", "request_id",
                 "discarded_tokens"},
     "reject": {"schema", "kind", "ts_s", "step", "request_id"},
+    # robustness records (additive, schema stays v1): lifecycle evictions,
+    # fault-injection / fault-detection events, and recovery transitions —
+    # see docs/robustness.md for the taxonomy
+    "cancel": {"schema", "kind", "ts_s", "step", "request_id", "where"},
+    "timeout": {"schema", "kind", "ts_s", "step", "request_id", "where",
+                "deadline"},
+    "fault": {"schema", "kind", "ts_s", "step", "site"},
+    "retry": {"schema", "kind", "ts_s", "step", "site", "attempt"},
+    "degrade": {"schema", "kind", "ts_s", "step", "action"},
+    "recover": {"schema", "kind", "ts_s", "step", "n_requeued"},
 }
 
 
@@ -102,7 +112,12 @@ NULL_SPAN = _NullSpan()
 class MetricsLogger:
     """Append-only JSONL sink: one line per record, flushed per write so a
     crashed run still leaves a readable stream.  Dependency-free by
-    design (the ROADMAP's 'wandblog in spirit, local JSONL sink')."""
+    design (the ROADMAP's 'wandblog in spirit, local JSONL sink').
+
+    Also a context manager: ``with MetricsLogger(p) as m: ...`` flushes
+    and closes on exit — including on an exception mid-serve, so a crash
+    never truncates the stream mid-record (each ``log`` writes one full
+    line and flushes before returning)."""
 
     def __init__(self, path: str):
         self.path = path
@@ -117,7 +132,15 @@ class MetricsLogger:
 
     def close(self):
         if not self._f.closed:
+            self._f.flush()
             self._f.close()
+
+    def __enter__(self) -> "MetricsLogger":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
 
 class Tracer:
@@ -272,6 +295,13 @@ class Telemetry:
         if self.metrics is not None:
             self.metrics.close()
 
+    def __enter__(self) -> "Telemetry":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
 
 #: Shared disabled handle for components constructed without one (direct
 #: cache-manager / executor construction in tests).  Its counters are a
@@ -309,6 +339,15 @@ class StreamSummary:
     peak_blocks_in_use: int = 0
     h2d_bytes: int = 0
     d2h_bytes: int = 0
+    # robustness counters (cancel / timeout / fault / retry / degrade /
+    # recover records)
+    n_cancelled: int = 0
+    n_timed_out: int = 0
+    n_faults: int = 0                 # fault records (injected + detected)
+    n_injected_faults: int = 0        # fault records with injected=True
+    n_retries: int = 0
+    n_degrades: int = 0
+    n_recoveries: int = 0
 
 
 def reduce_stream(records) -> StreamSummary:
@@ -346,6 +385,26 @@ def reduce_stream(records) -> StreamSummary:
             continue
         elif kind == "reject":
             s.n_rejected += 1
+            continue
+        elif kind == "cancel":
+            s.n_cancelled += 1
+            continue
+        elif kind == "timeout":
+            s.n_timed_out += 1
+            continue
+        elif kind == "fault":
+            s.n_faults += 1
+            if r.get("injected"):
+                s.n_injected_faults += 1
+            continue
+        elif kind == "retry":
+            s.n_retries += 1
+            continue
+        elif kind == "degrade":
+            s.n_degrades += 1
+            continue
+        elif kind == "recover":
+            s.n_recoveries += 1
             continue
         else:
             continue

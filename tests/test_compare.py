@@ -97,6 +97,35 @@ class TestComparePayloads:
         assert regs == [] and any("SKIP" in n for n in notes)
         assert fingerprint(cur) is None
 
+    def test_nan_current_is_a_regression_not_ok(self):
+        # NaN compares False against any threshold: without the explicit
+        # guard a NaN'd metric would print "ok" and pass the gate
+        regs, _ = compare_payloads(_artifact(per_step_ms=2.0),
+                                   _artifact(per_step_ms=float("nan")),
+                                   0.15)
+        assert regs and all("not finite" in r for r in regs)
+        regs, _ = compare_payloads(_artifact(tokens_per_s=500.0),
+                                   _artifact(tokens_per_s=float("inf")),
+                                   0.15)
+        assert regs                      # inf current is flagged too
+
+    def test_zero_or_nan_baseline_skips_with_a_note(self):
+        regs, notes = compare_payloads(_artifact(per_step_ms=0.0),
+                                       _artifact(per_step_ms=5.0), 0.15)
+        assert regs == []
+        assert any("SKIP" in n and "not a positive finite" in n
+                   for n in notes)
+        regs, notes = compare_payloads(_artifact(per_step_ms=float("nan")),
+                                       _artifact(per_step_ms=5.0), 0.15)
+        assert regs == []
+        assert any("SKIP" in n for n in notes)
+
+    def test_negative_baseline_skips(self):
+        regs, notes = compare_payloads(_artifact(tokens_per_s=-1.0),
+                                       _artifact(tokens_per_s=1.0), 0.15)
+        assert regs == []
+        assert any("SKIP" in n for n in notes)
+
 
 class TestMainExitCodes:
     def test_regression_exits_1(self, tmp_path):

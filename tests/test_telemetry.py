@@ -246,6 +246,48 @@ class TestReportReduction:
 # Disabled handle: strict no-op, no allocation in the hot path
 # ---------------------------------------------------------------------------
 
+class TestContextManager:
+    def test_metrics_logger_flushes_on_exception(self, tmp_path):
+        from repro.serving import MetricsLogger
+        path = str(tmp_path / "m.jsonl")
+        with pytest.raises(RuntimeError, match="boom"):
+            with MetricsLogger(path) as sink:
+                sink.log({"kind": "x", "v": 1})
+                raise RuntimeError("boom")
+        # the record written before the crash is durable and parseable
+        assert read_jsonl(path) == [{"kind": "x", "v": 1}]
+
+    def test_killed_serve_leaves_parseable_stream(self, tmp_path):
+        """Kill a serve mid-step; the telemetry context manager must
+        flush/close the sinks so every record written so far re-parses."""
+        cfg = _dense_cfg()
+
+        class Boom(Exception):
+            pass
+
+        def kill(loop):
+            if loop.sched.n_decode_steps >= 2:
+                raise Boom()
+
+        path = tmp_path / "metrics.jsonl"
+        with pytest.raises(Boom):
+            with Telemetry(metrics_path=str(path)) as tel:
+                eng = _engine(cfg, telemetry=tel)
+                reqs = [Request(prompt=p, max_new_tokens=8,
+                                arrival_time=0.0)
+                        for p in _prompts(cfg, 3, 5)]
+                loop = eng.make_loop(reqs, n_slots=2)
+                loop.on_step_end = kill
+                loop.run()
+        records = read_jsonl(str(path))
+        assert records, "no records survived the mid-serve kill"
+        for r in records:
+            assert STEP_SCHEMA[r["kind"]] <= set(r)
+        # the partial stream still reduces (crash-forensics entry point)
+        s = reduce_stream(records)
+        assert s.steps >= 2
+
+
 class TestDisabledTelemetry:
     def test_null_span_is_shared_singleton(self):
         tel = Telemetry()
