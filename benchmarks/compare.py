@@ -5,10 +5,11 @@ Usage::
     python benchmarks/compare.py PREVIOUS CURRENT [--threshold 0.15]
 
 ``PREVIOUS``/``CURRENT`` are either two BENCH_*.json files or two
-directories of them (matched by filename).  Every numeric value whose key
-ends in ``per_step_ms`` (lower is better) or ``tokens_per_s`` (higher is
-better) — at any nesting depth — is compared; a relative change past the
-threshold in the bad direction fails the gate (exit 1).
+directories of them (matched by filename).  Every numeric value whose
+full dotted key ends in a registered metric suffix — ``per_step_ms``,
+``per_step_ms.p50/p90/p99`` (lower is better) or ``tokens_per_s`` (higher
+is better) — at any nesting depth — is compared; a relative change past
+the threshold in the bad direction fails the gate (exit 1).
 
 Provenance rules (the ``_meta`` block stamped by ``benchmarks/common.py``):
 
@@ -34,11 +35,27 @@ from typing import Dict, List, Optional, Tuple
 
 DEFAULT_THRESHOLD = 0.15
 
-#: metric-key suffix -> direction ("lower" / "higher" is better)
+#: metric-key suffix -> direction ("lower" / "higher" is better).
+#: Suffixes match against the FULL dotted key, so multi-segment suffixes
+#: like ``per_step_ms.p99`` gate nested percentile blocks while bare
+#: ``per_step_ms`` still gates scalar step times (a percentile leaf like
+#: ``...per_step_ms.p99`` does NOT end in ``per_step_ms``, so the two
+#: entries never double-count one value).
 METRIC_SUFFIXES = {
     "per_step_ms": "lower",
+    "per_step_ms.p50": "lower",
+    "per_step_ms.p90": "lower",
+    "per_step_ms.p99": "lower",
     "tokens_per_s": "higher",
 }
+
+
+def metric_direction(key: str) -> Optional[str]:
+    """Direction for a flattened metric key, or None if not gated."""
+    for suffix, direction in METRIC_SUFFIXES.items():
+        if key.endswith(suffix):
+            return direction
+    return None
 
 #: _meta fields that must match for a comparison to be meaningful
 #: (hostname stays out: ephemeral CI runners rename per run)
@@ -58,11 +75,8 @@ def collect_metrics(node, prefix: str = "") -> Dict[str, float]:
             out.update(collect_metrics(v, f"{prefix}{i}."))
     elif isinstance(node, (int, float)) and not isinstance(node, bool):
         key = prefix[:-1]
-        leaf = key.rsplit(".", 1)[-1]
-        for suffix in METRIC_SUFFIXES:
-            if leaf.endswith(suffix):
-                out[key] = float(node)
-                break
+        if metric_direction(key) is not None:
+            out[key] = float(node)
     return out
 
 
@@ -96,9 +110,7 @@ def compare_payloads(prev: dict, cur: dict, threshold: float,
         return regressions, notes
     for key in shared:
         p, c = prev_m[key], cur_m[key]
-        leaf = key.rsplit(".", 1)[-1]
-        direction = next(d for s, d in METRIC_SUFFIXES.items()
-                         if leaf.endswith(s))
+        direction = metric_direction(key)
         if not math.isfinite(c):
             # NaN compares False against every threshold — without this
             # guard a NaN'd current metric would sail through as "ok"

@@ -1,0 +1,260 @@
+"""Production-mix serving benchmark: the full observability stack under a
+realistic multi-tenant load, gated on step-time percentiles.
+
+Three tenants share per-tenant system prompts (exercising the paged
+backend's prefix-sharing trie), user suffixes mix short / medium / long
+prompts (exercising ragged grouped prefill), arrivals are Poisson, and the
+serve runs with prompt-lookup speculation, full telemetry (metrics JSONL +
+Chrome trace), and the hardware-cost ``SparsityProbe`` enabled — i.e. the
+production configuration, not the stripped-down fast path.
+
+The artifact (``BENCH_production_mix.json``) carries ``per_step_ms``
+{p50, p90, p99} pooled over decode+verify steps and ``tokens_per_s`` —
+both gated by ``benchmarks/compare.py`` — plus the run's measured-traffic
+hardware estimate (mean bit sparsity, modeled cycles/MAC per method,
+array utilization, Table III energy).
+
+    PYTHONPATH=src python benchmarks/production_mix.py [--tiny]
+    PYTHONPATH=src python benchmarks/production_mix.py --telemetry DIR
+
+``--telemetry DIR`` keeps the run's metrics JSONL + trace + sparsity
+profile under DIR (CI uploads them as artifacts); without it they land in
+a temp dir used only to compute the percentiles.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+
+import numpy as np
+import jax
+
+if __package__ in (None, ""):  # ran as a script: make `benchmarks.` importable
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+
+def _poisson_arrivals(rng, n: int, rate: float) -> np.ndarray:
+    """Arrival times (decode-step clock) of a Poisson process with ``rate``
+    requests per decode step."""
+    gaps = rng.exponential(1.0 / rate, size=n)
+    return np.cumsum(gaps)
+
+
+def run(tiny: bool = False, seed: int = 0, probe_every: int = 2,
+        n_slots: int = None, n_requests: int = None, rate: float = 0.7,
+        block_size: int = 8, telemetry_dir: str = None):
+    import dataclasses
+    import json
+
+    from repro.configs.base import get_arch
+    from repro.models import api
+    from repro.serving import (Request, SchedulerConfig, ServeConfig,
+                               ServingEngine, SparsityProbe, Telemetry,
+                               percentiles, read_jsonl, reduce_stream)
+
+    if n_slots is None:
+        n_slots = 3 if tiny else 6
+    if n_requests is None:
+        n_requests = 6 if tiny else 24
+    n_tenants = 3
+    sys_len = 8 if tiny else 16          # shared per-tenant system prompt
+    # mixed prompt lengths: user suffixes drawn from three tiers
+    tiers = (2, 4, 6) if tiny else (4, 12, 24)
+    max_new_hi = 6 if tiny else 16
+    margin = 4
+
+    cfg = get_arch("qwen2-1.5b").reduced().replace(
+        num_layers=2 if tiny else 4, d_model=64 if tiny else 128,
+        d_ff=128 if tiny else 256, vocab_size=256, head_dim=16,
+        matmul_mode="bp_exact")   # int8 dual factors: what the probe taps
+    params = api.init(jax.random.PRNGKey(0), cfg)
+
+    rng = np.random.default_rng(seed)
+    sys_prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (n_tenants, sys_len), 2,
+                           cfg.vocab_size), np.int32)
+    # a short per-tenant phrase repeated inside every suffix gives the
+    # prompt-lookup n-gram drafter something to actually match
+    phrases = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(2), (n_tenants, 3), 2,
+                           cfg.vocab_size), np.int32)
+    tenants = rng.integers(0, n_tenants, size=n_requests)
+    suffix_lens = rng.choice(tiers, size=n_requests)
+    prompts = []
+    for i in range(n_requests):
+        t = int(tenants[i])
+        uniq = rng.integers(2, cfg.vocab_size, size=int(suffix_lens[i]))
+        prompts.append(np.concatenate(
+            [sys_prompts[t], phrases[t], uniq.astype(np.int32),
+             phrases[t]]).astype(np.int32))
+    max_news = rng.integers(2, max_new_hi + 1, size=n_requests).tolist()
+    arrivals = _poisson_arrivals(rng, n_requests, rate)
+
+    max_prompt = max(len(p) for p in prompts)
+    cache_T = max_prompt + max_new_hi + margin
+    # generous pool: this benchmark measures the instrumented steady state,
+    # not preemption churn (paged_memory covers pool pressure)
+    num_blocks = 1 + (n_slots + 2) * cache_T // block_size
+
+    def reqs():
+        return [Request(prompt=prompts[i], max_new_tokens=int(max_news[i]),
+                        arrival_time=float(arrivals[i]))
+                for i in range(n_requests)]
+
+    sched = SchedulerConfig(lead_window=3)
+    probe = SparsityProbe(probe_every=probe_every)
+    engine = ServingEngine(cfg, params, ServeConfig(
+        max_new_tokens=max_new_hi, temperature=0.0,
+        cache_backend="paged", block_size=block_size,
+        draft="prompt_lookup", num_draft_tokens=3, probe=probe))
+
+    # warmup with the probe already attached: compiles the probed step-fn
+    # variants AND builds the host-side Monte-Carlo interpolation tables,
+    # so the timed run measures the instrumented steady state
+    engine.serve(reqs()[:2], n_slots=n_slots, cache_T=cache_T,
+                 num_blocks=num_blocks, sched_cfg=sched)
+
+    own_tmp = None
+    if telemetry_dir is None:
+        own_tmp = tempfile.TemporaryDirectory(prefix="production_mix_")
+        telemetry_dir = own_tmp.name
+        keep_paths = False
+    else:
+        keep_paths = True
+    metrics_path = os.path.join(telemetry_dir, "production_mix_metrics.jsonl")
+    trace_path = os.path.join(telemetry_dir, "production_mix_trace.json")
+    profile_path = os.path.join(telemetry_dir, "sparsity_profile.json")
+
+    tel = Telemetry(metrics_path=metrics_path, trace_path=trace_path)
+    saved_cfg = engine.serve_cfg
+    engine.serve_cfg = dataclasses.replace(saved_cfg, telemetry=tel)
+    try:
+        report = engine.serve(reqs(), n_slots=n_slots, cache_T=cache_T,
+                              num_blocks=num_blocks, sched_cfg=sched)
+    finally:
+        engine.serve_cfg = saved_cfg
+        tel.close()
+
+    records = read_jsonl(metrics_path)
+    step_ms = [1e3 * r["wall_s"] for r in records
+               if r.get("kind") in ("decode", "verify")]
+    prefill_ms = [1e3 * r["wall_s"] for r in records
+                  if r.get("kind") == "prefill"]
+    summary = reduce_stream(records)
+
+    # greedy identity vs the plain fast path: slab backend, no speculation,
+    # no probe, no telemetry — the production mix must not change tokens
+    plain = ServingEngine(cfg, params, ServeConfig(
+        max_new_tokens=max_new_hi, temperature=0.0))
+    base = plain.serve(reqs(), n_slots=n_slots, cache_T=cache_T,
+                       sched_cfg=sched)
+    mismatches = 0
+    for a, b in zip(sorted(report.results, key=lambda r: r.request_id),
+                    sorted(base.results, key=lambda r: r.request_id)):
+        if (len(a.tokens) != len(b.tokens)
+                or (np.asarray(a.tokens) != np.asarray(b.tokens)).any()):
+            mismatches += 1
+
+    if keep_paths:
+        with open(profile_path, "w") as f:
+            json.dump({"weights": engine.weight_sparsity_profile(),
+                       "measured": report.hw_measured}, f, indent=2,
+                      default=float)
+
+    result = {
+        "n_requests": n_requests,
+        "n_tenants": n_tenants,
+        "n_slots": n_slots,
+        "probe_every": probe_every,
+        "block_size": block_size,
+        "arrival_rate_per_step": rate,
+        "prompt_len_min": int(min(len(p) for p in prompts)),
+        "prompt_len_max": int(max_prompt),
+        # gated: suffix-matched by benchmarks/compare.py
+        "per_step_ms": percentiles(step_ms),
+        "tokens_per_s": report.decode_tokens_per_s,
+        # informative (not gated)
+        "prefill_ms_pcts": percentiles(prefill_ms),
+        "decode_steps": int(report.steps),
+        "n_syncs": int(report.n_syncs),
+        "prefix_hit_blocks": int(report.prefix_hit_blocks),
+        "drafted_tokens": int(report.drafted_tokens),
+        "accepted_tokens": int(report.accepted_tokens),
+        "acceptance_rate": (report.accepted_tokens
+                            / max(report.drafted_tokens, 1)),
+        "n_hw_samples": int(summary.n_hw_samples),
+        "hw_measured": report.hw_measured,
+        "token_mismatches": mismatches,
+    }
+    if keep_paths:
+        result["telemetry_metrics"] = metrics_path
+        result["telemetry_trace"] = trace_path
+        result["sparsity_profile"] = profile_path
+    if own_tmp is not None:
+        own_tmp.cleanup()
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke size (seconds, not minutes)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--probe-every", type=int, default=2,
+                    help="sample every k-th decode/verify step (0 = off)")
+    ap.add_argument("--slots", type=int, default=None)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=0.7,
+                    help="Poisson arrivals per decode step")
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--telemetry", metavar="DIR", default=None,
+                    help="keep metrics JSONL + trace + sparsity profile "
+                         "under DIR (otherwise a temp dir is used)")
+    args = ap.parse_args(argv)
+
+    r = run(tiny=args.tiny, seed=args.seed, probe_every=args.probe_every,
+            n_slots=args.slots, n_requests=args.requests, rate=args.rate,
+            block_size=args.block_size, telemetry_dir=args.telemetry)
+
+    from benchmarks.common import save_artifact
+    path = save_artifact("BENCH_production_mix", r)
+
+    p = r["per_step_ms"] or {}
+    print(f"requests={r['n_requests']} tenants={r['n_tenants']} "
+          f"slots={r['n_slots']} rate={r['arrival_rate_per_step']}/step "
+          f"prompts={r['prompt_len_min']}..{r['prompt_len_max']} tokens")
+    print(f"steps: {r['decode_steps']} decode+verify, per-step ms "
+          f"p50={p.get('p50', float('nan')):.2f} "
+          f"p90={p.get('p90', float('nan')):.2f} "
+          f"p99={p.get('p99', float('nan')):.2f}   "
+          f"{r['tokens_per_s']:.1f} tok/s")
+    print(f"speculation: {r['accepted_tokens']}/{r['drafted_tokens']} "
+          f"drafts accepted ({r['acceptance_rate']*100:.0f}%)   "
+          f"prefix hits: {r['prefix_hit_blocks']} blocks")
+    hw = r["hw_measured"]
+    if hw:
+        cyc = hw["cycles"]
+        print(f"hw probe: {r['n_hw_samples']} samples, "
+              f"act_bs={hw['act_bit_sparsity']:.3f} "
+              f"w_bs={hw['weight_bit_sparsity']:.3f} "
+              f"util={hw['array_utilization']:.3f}, cycles/MAC "
+              f"bp_exact={cyc['bp_exact']:.2f} "
+              f"bp_approx={cyc['bp_approx']:.2f} "
+              f"adas={cyc['adas']:.2f} bitwave={cyc['bitwave']:.2f}")
+    if r.get("telemetry_metrics"):
+        print(f"telemetry: {r['telemetry_metrics']} + "
+              f"{r['telemetry_trace']} + {r['sparsity_profile']}")
+    print(f"artifact: {path}")
+    if r["token_mismatches"]:
+        print("ERROR: production mix diverged from plain greedy outputs",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

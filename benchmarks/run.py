@@ -50,6 +50,10 @@ BENCHMARKS = [
      lambda r: f"model_step_reduction={r['model_step_reduction']:.2f}x;"
                f"pl_accept={r['prompt_lookup_acceptance_rate']:.2f};"
                f"mismatches={r['token_mismatches']}"),
+    ("production_mix", "benchmarks.production_mix",
+     lambda r: f"p99_ms={r['per_step_ms']['p99']:.2f};"
+               f"hw_samples={r['n_hw_samples']};"
+               f"mismatches={r['token_mismatches']}"),
     ("chaos_smoke", "benchmarks.chaos_smoke",
      lambda r: f"injected={r['n_injected_faults']};"
                f"recoveries={r['n_recoveries']};"

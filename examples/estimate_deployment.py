@@ -4,9 +4,19 @@ vs-AdaS / vs-BitWave comparison (the paper's evaluation flow applied to an
 LM from this repo's zoo).
 
     PYTHONPATH=src python examples/estimate_deployment.py [--arch qwen2-1.5b]
+    PYTHONPATH=src python examples/estimate_deployment.py --measured run.jsonl
+
+``--measured`` switches from the synthetic single-forward estimate to the
+``hw_estimate`` records a probed serve wrote (``serve_lm.py --probe K
+--metrics run.jsonl`` or ``benchmarks/production_mix.py --telemetry DIR``):
+it averages the measured-traffic modeled cycles and prints them against the
+cited Table III ladder interpolated at the same operating point, so the
+delta shows how far live-traffic sparsity sits from the paper's benchmark
+conditions.
 """
 
 import argparse
+import sys
 
 import numpy as np
 import jax
@@ -18,10 +28,61 @@ from repro.core import quant, sparsity
 from repro.models import api
 
 
+def measured_report(path: str) -> int:
+    from repro.serving import PROBE_METHODS, read_jsonl
+
+    recs = [r for r in read_jsonl(path) if r.get("kind") == "hw_estimate"]
+    if not recs:
+        print(f"estimate_deployment: no hw_estimate records in {path} "
+              f"(serve with a SparsityProbe attached, e.g. "
+              f"serve_lm.py --probe 2 --metrics {path})", file=sys.stderr)
+        return 1
+    n = len(recs)
+    phases = sorted({r["phase"] for r in recs})
+    act_bs = float(np.mean([r["act_bit_sparsity"] for r in recs]))
+    act_vs = float(np.mean([r["act_value_sparsity"] for r in recs]))
+    w_bs = float(np.mean([r["weight_bit_sparsity"] for r in recs]))
+    util = float(np.mean([r["array_utilization"] for r in recs]))
+    per_layer = np.mean([r["per_layer_act_bit_sparsity"] for r in recs],
+                        axis=0)
+
+    print(f"measured-traffic deployment estimate: {n} sampled steps "
+          f"({'/'.join(phases)}) from {path}")
+    print(f"  activation bit sparsity {act_bs:.3f} "
+          f"(value {act_vs:.3f}), weight bit sparsity {w_bs:.3f}, "
+          f"modeled array utilization {util:.3f}")
+    print("  per-layer activation bit sparsity: "
+          + " ".join(f"{v:.3f}" for v in per_layer))
+
+    # the cited ladder is indexed by one shared sparsity level -> interpolate
+    # at the measured operating point (mean of the two factors' sparsity,
+    # the same rule SparsityProbe.fold uses for energy)
+    op_bs = 0.5 * (act_bs + w_bs)
+    levels = np.asarray(cm.SPARSITY_LEVELS)
+    print(f"\n  {'unit':10s} {'measured':>9s} {'tableIII':>9s} "
+          f"{'delta':>7s}   {'pJ/MAC':>7s}  (table interpolated at "
+          f"bs={op_bs:.3f})")
+    for m in PROBE_METHODS:
+        meas = float(np.mean([r["cycles"][m] for r in recs]))
+        table = float(np.interp(op_bs, levels,
+                                np.asarray(cm.PAPER_AVG_CYCLES[m])))
+        pj = float(np.mean([r["mac_energy_pj"][m] for r in recs]))
+        print(f"  {m:10s} {meas:9.2f} {table:9.2f} "
+              f"{(meas - table) / table * 100:+6.1f}%   {pj:7.2f}")
+    print("\n  deltas reflect live-traffic sparsity (and the wider "
+          "interpolation grid), not a change in the cost model itself")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--measured", default=None, metavar="JSONL",
+                    help="aggregate the hw_estimate records of a probed "
+                         "serve instead of the synthetic estimate")
     args = ap.parse_args()
+    if args.measured:
+        sys.exit(measured_report(args.measured))
 
     cfg = get_arch(args.arch).reduced()
     params = api.init(jax.random.PRNGKey(0), cfg)

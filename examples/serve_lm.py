@@ -10,6 +10,8 @@ KV cache, served by the quasi-sync continuous-batching engine.
         --num-draft-tokens 4                  # speculative decoding
     PYTHONPATH=src python examples/serve_lm.py \
         --metrics run.jsonl --trace trace.json   # observability sinks
+    PYTHONPATH=src python examples/serve_lm.py --probe 2 \
+        --metrics run.jsonl   # measured bit-sparsity -> hw_estimate records
 """
 
 import argparse
@@ -54,7 +56,7 @@ from repro.configs.base import get_arch
 from repro.models import api
 from repro.models.layers import quantize_dense_params
 from repro.serving import (Request, SchedulerConfig, ServeConfig,
-                           ServingEngine, Telemetry)
+                           ServingEngine, SparsityProbe, Telemetry)
 
 
 def main():
@@ -99,6 +101,11 @@ def main():
     ap.add_argument("--profile-dir", default=None, metavar="DIR",
                     help="capture a jax.profiler device trace into DIR "
                          "(view with tensorboard or perfetto)")
+    ap.add_argument("--probe", type=int, default=0, metavar="K",
+                    help="sample measured activation bit sparsity every "
+                         "K-th decode step (0 = off) and fold it through "
+                         "the paper's cost models — needs a bp_* --mode; "
+                         "emits hw_estimate records when --metrics is set")
     args = ap.parse_args()
     mesh_shape = _MESH     # parsed+validated pre-import (sets XLA_FLAGS)
     if args.draft != "none" and args.temperature > 0:
@@ -128,6 +135,13 @@ def main():
         if args.mode != "bf16":
             draft_params = quantize_dense_params(draft_params)
 
+    probe = None
+    if args.probe > 0:
+        if args.mode == "bf16":
+            sys.exit("serve_lm: --probe taps int8 operands; use a bp_* "
+                     "--mode")
+        probe = SparsityProbe(probe_every=args.probe)
+
     engine = ServingEngine(cfg, params,
                            ServeConfig(max_new_tokens=args.tokens,
                                        temperature=args.temperature,
@@ -135,7 +149,8 @@ def main():
                                        block_size=args.block_size,
                                        mesh_shape=mesh_shape,
                                        draft=args.draft,
-                                       num_draft_tokens=args.num_draft_tokens),
+                                       num_draft_tokens=args.num_draft_tokens,
+                                       probe=probe),
                            draft_cfg=draft_cfg, draft_params=draft_params)
     if mesh_shape is not None:
         print(f"mesh executor: {mesh_shape[0]}x{mesh_shape[1]} "
@@ -224,6 +239,21 @@ def main():
             print(f"    {name}: bs={e['bit_sparsity']:.3f} "
                   f"cycles={e['avg_cycles_per_mac']:.2f} "
                   f"energy={e['mac_energy_pj']:.2f} pJ")
+
+    # ---- measured-traffic hardware estimate (--probe) ---------------------
+    if report.hw_measured is not None:
+        hw = report.hw_measured
+        print(f"\nmeasured-traffic hardware estimate "
+              f"({hw['n_samples']} sampled steps, every "
+              f"{hw['probe_every']}):")
+        print(f"  activation bit sparsity {hw['act_bit_sparsity']:.3f} "
+              f"(value {hw['act_value_sparsity']:.3f}), weight bit "
+              f"sparsity {hw['weight_bit_sparsity']:.3f}")
+        print(f"  modeled array utilization "
+              f"{hw['array_utilization']:.3f}")
+        for m in sorted(hw["cycles"]):
+            print(f"    {m}: {hw['cycles'][m]:.2f} cycles/MAC, "
+                  f"{hw['mac_energy_pj'][m]:.2f} pJ/MAC")
 
 
 if __name__ == "__main__":

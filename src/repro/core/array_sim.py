@@ -61,18 +61,23 @@ class SimResult:
 
 def build_op_costs(key, cfg: ArrayConfig, n_steps: int, bit_sparsity: float,
                    w_value_sparsity: float = 0.0,
-                   a_value_sparsity: float = 0.0) -> np.ndarray:
+                   a_value_sparsity: float = 0.0,
+                   a_bit_sparsity: Optional[float] = None) -> np.ndarray:
     """Per-(row, col, step) MAC cycle costs from the paper's data generator.
 
     Weights: (R, S) shared across columns.  Activations: (C, S + R - 1);
     the activation consumed by PE (r, c) at column-step s entered at step
     s - r (pipeline skew), giving the in-column reuse correlation.
+    ``a_bit_sparsity`` lets the activation factor carry its own (measured)
+    bit sparsity; it defaults to the weight-side ``bit_sparsity``.
     """
     kw, ka = jax.random.split(key)
     w = sample_with_bit_sparsity(kw, (cfg.rows, n_steps), bit_sparsity,
                                  w_value_sparsity)
-    a = sample_with_bit_sparsity(ka, (cfg.cols, n_steps + cfg.rows - 1),
-                                 bit_sparsity, a_value_sparsity)
+    a = sample_with_bit_sparsity(
+        ka, (cfg.cols, n_steps + cfg.rows - 1),
+        bit_sparsity if a_bit_sparsity is None else a_bit_sparsity,
+        a_value_sparsity)
     # a_used[r, c, s] = a[c, s - r + (R-1)]
     s_idx = np.arange(n_steps)[None, None, :]
     r_idx = np.arange(cfg.rows)[:, None, None]
@@ -175,7 +180,9 @@ def simulate(costs: np.ndarray, cfg: ArrayConfig) -> SimResult:
 
 def run_experiment(seed: int, cfg: ArrayConfig, n_steps: int,
                    bit_sparsity: float, w_value_sparsity: float = 0.0,
-                   a_value_sparsity: float = 0.0) -> SimResult:
+                   a_value_sparsity: float = 0.0,
+                   a_bit_sparsity: Optional[float] = None) -> SimResult:
     costs = build_op_costs(jax.random.PRNGKey(seed), cfg, n_steps,
-                           bit_sparsity, w_value_sparsity, a_value_sparsity)
+                           bit_sparsity, w_value_sparsity, a_value_sparsity,
+                           a_bit_sparsity)
     return simulate(costs, cfg)

@@ -241,4 +241,6 @@ def dense_apply(x, w_f, mode: str, *, precision=None):
         return jnp.einsum("...k,kn->...n", x_fq, w_fq, precision=precision)
     w_q, w_scale = quant.quantize_per_channel(w_f.astype(jnp.float32), channel_axis=-1)
     w_scale = w_scale.reshape(-1)  # (N,)
+    from repro.core import probe
+    probe.record_activation(x)
     return quantized_matmul(x, w_q, w_scale, mode)

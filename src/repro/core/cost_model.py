@@ -83,24 +83,17 @@ def sram_pj_per_byte(capacity_bytes: int) -> float:
 
 # --- First-principles average-cycle models ----------------------------------
 
-def _mc_operands(bit_sparsity: float, n: int, seed: int):
+def _mc_operands(bit_sparsity: float, n: int, seed: int,
+                 w_bit_sparsity=None):
     ka, kw = jax.random.split(jax.random.PRNGKey(seed))
     a = sample_with_bit_sparsity(ka, (n,), bit_sparsity)
-    w = sample_with_bit_sparsity(kw, (n,), bit_sparsity)
+    w = sample_with_bit_sparsity(
+        kw, (n,),
+        bit_sparsity if w_bit_sparsity is None else w_bit_sparsity)
     return a, w
 
 
-def modeled_avg_cycles(method: str, bit_sparsity: float, n: int = 200_000,
-                       seed: int = 0) -> float:
-    """Monte-Carlo average cycles per MAC under the paper's data generator.
-
-    methods: ``bp_exact`` / ``bp_approx`` — the emulated BitParticle unit;
-    ``bit_serial`` — idealized single-factor bit-serial (AdaS-class):
-    cycles = max(1, #nonzero magnitude bits of one operand);
-    ``bitwave`` — 8-lane column skipping: a bit column is processed iff any
-    of 8 grouped operands has a 1 there; cycles/op = surviving columns / 8.
-    """
-    a, w = _mc_operands(bit_sparsity, n, seed)
+def _avg_cycles(method: str, a, w, n: int) -> float:
     if method in ("bp_exact", "bp_approx"):
         c = bp.mac_cycles(a, w, approx=(method == "bp_approx"))
         return float(jnp.mean(c.astype(jnp.float32)))
@@ -116,6 +109,35 @@ def modeled_avg_cycles(method: str, bit_sparsity: float, n: int = 200_000,
             cols = cols + (jnp.any((groups >> b) & 1, axis=1)).astype(jnp.int32)
         return float(jnp.mean(cols.astype(jnp.float32))) / 8.0
     raise ValueError(method)
+
+
+def modeled_avg_cycles(method: str, bit_sparsity: float, n: int = 200_000,
+                       seed: int = 0) -> float:
+    """Monte-Carlo average cycles per MAC under the paper's data generator.
+
+    methods: ``bp_exact`` / ``bp_approx`` — the emulated BitParticle unit;
+    ``bit_serial`` — idealized single-factor bit-serial (AdaS-class):
+    cycles = max(1, #nonzero magnitude bits of one operand);
+    ``bitwave`` — 8-lane column skipping: a bit column is processed iff any
+    of 8 grouped operands has a 1 there; cycles/op = surviving columns / 8.
+    """
+    a, w = _mc_operands(bit_sparsity, n, seed)
+    return _avg_cycles(method, a, w, n)
+
+
+def modeled_avg_cycles_dual(method: str, a_bit_sparsity: float,
+                            w_bit_sparsity: float, n: int = 200_000,
+                            seed: int = 0) -> float:
+    """`modeled_avg_cycles` with separate activation / weight sparsities.
+
+    The serving probe measures the two factors at different rates (live
+    activations vs frozen weights); the single-sparsity model above is the
+    diagonal of this one.  For the single-factor methods (``bit_serial``,
+    ``bitwave``) only ``a_bit_sparsity`` matters.
+    """
+    a, w = _mc_operands(a_bit_sparsity, n, seed,
+                        w_bit_sparsity=w_bit_sparsity)
+    return _avg_cycles(method, a, w, n)
 
 
 # --- Efficiency metrics (Table III derivations) ------------------------------

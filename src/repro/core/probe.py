@@ -1,0 +1,139 @@
+"""Trace-time tap that collects int8 activation sparsity stats (paper
+Section IV-B3 measured on live operands instead of synthetic samples).
+
+The serving executor wraps a jitted step function's body in ``probe_tap()``;
+while the tap is active, the quantized-matmul call sites
+(``models/layers.dense`` and ``core/bp_matmul.dense_apply``) call
+``record_activation`` with the float activation just before it is quantized
+and dispatched.  ``record_activation`` recomputes the identical per-row
+quantization, reduces the int8 operand to a ``sparsity.N_STATS`` sum row,
+and parks it on a thread-local frame.  The model's layer scan drains the
+frame once per layer (``drain_layer`` inside the scan body, stacked by the
+scan into an ``(L, N_STATS)`` array) and publishes the stack with
+``emit_layers``; ``collect`` hands the executor one small array — the only
+thing that leaves the device.
+
+Everything here runs at *trace* time (the idiom of
+``bp_matmul.use_matmul_backend``): with no active frame every hook is a
+no-op, so untapped traces — the NULL_PROBE path — stage byte-identical
+programs.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.sparsity import N_STATS, sm_bit_stats
+
+
+class _Frame:
+    __slots__ = ("pending", "layers", "extra")
+
+    def __init__(self):
+        self.pending = []   # stat rows recorded since the last drain
+        self.layers = None  # (L, N_STATS) published by emit_layers
+        self.extra = []     # pre-/post-scan rows (embedding tail, lm head)
+
+
+class _TapState(threading.local):
+    def __init__(self):
+        self.frames = []
+
+
+_state = _TapState()
+
+
+def tap_active() -> bool:
+    return bool(_state.frames)
+
+
+@contextlib.contextmanager
+def probe_tap():
+    """Activate the tap for the enclosed trace; nests safely."""
+    frame = _Frame()
+    _state.frames.append(frame)
+    try:
+        yield frame
+    finally:
+        _state.frames.pop()
+
+
+def record_activation(x):
+    """Record sparsity stats of ``x`` as the int8 operand the kernel sees.
+
+    Recomputes the same per-row symmetric quantization
+    ``quantized_matmul`` applies, so the stats are measured on exactly the
+    operand values the MAC array would stream.  No-op without an active tap.
+    """
+    if not _state.frames:
+        return
+    x = jnp.asarray(x, jnp.float32)
+    x_scale = quant.compute_scale(x, axis=(-1,))
+    x_q = quant.quantize(x, x_scale)
+    _state.frames[-1].pending.append(sm_bit_stats(x_q))
+
+
+def drain_layer():
+    """``(N_STATS,)`` sum of rows recorded since the last drain.
+
+    Called inside the model's layer-scan body; the scan stacks the returned
+    rows into the per-layer axis.  Returns zeros when the layer recorded
+    nothing (e.g. bf16 mode slipped through) so shapes stay static.
+    """
+    if not _state.frames:
+        return jnp.zeros((N_STATS,), jnp.float32)
+    frame = _state.frames[-1]
+    if not frame.pending:
+        return jnp.zeros((N_STATS,), jnp.float32)
+    row = sum(frame.pending[1:], frame.pending[0])
+    frame.pending = []
+    return row
+
+
+def absorb_pending():
+    """Move rows recorded *before* the layer scan into the extra bucket.
+
+    Must run before entering ``lax.scan``: anything still pending would be
+    a closure constant of the scan body and get re-drained once per layer.
+    No-op without an active tap.
+    """
+    if not _state.frames:
+        return
+    frame = _state.frames[-1]
+    if frame.pending:
+        frame.extra.extend(frame.pending)
+        frame.pending = []
+
+
+def emit_layers(stacked):
+    """Publish the scan-stacked ``(L, N_STATS)`` per-layer stats."""
+    if not _state.frames:
+        return
+    _state.frames[-1].layers = stacked
+
+
+def collect():
+    """Final ``(L[+1], N_STATS)`` stats array for the executor, or None.
+
+    The extra bucket (plus any still-pending rows, e.g. the lm head matmul
+    after the scan) is summed into one trailing row.  Returns None — without
+    touching ``pending`` — when no layers were emitted: for uninstrumented
+    model families the pending rows may hold tracers from inner scopes that
+    must not escape.
+    """
+    if not _state.frames:
+        return None
+    frame = _state.frames[-1]
+    if frame.layers is None:
+        return None
+    rows = frame.extra + frame.pending
+    frame.pending = []
+    frame.extra = []
+    if not rows:
+        return frame.layers
+    tail = sum(rows[1:], rows[0])
+    return jnp.concatenate([frame.layers, tail[None, :]], axis=0)

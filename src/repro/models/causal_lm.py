@@ -13,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import probe as _probe
 from repro.distributed.sharding import shard
 from repro.models import attention, layers
 from repro.models.moe import init_moe, moe_ffn
@@ -91,9 +92,13 @@ def forward(params, cfg, batch, *, return_cache: bool = False,
             cache_T: Optional[int] = None):
     """Returns (hidden (B,S,D), aux_loss, cache|None)."""
     mode = cfg.matmul_mode
+    probing = _probe.tap_active()
     x, positions = _embed_inputs(params, cfg, batch)
     x = shard(x, "batch", "seq", None)
     cos, sin = _angles(cfg, positions)
+    # pre-scan taps (e.g. the VLM projector) must not become per-layer
+    # closure constants of the scan body
+    _probe.absorb_pending()
 
     def body(carry, lp):
         y, kv, aux = _block(lp, carry, cfg, mode, cos, sin)
@@ -111,23 +116,32 @@ def forward(params, cfg, batch, *, return_cache: bool = False,
             k = shard(k, "batch", "cache_seq", "heads", None)
             v = shard(v, "batch", "cache_seq", "heads", None)
             if cfg.kv_cache_int8:
-                return y, (k, ks_, v, vs_, aux)
-            return y, (k, v, aux)
-        return y, aux
+                ys = (k, ks_, v, vs_, aux)
+            else:
+                ys = (k, v, aux)
+        else:
+            ys = (aux,)
+        if probing:
+            ys = ys + (_probe.drain_layer(),)
+        return y, ys
 
     body = jax.checkpoint(body,
                           policy=jax.checkpoint_policies.nothing_saveable)
     if return_cache:
         if cfg.kv_cache_int8:
-            x, (ks, kss, vs, vss, auxs) = jax.lax.scan(body, x,
-                                                       params["layers"])
+            x, ys = jax.lax.scan(body, x, params["layers"])
+            ks, kss, vs, vss, auxs = ys[:5]
             cache = {"k": ks, "k_scale": kss, "v": vs, "v_scale": vss}
         else:
-            x, (ks, vs, auxs) = jax.lax.scan(body, x, params["layers"])
+            x, ys = jax.lax.scan(body, x, params["layers"])
+            ks, vs, auxs = ys[:3]
             cache = {"k": ks, "v": vs}
     else:
-        x, auxs = jax.lax.scan(body, x, params["layers"])
+        x, ys = jax.lax.scan(body, x, params["layers"])
+        auxs = ys[0]
         cache = None
+    if probing:
+        _probe.emit_layers(ys[-1])
     x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
     return x, jnp.sum(auxs), cache
 
@@ -190,11 +204,13 @@ def _decode_common(params, cfg, batch, *, write_fn, attend_fn):
     new tokens' K/V/scales) and ``attend_fn(q, kc, vc, ksc, vsc)``
     (attention over that layout).  Returns (logits (B, S, V), cache)."""
     mode = cfg.matmul_mode
+    probing = _probe.tap_active()
     tokens, cache = batch["tokens"], batch["cache"]
     cache_len = jnp.asarray(batch["cache_len"])
     B, S = tokens.shape
     x = layers.embed(params["embed"], tokens)
     x = shard(x, "batch", None, None)
+    _probe.absorb_pending()
     pos = attention.decode_positions(cache_len, B, S)
     if cfg.mrope_sections:
         pos = jnp.broadcast_to(pos[None], (3, B, S))
@@ -228,19 +244,24 @@ def _decode_common(params, cfg, batch, *, write_fn, attend_fn):
         else:
             f = layers.ffn(lp["ffn"], h, cfg.ffn_type, mode)
         x = x + f
-        if int8kv:
-            return x, (kc, ksc, vc, vsc)
-        return x, (kc, vc)
+        ys = (kc, ksc, vc, vsc) if int8kv else (kc, vc)
+        if probing:
+            ys = ys + (_probe.drain_layer(),)
+        return x, ys
 
     if int8kv:
         xs = (params["layers"], cache["k"], cache["k_scale"],
               cache["v"], cache["v_scale"])
-        x, (ks, kss, vs, vss) = jax.lax.scan(body, x, xs)
+        x, ys = jax.lax.scan(body, x, xs)
+        ks, kss, vs, vss = ys[:4]
         new_cache = {"k": ks, "k_scale": kss, "v": vs, "v_scale": vss}
     else:
-        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"],
-                                             cache["k"], cache["v"]))
+        x, ys = jax.lax.scan(body, x, (params["layers"],
+                                       cache["k"], cache["v"]))
+        ks, vs = ys[:2]
         new_cache = {"k": ks, "v": vs}
+    if probing:
+        _probe.emit_layers(ys[-1])
     x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = logits_from_hidden(params, cfg, x)
     return logits, new_cache

@@ -63,8 +63,10 @@ def dense(params, x, mode="bf16"):
     w = params["w"]
     if w.dtype == jnp.int8:
         # pre-quantized serving weights (int8 in HBM — the paper's W8 storage)
+        from repro.core import probe
         from repro.core.bp_matmul import quantized_matmul
         int_mode = mode if mode in ("bp_exact", "bp_approx") else "bp_exact"
+        probe.record_activation(x)
         y = quantized_matmul(x, w, params["w_scale"], int_mode)
     else:
         y = dense_apply(x, w.astype(x.dtype), mode)

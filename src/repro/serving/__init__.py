@@ -19,6 +19,8 @@ from repro.serving.executor import (Executor, MeshExecutor,
 from repro.serving.faults import (NULL_INJECTOR, DeviceOOM, DrafterFault,
                                   FaultInjector, InjectedFault, StepFault,
                                   StepTimeout, TransientStepFault)
+from repro.serving.probe import (NULL_PROBE, PROBE_METHODS, SparsityProbe,
+                                 probe_supported)
 from repro.serving.queue import Request, RequestQueue, RequestState
 from repro.serving.scheduler import QuasiSyncScheduler, SchedulerConfig
 from repro.serving.speculative import (Drafter, ModelDrafter,
@@ -42,7 +44,9 @@ __all__ = [
     "MetricsLogger",
     "ModelDrafter",
     "NULL_INJECTOR",
+    "NULL_PROBE",
     "NoFreeBlocks",
+    "PROBE_METHODS",
     "PagedCacheManager",
     "PromptLookupDrafter",
     "QuasiSyncScheduler",
@@ -57,6 +61,7 @@ __all__ = [
     "ServingEngine",
     "SchedulerConfig",
     "SingleDeviceExecutor",
+    "SparsityProbe",
     "StepFault",
     "StepTimeout",
     "StreamSummary",
@@ -68,6 +73,7 @@ __all__ = [
     "make_executor",
     "make_serving_mesh",
     "percentiles",
+    "probe_supported",
     "read_jsonl",
     "reduce_stream",
 ]

@@ -57,6 +57,7 @@ from repro.serving.cache_manager import make_cache_manager
 from repro.serving.executor import Executor, make_executor
 from repro.serving.faults import (NULL_INJECTOR, DrafterFault, FaultInjector,
                                   InjectedFault, StepFault, StepTimeout)
+from repro.serving.probe import NULL_PROBE, SparsityProbe, probe_supported
 from repro.serving.queue import Request, RequestQueue, RequestState
 from repro.serving.scheduler import (QuasiSyncScheduler, SchedulerConfig,
                                      prefill_bucket_len)
@@ -94,6 +95,13 @@ class ServeConfig:
     # / Chrome-trace / jax.profiler sinks).  None (the default) builds a
     # disabled no-op handle — no files written, token-identical outputs.
     telemetry: Optional[Telemetry] = None
+    # hardware-cost observability: a ``serving.probe.SparsityProbe`` handle.
+    # When enabled, probed step-fn variants measure activation bit/value
+    # sparsity on-device (every ``probe_every`` decode steps + every
+    # admission prefill) and each sample is priced through the paper's cost
+    # models into an ``hw_estimate`` record.  None = NULL_PROBE, a strict
+    # no-op pinned token-identical (docs/observability.md).
+    probe: Optional[SparsityProbe] = None
     # -- robustness (docs/robustness.md) ------------------------------------
     # fault injection: a ``serving.faults.FaultInjector`` threaded to the
     # executor / cache managers / block pool / drafter exactly like the
@@ -199,6 +207,11 @@ class ServeReport:
     n_retries: int = 0                # transient-fault dispatch retries
     n_degrades: int = 0               # degradation-ladder transitions
     n_recoveries: int = 0             # rebuild-and-replay recoveries
+    # hardware-cost probe: measured-traffic means over the run's
+    # ``hw_estimate`` records (None when the probe was off / never sampled).
+    # Unlike ``deployment`` — a static weights-only estimate — these numbers
+    # come from the bit sparsity live requests actually exhibited.
+    hw_measured: Optional[dict] = None
 
     @property
     def acceptance_rate(self) -> float:
@@ -259,6 +272,23 @@ class ServeLoop:
                                       else NULL_INJECTOR)
         self.faults.bind(self._emit_injected)
         engine.executor.set_faults(self.faults)
+        # sparsity probe rides the config exactly like telemetry/faults;
+        # validate support up front so a misconfigured probe fails at loop
+        # construction, not at the first probed trace
+        self.probe: SparsityProbe = (self.serve_cfg.probe
+                                     if self.serve_cfg.probe is not None
+                                     else NULL_PROBE)
+        if self.probe.enabled and not probe_supported(engine.cfg):
+            raise ValueError(
+                f"ServeConfig.probe: sparsity probe unsupported for "
+                f"family={engine.cfg.family!r} "
+                f"matmul_mode={engine.cfg.matmul_mode!r} (needs a causal-LM "
+                f"family in bp_exact/bp_approx mode)")
+        engine.executor.set_probe(self.probe)
+        # weight bit-sparsity is static during a serve: computed once from
+        # the pre-quantized int8 weights at engine level (cached there)
+        self._weight_profile = (engine.weight_sparsity_profile()
+                                if self.probe.enabled else None)
         requests = sorted(requests,
                           key=lambda r: (r.arrival_time, r.request_id))
         self.requests = requests
@@ -332,7 +362,8 @@ class ServeLoop:
                    temperature=float(self.serve_cfg.temperature),
                    mesh_shape=(None if mesh is None else
                                [int(d) for d in mesh.devices.shape]),
-                   block_size=int(self.serve_cfg.block_size))
+                   block_size=int(self.serve_cfg.block_size),
+                   probe_every=int(self.probe.probe_every))
 
     def _build_cm(self):
         return make_cache_manager(self.engine.cfg, self.n_slots,
@@ -352,6 +383,16 @@ class ServeLoop:
         if self.drafter is not None:
             self._verify_fn = self.engine.executor.verify_sample_fn(
                 paged=self.paged)
+        # probed variants are SEPARATE jits (the unprobed traces stay
+        # byte-identical to a probe-less serve); sampled steps swap fns
+        self._decode_probe_fn = self._verify_probe_fn = None
+        if self.probe.enabled:
+            self._decode_probe_fn = self.engine.executor.decode_sample_fn(
+                self.serve_cfg.temperature, paged=self.paged, probed=True)
+            if self.drafter is not None:
+                self._verify_probe_fn = (
+                    self.engine.executor.verify_sample_fn(paged=self.paged,
+                                                          probed=True))
 
     # -- telemetry plumbing --------------------------------------------------
 
@@ -405,6 +446,23 @@ class ServeLoop:
                 "prefix_hit_blocks": int(pool.n_prefix_hits),
                 "cow_blocks": int(pool.n_cow),
                 "peak_blocks_in_use": int(pool.peak_live)}
+
+    def _emit_hw(self, stats_np: np.ndarray, phase: str) -> None:
+        """Fold one sampled step's device stats through the probe's cost
+        models into an ``hw_estimate`` record plus Chrome-trace counter
+        tracks (perfetto renders them alongside the phase spans)."""
+        fields = self.probe.fold(stats_np, self._weight_profile, phase)
+        self._emit("hw_estimate", step=int(self.sched.n_decode_steps),
+                   **fields)
+        self.tel.counter("sparsity",
+                         act_bit=fields["act_bit_sparsity"],
+                         act_value=fields["act_value_sparsity"],
+                         weight_bit=fields["weight_bit_sparsity"])
+        self.tel.counter("hw_model",
+                         array_utilization=fields["array_utilization"],
+                         cycles_bp_exact=fields["cycles"]["bp_exact"],
+                         energy_bp_exact_pj=fields["mac_energy_pj"]
+                         ["bp_exact"])
 
     # -- lifecycle: cancellation + deadlines --------------------------------
 
@@ -682,17 +740,22 @@ class ServeLoop:
                                         for v in batch.values()))
         t0 = time.perf_counter()
 
+        probed = self.probe.enabled   # every admission prefill is sampled
+
         def dispatch():
             if self.ragged:
-                logits, cache = self.executor.prefill(batch, self.cache_T,
-                                                      prompt_lens=lens)
+                out = self.executor.prefill(batch, self.cache_T,
+                                            prompt_lens=lens, probed=probed)
             else:
-                logits, cache = self.executor.prefill(batch, self.cache_T)
-            logits.block_until_ready()
-            return logits, cache
+                out = self.executor.prefill(batch, self.cache_T,
+                                            probed=probed)
+            out[0].block_until_ready()
+            return out
 
         with self.tel.span("prefill", group_size=len(group), pad_to=pad_to):
-            logits, cache = self._dispatch("prefill", dispatch)
+            out = self._dispatch("prefill", dispatch)
+        logits, cache = out[0], out[1]
+        probe_stats = out[2] if probed else None
         wall = time.perf_counter()
         dispatch_s = wall - t0
         self.prefill_s += dispatch_s
@@ -733,6 +796,11 @@ class ServeLoop:
                 if self.drafter is not None:
                     self.drafter.on_admit(slot, req)
         install_s = time.perf_counter() - t_inst
+        if probe_stats is not None:
+            # the stats array is the probe's only d2h traffic: count it
+            # BEFORE the byte snapshot so this record carries it
+            probe_stats = np.asarray(probe_stats)
+            self.tel.count("d2h_bytes", int(probe_stats.nbytes))
         h2d, d2h = self._byte_deltas()
         self._emit("prefill", step=int(self.sched.n_decode_steps),
                    wall_s=time.perf_counter() - t_start,
@@ -747,6 +815,8 @@ class ServeLoop:
                    active_slots=int(self.cm.n_active),
                    h2d_bytes=h2d, d2h_bytes=d2h,
                    **self._pool_gauges())
+        if probe_stats is not None:
+            self._emit_hw(probe_stats, "prefill")
 
     @staticmethod
     def _append_token(req: Request, tok: int, wall: float):
@@ -799,17 +869,20 @@ class ServeLoop:
                        int(step["tokens"].nbytes)
                        + int(step["cache_len"].nbytes)
                        + int(self.slot_keys.nbytes) + int(counts.nbytes))
+        probed = self.probe.should_sample(int(self.sched.n_decode_steps))
         t0 = time.perf_counter()
 
         def dispatch():
-            toks, new_cache = self._decode_fn(self.cm.cache, step,
-                                              jnp.asarray(self.slot_keys),
-                                              jnp.asarray(counts))
-            toks.block_until_ready()
-            return toks, new_cache
+            fn = self._decode_probe_fn if probed else self._decode_fn
+            out = fn(self.cm.cache, step, jnp.asarray(self.slot_keys),
+                     jnp.asarray(counts))
+            out[0].block_until_ready()
+            return out
 
         with self.tel.span("decode", n_slots=len(slots)):
-            toks, new_cache = self._dispatch("decode", dispatch)
+            out = self._dispatch("decode", dispatch)
+        toks, new_cache = out[0], out[1]
+        probe_stats = np.asarray(out[2]) if probed else None
         wall = time.perf_counter()
         dispatch_s = wall - t0
         self.decode_s += dispatch_s
@@ -856,6 +929,8 @@ class ServeLoop:
             # optimistic per-slot count (observed above, before the frees,
             # so occupancy accounting matches the fault-free path exactly)
             self.sched.n_committed_tokens -= len(slots) - n_committed
+        if probe_stats is not None:
+            self.tel.count("d2h_bytes", int(probe_stats.nbytes))
         h2d, d2h = self._byte_deltas()
         self._emit("decode", step=int(self.sched.n_decode_steps),
                    wall_s=time.perf_counter() - t_start,
@@ -867,6 +942,8 @@ class ServeLoop:
                    committed_tokens=int(n_committed),
                    h2d_bytes=h2d, d2h_bytes=d2h,
                    **self._pool_gauges())
+        if probe_stats is not None:
+            self._emit_hw(probe_stats, "decode")
 
     def decode_once_spec(self):
         """One speculative step: draft up to K tokens per slot, verify all
@@ -935,15 +1012,19 @@ class ServeLoop:
         self._maybe_inject_nan(step, slots)
         self.tel.count("h2d_bytes", int(step["tokens"].nbytes)
                        + int(step["cache_len"].nbytes))
+        probed = self.probe.should_sample(int(self.sched.n_decode_steps))
         t0 = time.perf_counter()
 
         def dispatch():
-            greedy, new_cache = self._verify_fn(self.cm.cache, step)
-            greedy.block_until_ready()
-            return greedy, new_cache
+            fn = self._verify_probe_fn if probed else self._verify_fn
+            out = fn(self.cm.cache, step)
+            out[0].block_until_ready()
+            return out
 
         with self.tel.span("verify", n_slots=len(slots)):
-            greedy, new_cache = self._dispatch("verify", dispatch)
+            out = self._dispatch("verify", dispatch)
+        greedy, new_cache = out[0], out[1]
+        probe_stats = np.asarray(out[2]) if probed else None
         wall = time.perf_counter()
         dispatch_s = wall - t0
         self.decode_s += dispatch_s
@@ -1019,6 +1100,8 @@ class ServeLoop:
             else:
                 drafter.observe_commit(slot,
                                        int(self.cm.lengths[slot]))
+        if probe_stats is not None:
+            self.tel.count("d2h_bytes", int(probe_stats.nbytes))
         h2d, d2h = self._byte_deltas()
         self._emit("verify", step=int(self.sched.n_decode_steps),
                    wall_s=time.perf_counter() - t_start,
@@ -1032,6 +1115,8 @@ class ServeLoop:
                    accepted_tokens=int(self.n_accepted - accepted0),
                    h2d_bytes=h2d, d2h_bytes=d2h,
                    **self._pool_gauges())
+        if probe_stats is not None:
+            self._emit_hw(probe_stats, "verify")
 
     def run(self) -> ServeReport:
         self.tel.start_profile()
@@ -1188,6 +1273,18 @@ class ServeLoop:
                for a, b in zip(r.wall_token_times, r.wall_token_times[1:])]
         mesh = self.executor.mesh
         s = reduce_stream(self.stream)
+        hw = None
+        if s.n_hw_samples:
+            n = s.n_hw_samples
+            hw = {"n_samples": int(n),
+                  "probe_every": int(self.probe.probe_every),
+                  "act_bit_sparsity": s.hw_act_bit_sparsity / n,
+                  "act_value_sparsity": s.hw_act_value_sparsity / n,
+                  "weight_bit_sparsity": s.hw_weight_bit_sparsity / n,
+                  "array_utilization": s.hw_array_utilization / n,
+                  "cycles": {k: v / n for k, v in s.hw_cycles.items()},
+                  "mac_energy_pj": {k: v / n for k, v
+                                    in s.hw_mac_energy_pj.items()}}
         return ServeReport(
             results=results,
             prefill_s=s.prefill_s,
@@ -1199,6 +1296,7 @@ class ServeLoop:
             slot_utilization=s.slot_utilization,
             max_divergence=s.max_divergence,
             deployment=self.engine.deployment_estimate(),
+            hw_measured=hw,
             cache_backend=self.serve_cfg.cache_backend,
             n_preemptions=s.n_preemptions,
             prefix_hit_blocks=s.prefix_hit_blocks,
@@ -1258,6 +1356,12 @@ class ServingEngine:
             self.draft_executor = make_executor(draft_cfg, draft_params,
                                                 mesh=executor.mesh)
         self._deployment_cache: Dict[int, Optional[dict]] = {}
+        self._weight_profile: Optional[dict] = None
+        if (self.serve_cfg.probe is not None and self.serve_cfg.probe.enabled
+                and arch_cfg.matmul_mode in ("bp_exact", "bp_approx")):
+            # probe runs: compute the static weight factor eagerly so the
+            # first sampled step folds without a construction-time stall
+            self.weight_sparsity_profile()
         # request ids queued for cancellation; the serve loop's sweep
         # drains this set once per iteration (idempotent — unknown or
         # already-finished ids are ignored)
@@ -1462,3 +1566,29 @@ class ServingEngine:
         }
         self._deployment_cache[n_mc] = est
         return est
+
+    def weight_sparsity_profile(self) -> dict:
+        """Element-weighted weight bit/value sparsity of the pre-quantized
+        int8 params, once per engine (the probe's static factor).  Unlike
+        ``deployment_estimate``'s per-kernel mean, these rates weight every
+        int8 element equally — the same reduction the probe applies to
+        activations, so the two factors are directly comparable."""
+        if self._weight_profile is None:
+            from repro.serving.probe import per_layer_weight_stats
+            stacked, tail = per_layer_weight_stats(self.params,
+                                                   self.cfg.num_layers)
+            rows = (stacked if tail is None
+                    else np.concatenate([stacked, tail[None, :]]))
+            total = rows.sum(axis=0)
+            n = max(float(total[1]), 1.0)
+            per_n = np.maximum(stacked[:, 1], 1.0)
+            self._weight_profile = {
+                "bit_sparsity": float(total[0] / (7.0 * n)),
+                "value_sparsity": float(total[2] / n),
+                "per_layer_bit_sparsity":
+                    (stacked[:, 0] / (7.0 * per_n)).tolist(),
+                "tail_bit_sparsity":
+                    (None if tail is None
+                     else float(tail[0] / (7.0 * max(tail[1], 1.0)))),
+            }
+        return self._weight_profile

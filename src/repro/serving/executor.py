@@ -54,6 +54,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import bp_matmul
+from repro.core import probe as core_probe
 from repro.distributed import sharding as shd
 from repro.models import api
 
@@ -81,6 +82,10 @@ class Executor:
         # fire BEFORE a jit dispatch so an injected fault never consumes
         # the donated cache (retry-safe by construction)
         self.faults = _faults.NULL_INJECTOR
+        # sparsity-probe handle, threaded the same way; only consulted when
+        # the serve loop asks for probed step-fn variants
+        from repro.serving import probe as _probe
+        self.probe = _probe.NULL_PROBE
         self._params = (self._place_params(params)
                         if params is not None else None)
         self._jits: Dict[tuple, object] = {}
@@ -97,6 +102,20 @@ class Executor:
         from repro.serving import faults as _faults
         self.faults = (injector if injector is not None
                        else _faults.NULL_INJECTOR)
+
+    def set_probe(self, probe) -> None:
+        """Attach a sparsity probe (None reverts to the no-op handle)."""
+        from repro.serving import probe as _probe
+        self.probe = probe if probe is not None else _probe.NULL_PROBE
+
+    def _require_probe_support(self):
+        from repro.serving.probe import probe_supported
+        if not probe_supported(self.cfg):
+            raise ValueError(
+                f"sparsity probe unsupported for family={self.cfg.family!r} "
+                f"matmul_mode={self.cfg.matmul_mode!r}: the probe taps int8 "
+                f"operands at the quantized-matmul boundary (causal-LM "
+                f"family + bp_exact/bp_approx mode)")
 
     def reset(self) -> None:
         """Drop every cached jitted entry point (recovery path: after an
@@ -200,21 +219,33 @@ class Executor:
         """The placed (and, upstream, pre-quantized) model params."""
         return self._params
 
-    def prefill(self, batch, cache_T: int, prompt_lens=None):
+    def prefill(self, batch, cache_T: int, prompt_lens=None,
+                probed: bool = False):
         """Compiled prefill; ``prompt_lens`` selects the ragged right-padded
-        variant (per-row last-position logits, pow2 prefill buckets)."""
+        variant (per-row last-position logits, pow2 prefill buckets).
+        ``probed=True`` jits a separate variant whose body runs under the
+        sparsity tap and additionally returns the fused
+        ``(n_layers[+1], N_STATS)`` activation stats."""
         self._require_params()
         self.faults.check("prefill")
         cfg = self.cfg
+        if probed:
+            self._require_probe_support()
+
+        def run(p, b, t, lens=None):
+            if not probed:
+                return api.prefill(p, cfg, b, t, prompt_lens=lens)
+            with core_probe.probe_tap():
+                logits, cache = api.prefill(p, cfg, b, t, prompt_lens=lens)
+                stats = core_probe.collect()
+            return logits, cache, stats
+
         if prompt_lens is None:
-            fn = self._get(("prefill",), lambda: self._jit(
-                lambda p, b, t: api.prefill(p, cfg, b, t),
-                static_argnums=(2,)))
+            fn = self._get(("prefill", bool(probed)), lambda: self._jit(
+                lambda p, b, t: run(p, b, t), static_argnums=(2,)))
             return fn(self._params, batch, cache_T)
-        fn = self._get(("prefill_ragged",), lambda: self._jit(
-            lambda p, b, t, lens: api.prefill(p, cfg, b, t,
-                                              prompt_lens=lens),
-            static_argnums=(2,)))
+        fn = self._get(("prefill_ragged", bool(probed)), lambda: self._jit(
+            lambda p, b, t, lens: run(p, b, t, lens), static_argnums=(2,)))
         return fn(self._params, batch, cache_T, jnp.asarray(prompt_lens))
 
     def decode_step(self, step):
@@ -227,16 +258,20 @@ class Executor:
             lambda p, s: api.decode_step(p, cfg, s)))
         return fn(self._params, step)
 
-    def decode_sample_fn(self, temperature: float, paged: bool = False):
+    def decode_sample_fn(self, temperature: float, paged: bool = False,
+                         probed: bool = False):
         """``fn(cache, step, keys, counts) -> (tokens, new_cache)`` for the
         continuous path: decode + per-slot sampling fused into ONE dispatch
         (only the (n_slots,) sampled tokens cross to the host, never the
         logits), with the cache buffer DONATED — the per-step KV update
         aliases the pool instead of copying it.  ``paged`` routes through
         the block-table decode step (``step`` then carries
-        ``block_tables``)."""
+        ``block_tables``).  ``probed=True`` jits a separate tapped variant
+        returning ``(tokens, new_cache, stats)`` (donation unchanged)."""
         self._require_params()
         cfg = self.cfg
+        if probed:
+            self._require_probe_support()
 
         def build():
             decode = api.decode_step_paged if paged else api.decode_step
@@ -246,7 +281,11 @@ class Executor:
                 # optional fault-injection mask (n_slots,) bool: NaN the
                 # whole logit row for flagged slots (exercises the guard)
                 nan_mask = step.pop("nan_mask", None)
-                logits, new_cache = decode(p, cfg, step)
+                with contextlib.ExitStack() as tap:
+                    if probed:
+                        tap.enter_context(core_probe.probe_tap())
+                    logits, new_cache = decode(p, cfg, step)
+                    stats = core_probe.collect() if probed else None
                 if nan_mask is not None:
                     logits = jnp.where(nan_mask[:, None], jnp.nan, logits)
                 # pin the output layout to the input layout so the donated
@@ -263,6 +302,8 @@ class Executor:
                 # >= 0) so the loop can fail ONLY the affected slot
                 ok = jnp.isfinite(logits).all(axis=-1)
                 tok = jnp.where(ok, tok, -1)
+                if probed:
+                    return tok.astype(jnp.int32), new_cache, stats
                 return tok.astype(jnp.int32), new_cache
 
             jitted = self._jit(step_fn, donate_argnums=(1,))
@@ -276,10 +317,10 @@ class Executor:
                 self._params, cache, step, keys, counts)
             return fn
 
-        return self._get(("decode_sample", float(temperature), bool(paged)),
-                         build)
+        return self._get(("decode_sample", float(temperature), bool(paged),
+                          bool(probed)), build)
 
-    def verify_sample_fn(self, paged: bool = False):
+    def verify_sample_fn(self, paged: bool = False, probed: bool = False):
         """``fn(cache, step) -> (greedy (B, S) int32 tokens, new_cache)``
         for the speculative path: ONE forward pass appends the S fed tokens
         (last committed + drafts) at per-slot positions and the per-position
@@ -287,9 +328,12 @@ class Executor:
         grid crosses to the host, never (B, S, V) logits.  The cache buffer
         is donated exactly like the decode step.  Greedy-only by design:
         the accept rule compares argmax streams, which is what makes
-        speculative outputs token-identical to non-speculative greedy."""
+        speculative outputs token-identical to non-speculative greedy.
+        ``probed=True``: tapped variant returning (tokens, cache, stats)."""
         self._require_params()
         cfg = self.cfg
+        if probed:
+            self._require_probe_support()
 
         def build():
             verify = api.verify_step_paged if paged else api.verify_step
@@ -297,7 +341,11 @@ class Executor:
             def step_fn(p, cache, step):
                 step = dict(step, cache=cache)
                 nan_mask = step.pop("nan_mask", None)
-                logits, new_cache = verify(p, cfg, step)
+                with contextlib.ExitStack() as tap:
+                    if probed:
+                        tap.enter_context(core_probe.probe_tap())
+                    logits, new_cache = verify(p, cfg, step)
+                    stats = core_probe.collect() if probed else None
                 if nan_mask is not None:
                     logits = jnp.where(nan_mask[:, None, None], jnp.nan,
                                        logits)
@@ -306,6 +354,8 @@ class Executor:
                 # same -1 sentinel as the decode step, per (slot, position)
                 ok = jnp.isfinite(logits).all(axis=-1)
                 tok = jnp.where(ok, tok, -1)
+                if probed:
+                    return tok.astype(jnp.int32), new_cache, stats
                 return tok.astype(jnp.int32), new_cache
 
             jitted = self._jit(step_fn, donate_argnums=(1,))
@@ -319,7 +369,7 @@ class Executor:
                                                         step)
             return fn
 
-        return self._get(("verify_sample", bool(paged)), build)
+        return self._get(("verify_sample", bool(paged), bool(probed)), build)
 
     def decode_scan_fn(self, chunk: int, temperature: float,
                        eos_id: Optional[int]):

@@ -78,6 +78,15 @@ STEP_SCHEMA: Dict[str, set] = {
     "retry": {"schema", "kind", "ts_s", "step", "site", "attempt"},
     "degrade": {"schema", "kind", "ts_s", "step", "action"},
     "recover": {"schema", "kind", "ts_s", "step", "n_requeued"},
+    # hardware-cost observability (additive, schema stays v1): per sampled
+    # step the SparsityProbe prices measured activation/weight bit sparsity
+    # through the paper's cost models — see docs/observability.md
+    "hw_estimate": {"schema", "kind", "ts_s", "step", "phase", "n_layers",
+                    "act_bit_sparsity", "act_value_sparsity",
+                    "weight_bit_sparsity", "per_layer_act_bit_sparsity",
+                    "per_layer_act_value_sparsity", "cycles",
+                    "array_utilization", "array_cycles_per_step",
+                    "mac_energy_pj"},
 }
 
 
@@ -197,6 +206,15 @@ class Tracer:
             "args": {k: _jsonable(v) for k, v in args.items()},
         })
 
+    def counter(self, name: str, **values):
+        """Chrome-trace counter ("C") sample: perfetto renders one stacked
+        counter track named ``name`` with a series per kwarg."""
+        self.events.append({
+            "name": name, "ph": "C", "ts": self._now_us(),
+            "pid": self._pid, "tid": 0,
+            "args": {k: _jsonable(v) for k, v in values.items()},
+        })
+
     def write(self, path: str):
         d = os.path.dirname(os.path.abspath(path))
         if d:
@@ -253,6 +271,10 @@ class Telemetry:
     def instant(self, name: str, **args):
         if self.tracer is not None:
             self.tracer.instant(name, **args)
+
+    def counter(self, name: str, **values):
+        if self.tracer is not None:
+            self.tracer.counter(name, **values)
 
     def emit(self, record: dict):
         if self.metrics is not None:
@@ -348,6 +370,16 @@ class StreamSummary:
     n_retries: int = 0
     n_degrades: int = 0
     n_recoveries: int = 0
+    # hw_estimate records (sparsity-probe samples): order-preserving sums;
+    # the report divides by n_hw_samples for the measured-traffic means
+    n_hw_samples: int = 0
+    hw_act_bit_sparsity: float = 0.0
+    hw_act_value_sparsity: float = 0.0
+    hw_weight_bit_sparsity: float = 0.0
+    hw_array_utilization: float = 0.0
+    hw_cycles: Dict[str, float] = dataclasses.field(default_factory=dict)
+    hw_mac_energy_pj: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
 
 def reduce_stream(records) -> StreamSummary:
@@ -405,6 +437,17 @@ def reduce_stream(records) -> StreamSummary:
             continue
         elif kind == "recover":
             s.n_recoveries += 1
+            continue
+        elif kind == "hw_estimate":
+            s.n_hw_samples += 1
+            s.hw_act_bit_sparsity += r["act_bit_sparsity"]
+            s.hw_act_value_sparsity += r["act_value_sparsity"]
+            s.hw_weight_bit_sparsity += r["weight_bit_sparsity"]
+            s.hw_array_utilization += r["array_utilization"]
+            for k, v in r["cycles"].items():
+                s.hw_cycles[k] = s.hw_cycles.get(k, 0.0) + v
+            for k, v in r["mac_energy_pj"].items():
+                s.hw_mac_energy_pj[k] = s.hw_mac_energy_pj.get(k, 0.0) + v
             continue
         else:
             continue

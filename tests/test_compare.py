@@ -12,7 +12,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import common
 from benchmarks.compare import (collect_metrics, compare_payloads,
-                                fingerprint, main)
+                                fingerprint, main, metric_direction)
 
 META = {"schema": 1, "git_sha": "abc", "hostname": "ci-box",
         "jax_version": "0.4.0", "device_kind": "cpu", "device_count": 1,
@@ -52,6 +52,54 @@ class TestCollectMetrics:
                              "flag_tokens_per_s": True,
                              "n_requests": 8})
         assert m == {}                   # bool and _meta never gate
+
+
+def _pct_artifact(p50=1.0, p90=2.0, p99=5.0, meta=META):
+    """production_mix-shaped artifact: a nested percentile block."""
+    return {
+        "per_step_ms": {"p50": p50, "p90": p90, "p99": p99},
+        "decode": {"per_step_ms": {"p99": p99}},
+        "n_requests": 8,
+        "_meta": dict(meta),
+    }
+
+
+class TestPercentileGating:
+    def test_direction_matches_full_dotted_key(self):
+        assert metric_direction("per_step_ms.p99") == "lower"
+        assert metric_direction("decode.per_step_ms.p50") == "lower"
+        assert metric_direction("continuous_per_step_ms") == "lower"
+        assert metric_direction("x_tokens_per_s") == "higher"
+        assert metric_direction("n_requests") is None
+        # a percentile leaf must not also match the bare suffix
+        assert metric_direction("per_step_ms.p75") is None
+
+    def test_percentile_leaves_collected_once_each(self):
+        m = collect_metrics(_pct_artifact())
+        assert m == {
+            "per_step_ms.p50": 1.0,
+            "per_step_ms.p90": 2.0,
+            "per_step_ms.p99": 5.0,
+            "decode.per_step_ms.p99": 5.0,
+        }
+
+    def test_p99_regression_fails_gate(self):
+        regs, _ = compare_payloads(_pct_artifact(p99=5.0),
+                                   _pct_artifact(p99=6.5), 0.15)
+        assert len(regs) == 2            # top-level + nested decode block
+        assert all("p99" in r for r in regs)
+
+    def test_p99_improvement_passes(self):
+        regs, _ = compare_payloads(_pct_artifact(p99=5.0),
+                                   _pct_artifact(p99=4.0), 0.15)
+        assert regs == []
+
+    def test_main_gates_percentile_artifact(self, tmp_path):
+        prev = _write(tmp_path / "prev" / "BENCH_production_mix.json",
+                      _pct_artifact(p99=5.0))
+        cur = _write(tmp_path / "cur" / "BENCH_production_mix.json",
+                     _pct_artifact(p99=9.0))
+        assert main([prev, cur]) == 1
 
 
 class TestComparePayloads:

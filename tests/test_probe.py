@@ -1,0 +1,292 @@
+"""Hardware-cost observability: the fused bit-sparsity probe.
+
+Pins the four acceptance bars of docs/observability.md's hw_estimate
+section: (1) the fused on-device stat reductions equal the reference
+``core.sparsity`` math to 1e-6 on ragged batches, (2) the disabled probe
+(``NULL_PROBE``) is a strict no-op — token-identical serve output across
+slab/paged x plain/speculative, (3) ``hw_estimate`` records match the
+golden schema and ``ServeReport.hw_measured`` is a pure fold over them,
+(4) ``probe_supported`` gates unsupported configs with a loud error."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch
+from repro.core import probe as core_probe
+from repro.core import quant
+from repro.core.sparsity import (N_STATS, bit_sparsity_sign_magnitude,
+                                 bit_sparsity_twos_complement,
+                                 per_layer_stats, sm_bit_stats,
+                                 stats_to_rates, value_sparsity)
+from repro.models import api
+from repro.models.layers import quantize_dense_params
+from repro.serving import (NULL_PROBE, PROBE_METHODS, Request,
+                           SchedulerConfig, ServeConfig, ServingEngine,
+                           SparsityProbe, Telemetry, probe_supported,
+                           read_jsonl, reduce_stream)
+from repro.serving.telemetry import SCHEMA_VERSION, STEP_SCHEMA
+
+jax.config.update("jax_default_matmul_precision", "float32")
+
+
+def _dense_cfg(**kw):
+    return get_arch("qwen2-1.5b").reduced().replace(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=128, head_dim=16, **kw)
+
+
+def _quantized(cfg, seed=0):
+    params = api.init(jax.random.PRNGKey(seed), cfg)
+    return (cfg.replace(matmul_mode="bp_exact", kv_cache_int8=True),
+            quantize_dense_params(params))
+
+
+def _engine(q_cfg, q_params, backend="slab", draft="none", probe=None,
+            telemetry=None, max_new=6):
+    return ServingEngine(q_cfg, q_params, ServeConfig(
+        max_new_tokens=max_new, temperature=0.0, cache_backend=backend,
+        block_size=4, draft=draft, num_draft_tokens=3,
+        probe=probe, telemetry=telemetry))
+
+
+def _prompts(cfg, n, seed=1):
+    """Repeated-phrase prompts (the prompt-lookup drafter needs material)."""
+    key = jax.random.PRNGKey(seed)
+    phrase = np.asarray(jax.random.randint(key, (4,), 2, cfg.vocab_size),
+                        np.int32)
+    out = []
+    for i in range(n):
+        uniq = np.asarray(
+            jax.random.randint(jax.random.PRNGKey(seed + 10 + i), (2 + i,),
+                               2, cfg.vocab_size), np.int32)
+        out.append(np.concatenate([phrase, phrase, uniq, phrase]))
+    return out
+
+
+def _serve(eng, prompts, max_new=6):
+    reqs = [Request(prompt=p, max_new_tokens=max_new, arrival_time=0.0)
+            for p in prompts]
+    return eng.serve(reqs, n_slots=len(prompts), cache_T=32, num_blocks=40,
+                     sched_cfg=SchedulerConfig(lead_window=2))
+
+
+def _tokens_in_order(report):
+    return [np.asarray(r.tokens)
+            for r in sorted(report.results, key=lambda r: r.request_id)]
+
+
+# ---------------------------------------------------------------------------
+# Fused stat reductions vs the reference sparsity math
+# ---------------------------------------------------------------------------
+
+class TestFusedStats:
+    def test_sm_bit_stats_equals_reference(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, 7, 33))
+        x_q = quant.quantize(x, quant.compute_scale(x, axis=(-1,)))
+        stats = np.asarray(sm_bit_stats(x_q), np.float64)
+        assert stats.shape == (N_STATS,)
+        assert stats[1] == x_q.size
+        ref_bs = float(bit_sparsity_sign_magnitude(x_q))
+        ref_vs = float(value_sparsity(x_q))
+        assert abs(stats[0] / (7.0 * stats[1]) - ref_bs) < 1e-6
+        assert abs(stats[2] / stats[1] - ref_vs) < 1e-6
+
+    def test_per_layer_stats_equals_per_layer_loop(self):
+        q = jax.random.randint(jax.random.PRNGKey(1), (4, 5, 9), -127, 128,
+                               dtype=jnp.int32).astype(jnp.int8)
+        rows = np.asarray(per_layer_stats(q), np.float64)
+        assert rows.shape == (4, N_STATS)
+        for i in range(4):
+            np.testing.assert_allclose(
+                rows[i], np.asarray(sm_bit_stats(q[i]), np.float64),
+                atol=1e-6)
+
+    def test_stats_to_rates_handles_empty_rows(self):
+        bs, vs = stats_to_rates(jnp.zeros((2, N_STATS)))
+        assert float(bs[0]) == 0.0 and float(vs[1]) == 0.0
+
+    def test_jitted_tap_matches_eager_tap_on_ragged_batch(self):
+        """The probed prefill's fused in-scan reductions must equal the
+        same hooks run eagerly — element-weighted, across a ragged batch
+        whose rows carry different real lengths."""
+        cfg, params = _quantized(_dense_cfg())
+        tokens = np.array(
+            jax.random.randint(jax.random.PRNGKey(3), (2, 12), 2,
+                               cfg.vocab_size), np.int32)
+        # a ragged batch: row 1 is padding beyond length 5
+        tokens[1, 5:] = 0
+        batch = {"tokens": jnp.asarray(tokens)}
+
+        def tapped(fn):
+            with core_probe.probe_tap():
+                fn()
+                return np.asarray(core_probe.collect(), np.float64)
+
+        lens = jnp.asarray([12, 5], jnp.int32)
+        eager = tapped(lambda: api.prefill(params, cfg, batch, 16,
+                                           prompt_lens=lens))
+        jitted_fn = jax.jit(
+            lambda b: (api.prefill(params, cfg, b, 16, prompt_lens=lens),
+                       core_probe.collect())[1])
+        with core_probe.probe_tap():
+            jitted = np.asarray(jitted_fn(batch), np.float64)
+        assert eager.shape[0] >= cfg.num_layers
+        np.testing.assert_allclose(jitted, eager, rtol=1e-6, atol=1e-6)
+        bs = eager[:, 0].sum() / (7.0 * eager[:, 1].sum())
+        assert 0.0 < bs < 1.0
+
+    def test_untapped_hooks_are_noops(self):
+        assert not core_probe.tap_active()
+        core_probe.record_activation(jnp.ones((2, 2)))   # must not raise
+        assert core_probe.collect() is None
+        assert np.all(np.asarray(core_probe.drain_layer()) == 0.0)
+
+
+class TestVectorizedTwosComplement:
+    def test_matches_scalar_popcount_reference(self):
+        rng = np.random.default_rng(0)
+        q = rng.integers(-128, 128, size=257).astype(np.int8)
+        ref = np.mean([(8 - bin(int(v) & 0xFF).count("1")) / 8.0
+                       for v in q])
+        got = float(bit_sparsity_twos_complement(jnp.asarray(q)))
+        assert abs(got - ref) < 1e-6
+
+    def test_extremes(self):
+        assert float(bit_sparsity_twos_complement(
+            jnp.zeros((5,), jnp.int8))) == 1.0
+        assert float(bit_sparsity_twos_complement(
+            jnp.full((5,), -1, jnp.int8))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Disabled probe is a strict no-op; enabled probe never changes tokens
+# ---------------------------------------------------------------------------
+
+class TestTokenIdentity:
+    def test_null_probe_is_the_default(self):
+        cfg, params = _quantized(_dense_cfg())
+        eng = _engine(cfg, params)
+        loop = eng.make_loop([Request(prompt=_prompts(cfg, 1)[0],
+                                      max_new_tokens=2)], n_slots=1,
+                             cache_T=32)
+        assert loop.probe is NULL_PROBE
+        assert not NULL_PROBE.enabled
+        assert not NULL_PROBE.should_sample(0)
+
+    @pytest.mark.parametrize("backend", ["slab", "paged"])
+    @pytest.mark.parametrize("draft", ["none", "prompt_lookup"])
+    def test_probe_on_vs_off_token_identity(self, backend, draft):
+        cfg, params = _quantized(_dense_cfg())
+        prompts = _prompts(cfg, 3)
+        base = _tokens_in_order(
+            _serve(_engine(cfg, params, backend=backend, draft=draft),
+                   prompts))
+        probed = _tokens_in_order(
+            _serve(_engine(cfg, params, backend=backend, draft=draft,
+                           probe=SparsityProbe(probe_every=2, n_mc=2000)),
+                   prompts))
+        assert len(base) == len(probed) == 3
+        for a, b in zip(base, probed):
+            assert a.shape == b.shape and (a == b).all()
+
+
+# ---------------------------------------------------------------------------
+# hw_estimate records: golden schema + report == stream reduction
+# ---------------------------------------------------------------------------
+
+class TestHwEstimateRecords:
+    def _probed_serve(self, tmp_path, probe_every=1):
+        cfg, params = _quantized(_dense_cfg())
+        tel = Telemetry(metrics_path=str(tmp_path / "m.jsonl"))
+        eng = _engine(cfg, params, probe=SparsityProbe(
+            probe_every=probe_every, n_mc=2000), telemetry=tel)
+        report = _serve(eng, _prompts(cfg, 2))
+        tel.close()
+        return cfg, report, read_jsonl(str(tmp_path / "m.jsonl"))
+
+    def test_golden_schema_and_value_ranges(self, tmp_path):
+        cfg, report, records = self._probed_serve(tmp_path)
+        hw = [r for r in records if r["kind"] == "hw_estimate"]
+        assert hw, "probe_every=1 must emit hw_estimate records"
+        assert {r["phase"] for r in hw} >= {"prefill", "decode"}
+        for r in hw:
+            assert STEP_SCHEMA["hw_estimate"] <= set(r)
+            assert r["schema"] == SCHEMA_VERSION
+            assert r["n_layers"] == cfg.num_layers
+            assert 0.0 < r["act_bit_sparsity"] < 1.0
+            assert 0.0 <= r["act_value_sparsity"] < 1.0
+            assert 0.0 < r["weight_bit_sparsity"] < 1.0
+            assert len(r["per_layer_act_bit_sparsity"]) >= cfg.num_layers
+            assert set(r["cycles"]) == set(PROBE_METHODS)
+            assert all(c > 0 for c in r["cycles"].values())
+            assert all(e > 0 for e in r["mac_energy_pj"].values())
+            assert 0.0 < r["array_utilization"] <= 1.0
+
+    def test_probe_every_subsamples_decode_steps(self, tmp_path):
+        _, _, records = self._probed_serve(tmp_path, probe_every=2)
+        decode_steps = [r for r in records if r["kind"] == "decode"]
+        hw_decode = [r for r in records
+                     if r["kind"] == "hw_estimate"
+                     and r["phase"] == "decode"]
+        assert 0 < len(hw_decode) <= len(decode_steps) // 2 + 1
+
+    def test_report_equals_stream_reduction(self, tmp_path):
+        _, report, records = self._probed_serve(tmp_path)
+        s = reduce_stream(records)
+        hw = report.hw_measured
+        assert hw is not None and s.n_hw_samples == hw["n_samples"] > 0
+        assert hw["act_bit_sparsity"] == pytest.approx(
+            s.hw_act_bit_sparsity / s.n_hw_samples)
+        assert hw["act_value_sparsity"] == pytest.approx(
+            s.hw_act_value_sparsity / s.n_hw_samples)
+        assert hw["weight_bit_sparsity"] == pytest.approx(
+            s.hw_weight_bit_sparsity / s.n_hw_samples)
+        assert hw["array_utilization"] == pytest.approx(
+            s.hw_array_utilization / s.n_hw_samples)
+        for m in PROBE_METHODS:
+            assert hw["cycles"][m] == pytest.approx(
+                s.hw_cycles[m] / s.n_hw_samples)
+            assert hw["mac_energy_pj"][m] == pytest.approx(
+                s.hw_mac_energy_pj[m] / s.n_hw_samples)
+
+    def test_weight_profile_is_element_weighted_reference(self):
+        cfg, params = _quantized(_dense_cfg())
+        eng = _engine(cfg, params, probe=SparsityProbe(probe_every=1,
+                                                       n_mc=2000))
+        prof = eng.weight_sparsity_profile()
+        assert len(prof["per_layer_bit_sparsity"]) == cfg.num_layers
+        zero_bits = total = zero_vals = 0.0
+        for leaf in jax.tree.leaves(eng.params):
+            if getattr(leaf, "dtype", None) != jnp.int8:
+                continue
+            s = np.asarray(sm_bit_stats(leaf), np.float64)
+            zero_bits, total, zero_vals = (zero_bits + s[0], total + s[1],
+                                           zero_vals + s[2])
+        assert total > 0
+        assert prof["bit_sparsity"] == pytest.approx(
+            zero_bits / (7.0 * total), abs=1e-9)
+        assert prof["value_sparsity"] == pytest.approx(
+            zero_vals / total, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Unsupported configs fail loudly, never silently un-probed
+# ---------------------------------------------------------------------------
+
+class TestProbeSupport:
+    def test_bf16_mode_is_unsupported(self):
+        cfg = _dense_cfg()                   # matmul_mode stays bf16
+        assert not probe_supported(cfg)
+        params = api.init(jax.random.PRNGKey(0), cfg)
+        eng = _engine(cfg, params, probe=SparsityProbe(probe_every=1,
+                                                       n_mc=2000))
+        with pytest.raises(ValueError, match="probe"):
+            eng.serve([Request(prompt=np.arange(2, 8, dtype=np.int32),
+                               max_new_tokens=2)], n_slots=1, cache_T=16)
+
+    def test_bp_modes_supported(self):
+        assert probe_supported(_dense_cfg(matmul_mode="bp_exact"))
+        assert probe_supported(_dense_cfg(matmul_mode="bp_approx"))
