@@ -14,27 +14,39 @@ both gated by ``benchmarks/compare.py`` — plus the run's measured-traffic
 hardware estimate (mean bit sparsity, modeled cycles/MAC per method,
 array utilization, Table III energy).
 
+The same mix also runs as a **mesh (tensor-parallel) leg**: the identical
+workload on a ``("data", "model")`` ``MeshExecutor``, measured in a worker
+subprocess with virtual CPU devices (``XLA_FLAGS`` must be set before jax
+initializes — the ``benchmarks/sharded_serving.py`` harness pattern) and
+saved as its own gated artifact (``BENCH_production_mix_mesh.json``) with
+its own telemetry files (``production_mix_mesh_*``).
+
     PYTHONPATH=src python benchmarks/production_mix.py [--tiny]
     PYTHONPATH=src python benchmarks/production_mix.py --telemetry DIR
+    PYTHONPATH=src python benchmarks/production_mix.py --mesh 2x4
 
-``--telemetry DIR`` keeps the run's metrics JSONL + trace + sparsity
-profile under DIR (CI uploads them as artifacts); without it they land in
-a temp dir used only to compute the percentiles.
+``--telemetry DIR`` keeps the runs' metrics JSONL + trace + sparsity
+profiles under DIR (CI uploads them as artifacts); without it they land in
+a temp dir used only to compute the percentiles.  ``--mesh none`` skips
+the mesh leg.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import subprocess
 import sys
 import tempfile
 
 import numpy as np
-import jax
 
 if __package__ in (None, ""):  # ran as a script: make `benchmarks.` importable
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
+
+_DEVICE_ENV = "--xla_force_host_platform_device_count"
 
 
 def _poisson_arrivals(rng, n: int, rate: float) -> np.ndarray:
@@ -46,10 +58,11 @@ def _poisson_arrivals(rng, n: int, rate: float) -> np.ndarray:
 
 def run(tiny: bool = False, seed: int = 0, probe_every: int = 2,
         n_slots: int = None, n_requests: int = None, rate: float = 0.7,
-        block_size: int = 8, telemetry_dir: str = None):
+        block_size: int = 8, telemetry_dir: str = None, mesh_shape=None,
+        matmul_backend: str = None):
     import dataclasses
-    import json
 
+    import jax
     from repro.configs.base import get_arch
     from repro.models import api
     from repro.serving import (Request, SchedulerConfig, ServeConfig,
@@ -71,6 +84,8 @@ def run(tiny: bool = False, seed: int = 0, probe_every: int = 2,
         num_layers=2 if tiny else 4, d_model=64 if tiny else 128,
         d_ff=128 if tiny else 256, vocab_size=256, head_dim=16,
         matmul_mode="bp_exact")   # int8 dual factors: what the probe taps
+    if matmul_backend is not None:
+        cfg = cfg.replace(matmul_backend=matmul_backend)
     params = api.init(jax.random.PRNGKey(0), cfg)
 
     rng = np.random.default_rng(seed)
@@ -110,7 +125,8 @@ def run(tiny: bool = False, seed: int = 0, probe_every: int = 2,
     engine = ServingEngine(cfg, params, ServeConfig(
         max_new_tokens=max_new_hi, temperature=0.0,
         cache_backend="paged", block_size=block_size,
-        draft="prompt_lookup", num_draft_tokens=3, probe=probe))
+        draft="prompt_lookup", num_draft_tokens=3, probe=probe,
+        mesh_shape=tuple(mesh_shape) if mesh_shape else None))
 
     # warmup with the probe already attached: compiles the probed step-fn
     # variants AND builds the host-side Monte-Carlo interpolation tables,
@@ -125,9 +141,12 @@ def run(tiny: bool = False, seed: int = 0, probe_every: int = 2,
         keep_paths = False
     else:
         keep_paths = True
-    metrics_path = os.path.join(telemetry_dir, "production_mix_metrics.jsonl")
-    trace_path = os.path.join(telemetry_dir, "production_mix_trace.json")
-    profile_path = os.path.join(telemetry_dir, "sparsity_profile.json")
+    stem = "production_mix_mesh" if mesh_shape else "production_mix"
+    metrics_path = os.path.join(telemetry_dir, f"{stem}_metrics.jsonl")
+    trace_path = os.path.join(telemetry_dir, f"{stem}_trace.json")
+    profile_path = os.path.join(
+        telemetry_dir, "sparsity_profile_mesh.json" if mesh_shape
+        else "sparsity_profile.json")
 
     tel = Telemetry(metrics_path=metrics_path, trace_path=trace_path)
     saved_cfg = engine.serve_cfg
@@ -146,12 +165,29 @@ def run(tiny: bool = False, seed: int = 0, probe_every: int = 2,
                   if r.get("kind") == "prefill"]
     summary = reduce_stream(records)
 
-    # greedy identity vs the plain fast path: slab backend, no speculation,
-    # no probe, no telemetry — the production mix must not change tokens
-    plain = ServingEngine(cfg, params, ServeConfig(
-        max_new_tokens=max_new_hi, temperature=0.0))
-    base = plain.serve(reqs(), n_slots=n_slots, cache_T=cache_T,
-                       sched_cfg=sched)
+    # greedy identity vs the plain fast path: no speculation, no probe, no
+    # telemetry — the production mix must not change tokens.  Single-device
+    # the reference is the slab backend (slab vs paged is a pure storage
+    # transform there, so this also gates cross-backend identity); on the
+    # mesh leg the reference rides the same mesh AND the paged backend,
+    # because a mesh reorders float reductions differently per executor and
+    # cache layout (split-KV slab vs replicated pages), so near-tie
+    # argmaxes on a random-init toy model may legitimately differ across
+    # those — cross-executor identity is a separate invariant, covered by
+    # tests/test_sharded_serving.py and tests/test_mesh_kernels.py on
+    # their pinned workloads.
+    if mesh_shape:
+        plain = ServingEngine(cfg, params, ServeConfig(
+            max_new_tokens=max_new_hi, temperature=0.0,
+            cache_backend="paged", block_size=block_size,
+            mesh_shape=tuple(mesh_shape)))
+        base = plain.serve(reqs(), n_slots=n_slots, cache_T=cache_T,
+                           num_blocks=num_blocks, sched_cfg=sched)
+    else:
+        plain = ServingEngine(cfg, params, ServeConfig(
+            max_new_tokens=max_new_hi, temperature=0.0))
+        base = plain.serve(reqs(), n_slots=n_slots, cache_T=cache_T,
+                           sched_cfg=sched)
     mismatches = 0
     for a, b in zip(sorted(report.results, key=lambda r: r.request_id),
                     sorted(base.results, key=lambda r: r.request_id)):
@@ -169,6 +205,8 @@ def run(tiny: bool = False, seed: int = 0, probe_every: int = 2,
         "n_requests": n_requests,
         "n_tenants": n_tenants,
         "n_slots": n_slots,
+        "mesh_shape": list(mesh_shape) if mesh_shape else None,
+        "matmul_backend": engine.executor.matmul_backend,
         "probe_every": probe_every,
         "block_size": block_size,
         "arrival_rate_per_step": rate,
@@ -199,33 +237,55 @@ def run(tiny: bool = False, seed: int = 0, probe_every: int = 2,
     return result
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--tiny", action="store_true",
-                    help="CI smoke size (seconds, not minutes)")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--probe-every", type=int, default=2,
-                    help="sample every k-th decode/verify step (0 = off)")
-    ap.add_argument("--slots", type=int, default=None)
-    ap.add_argument("--requests", type=int, default=None)
-    ap.add_argument("--rate", type=float, default=0.7,
-                    help="Poisson arrivals per decode step")
-    ap.add_argument("--block-size", type=int, default=8)
-    ap.add_argument("--telemetry", metavar="DIR", default=None,
-                    help="keep metrics JSONL + trace + sparsity profile "
-                         "under DIR (otherwise a temp dir is used)")
-    args = ap.parse_args(argv)
+def run_mesh_leg(mesh_shape, *, tiny: bool = False, seed: int = 0,
+                 probe_every: int = 2, n_slots: int = None,
+                 n_requests: int = None, rate: float = 0.7,
+                 block_size: int = 8, telemetry_dir: str = None,
+                 matmul_backend: str = None) -> dict:
+    """Run the mix on a ``("data", "model")`` mesh in a worker subprocess.
 
-    r = run(tiny=args.tiny, seed=args.seed, probe_every=args.probe_every,
-            n_slots=args.slots, n_requests=args.requests, rate=args.rate,
-            block_size=args.block_size, telemetry_dir=args.telemetry)
+    Virtual CPU devices need ``XLA_FLAGS`` set before jax initializes and
+    the parent's jax is already initialized single-device, so the mesh leg
+    reuses the ``benchmarks/sharded_serving.py`` worker harness: spawn this
+    script with ``--worker``, parse its last-line JSON."""
+    n_dev = int(mesh_shape[0]) * int(mesh_shape[1])
+    env = dict(os.environ)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if not f.startswith(_DEVICE_ENV)]
+    env["XLA_FLAGS"] = " ".join(flags + [f"{_DEVICE_ENV}={n_dev}"])
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    cmd = [sys.executable, os.path.abspath(__file__), "--worker",
+           "--mesh", f"{mesh_shape[0]}x{mesh_shape[1]}",
+           "--seed", str(seed), "--probe-every", str(probe_every),
+           "--rate", str(rate), "--block-size", str(block_size)]
+    if tiny:
+        cmd.append("--tiny")
+    if n_slots is not None:
+        cmd += ["--slots", str(n_slots)]
+    if n_requests is not None:
+        cmd += ["--requests", str(n_requests)]
+    if telemetry_dir is not None:
+        cmd += ["--telemetry", telemetry_dir]
+    if matmul_backend is not None:
+        cmd += ["--matmul-backend", matmul_backend]
+    out = subprocess.run(cmd, capture_output=True, text=True, timeout=1200,
+                         env=env)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"production-mix mesh worker failed:\n{out.stdout}\n{out.stderr}")
+    return json.loads(out.stdout.splitlines()[-1])
 
-    from benchmarks.common import save_artifact
-    path = save_artifact("BENCH_production_mix", r)
 
+def _print_summary(r, label=""):
     p = r["per_step_ms"] or {}
-    print(f"requests={r['n_requests']} tenants={r['n_tenants']} "
-          f"slots={r['n_slots']} rate={r['arrival_rate_per_step']}/step "
+    where = (f"mesh {tuple(r['mesh_shape'])}" if r.get("mesh_shape")
+             else "single-device")
+    print(f"{label}{where}: requests={r['n_requests']} "
+          f"tenants={r['n_tenants']} slots={r['n_slots']} "
+          f"rate={r['arrival_rate_per_step']}/step "
           f"prompts={r['prompt_len_min']}..{r['prompt_len_max']} tokens")
     print(f"steps: {r['decode_steps']} decode+verify, per-step ms "
           f"p50={p.get('p50', float('nan')):.2f} "
@@ -248,12 +308,74 @@ def main(argv=None):
     if r.get("telemetry_metrics"):
         print(f"telemetry: {r['telemetry_metrics']} + "
               f"{r['telemetry_trace']} + {r['sparsity_profile']}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke size (seconds, not minutes)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--probe-every", type=int, default=2,
+                    help="sample every k-th decode/verify step (0 = off)")
+    ap.add_argument("--slots", type=int, default=None)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=0.7,
+                    help="Poisson arrivals per decode step")
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--telemetry", metavar="DIR", default=None,
+                    help="keep metrics JSONL + trace + sparsity profile "
+                         "under DIR (otherwise a temp dir is used)")
+    ap.add_argument("--mesh", default="2x4",
+                    help="mesh shape DATAxMODEL for the tensor-parallel "
+                         "leg, or 'none' to skip it")
+    ap.add_argument("--matmul-backend", default=None,
+                    help="matmul backend override for the mesh leg "
+                         "(e.g. kernel_interpret)")
+    ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+    mesh_shape = (None if args.mesh.lower() == "none"
+                  else tuple(int(d) for d in args.mesh.lower().split("x")))
+
+    if args.worker:
+        r = run(tiny=args.tiny, seed=args.seed,
+                probe_every=args.probe_every, n_slots=args.slots,
+                n_requests=args.requests, rate=args.rate,
+                block_size=args.block_size, telemetry_dir=args.telemetry,
+                mesh_shape=mesh_shape, matmul_backend=args.matmul_backend)
+        print(json.dumps(r, default=float))
+        return 0
+
+    r = run(tiny=args.tiny, seed=args.seed, probe_every=args.probe_every,
+            n_slots=args.slots, n_requests=args.requests, rate=args.rate,
+            block_size=args.block_size, telemetry_dir=args.telemetry)
+
+    from benchmarks.common import save_artifact
+    path = save_artifact("BENCH_production_mix", r)
+    _print_summary(r)
     print(f"artifact: {path}")
+
+    rc = 0
     if r["token_mismatches"]:
         print("ERROR: production mix diverged from plain greedy outputs",
               file=sys.stderr)
-        return 1
-    return 0
+        rc = 1
+
+    if mesh_shape is not None:
+        rm = run_mesh_leg(mesh_shape, tiny=args.tiny, seed=args.seed,
+                          probe_every=args.probe_every, n_slots=args.slots,
+                          n_requests=args.requests, rate=args.rate,
+                          block_size=args.block_size,
+                          telemetry_dir=args.telemetry,
+                          matmul_backend=args.matmul_backend)
+        mesh_path = save_artifact("BENCH_production_mix_mesh", rm)
+        print()
+        _print_summary(rm, label="mesh leg · ")
+        print(f"artifact: {mesh_path}")
+        if rm["token_mismatches"]:
+            print("ERROR: mesh production mix diverged from plain greedy "
+                  "outputs", file=sys.stderr)
+            rc = 1
+    return rc
 
 
 if __name__ == "__main__":

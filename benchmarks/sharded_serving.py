@@ -1,11 +1,15 @@
-"""Mesh-sharded serving vs single-device at the same workload.
+"""Mesh-sharded serving: kernel-vs-oracle cells at the same workload.
 
-Runs the continuous-batching engine over a request stream twice — on the
-default single-device executor and on a ``("data", "model")`` mesh
-(``MeshExecutor``: weights TP over "model", slab KV cache sharded per the
-decode recipe) — and reports per-step decode latency, throughput, and the
-token-identity check (greedy outputs MUST match across executors; the
-acceptance bar is 0 mismatches).
+Runs the continuous-batching engine over one request stream through a
+(matmul backend x executor) grid — the XLA oracle and the Pallas kernel
+path (interpret mode on CPU), each on the default single-device executor
+and on a ``("data", "model")`` mesh (``MeshExecutor``: weights TP over
+"model", slab KV cache sharded per the decode recipe, Pallas kernels
+shard_map-partitioned) — and reports per-step decode latency percentiles
+(p50/p90/p99 pooled over decode+verify steps, gated by
+``benchmarks/compare.py``), throughput, and the token-identity check
+(greedy outputs MUST match across every cell; the acceptance bar is 0
+mismatches).
 
 Virtual CPU devices need ``XLA_FLAGS`` set before jax initializes, so the
 measurement runs in a WORKER SUBPROCESS (``--worker``); the parent (the CLI
@@ -14,8 +18,9 @@ single-device) parses the worker's JSON.  On real TPU slices the worker
 runs against the physical devices unchanged.
 
 On virtual CPU devices the mesh numbers measure dispatch + emulated
-collective overhead, not real scaling — the benchmark is a correctness +
-plumbing smoke there (CI), and a scaling probe on real hardware.
+collective overhead (and the kernel cells pay the Pallas interpreter), not
+real scaling — the benchmark is a correctness + plumbing smoke there (CI),
+and a scaling probe on real hardware.
 
     PYTHONPATH=src python benchmarks/sharded_serving.py [--tiny]
     PYTHONPATH=src python benchmarks/sharded_serving.py --mesh 2x4
@@ -35,29 +40,37 @@ if __package__ in (None, ""):  # ran as a script: make `benchmarks.` importable
 
 _DEVICE_ENV = "--xla_force_host_platform_device_count"
 
+#: (matmul_backend, use_mesh) grid; the first two cells keep the historic
+#: BENCH_sharded layout (single then mesh on the resolved default backend)
+#: so compare.py baselines stay meaningful across the kernel-cell addition.
+_GRID = (("xla", False), ("xla", True),
+         ("kernel_interpret", False), ("kernel_interpret", True))
+
 
 def _measure(tiny: bool, mesh_shape, seed: int, backend: str,
              n_requests: int, rate: float) -> dict:
     """Worker-side measurement (jax already initialized with enough
     devices)."""
+    import tempfile
+
     import numpy as np
     import jax
     from repro.configs.base import get_arch
     from repro.models import api
     from repro.serving import (Request, SchedulerConfig, ServeConfig,
-                               ServingEngine)
+                               ServingEngine, Telemetry, percentiles,
+                               read_jsonl)
 
-    cfg = get_arch("qwen2-1.5b").reduced().replace(
+    base_cfg = get_arch("qwen2-1.5b").reduced().replace(
         num_layers=2 if tiny else 4, d_model=64 if tiny else 128,
         d_ff=128 if tiny else 256, vocab_size=256, head_dim=16,
         matmul_mode="bp_exact")
-    params = api.init(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(seed)
     prompt_len = 8 if tiny else 16
     max_new_hi = 6 if tiny else 12
     prompts = np.asarray(jax.random.randint(
-        jax.random.PRNGKey(1), (n_requests, prompt_len), 2, cfg.vocab_size),
-        np.int32)
+        jax.random.PRNGKey(1), (n_requests, prompt_len), 2,
+        base_cfg.vocab_size), np.int32)
     max_news = rng.integers(2, max_new_hi + 1, size=n_requests).tolist()
     arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
     sched = SchedulerConfig(lead_window=2)
@@ -68,38 +81,68 @@ def _measure(tiny: bool, mesh_shape, seed: int, backend: str,
                         arrival_time=float(arrivals[i]))
                 for i in range(n_requests)]
 
-    def cell(shape):
+    def cell(matmul_backend, shape, tmp):
+        cfg = base_cfg.replace(matmul_backend=matmul_backend)
+        params = api.init(jax.random.PRNGKey(0), cfg)
         engine = ServingEngine(cfg, params, ServeConfig(
             max_new_tokens=max_new_hi, temperature=0.0,
             cache_backend=backend, block_size=4, mesh_shape=shape))
         engine.serve(reqs()[:2], n_slots=4, cache_T=cache_T,
                      sched_cfg=sched)                      # warmup compile
-        rep = engine.serve(reqs(), n_slots=4, cache_T=cache_T,
-                           sched_cfg=sched)
+        metrics_path = os.path.join(
+            tmp, f"{matmul_backend}_{'mesh' if shape else 'single'}.jsonl")
+        tel = Telemetry(metrics_path=metrics_path)
+        import dataclasses
+        engine.serve_cfg = dataclasses.replace(engine.serve_cfg,
+                                               telemetry=tel)
+        try:
+            rep = engine.serve(reqs(), n_slots=4, cache_T=cache_T,
+                               sched_cfg=sched)
+        finally:
+            tel.close()
+        step_ms = [1e3 * r["wall_s"] for r in read_jsonl(metrics_path)
+                   if r.get("kind") in ("decode", "verify")]
         toks = [list(r.tokens) for r in
                 sorted(rep.results, key=lambda r: r.request_id)]
         return {
+            "matmul_backend": matmul_backend,
             "mesh_shape": list(shape) if shape else None,
             "decode_steps": int(rep.steps),
             "decode_s": float(rep.decode_s),
-            "per_step_ms": float(1e3 * rep.decode_s / max(rep.steps, 1)),
+            # gated: suffix-matched by benchmarks/compare.py
+            "per_step_ms": percentiles(step_ms),
+            "mean_step_ms": float(1e3 * rep.decode_s / max(rep.steps, 1)),
             "prefill_s": float(rep.prefill_s),
             "decode_tokens_per_s": float(rep.decode_tokens_per_s),
             "slot_utilization": float(rep.slot_utilization),
         }, toks
 
-    single, ref_toks = cell(None)
-    sharded, mesh_toks = cell(tuple(mesh_shape))
-    mismatches = sum(a != b for a, b in zip(ref_toks, mesh_toks))
+    cells, all_toks = [], []
+    with tempfile.TemporaryDirectory(prefix="sharded_serving_") as tmp:
+        for matmul_backend, use_mesh in _GRID:
+            c, toks = cell(matmul_backend,
+                           tuple(mesh_shape) if use_mesh else None, tmp)
+            cells.append(c)
+            all_toks.append(toks)
+    mismatches = sum(sum(a != b for a, b in zip(all_toks[0], toks))
+                     for toks in all_toks[1:])
+
+    def mean_ms(matmul_backend, use_mesh):
+        i = _GRID.index((matmul_backend, use_mesh))
+        return cells[i]["mean_step_ms"]
+
     return {
         "backend": backend,
         "n_requests": n_requests,
         "n_devices": len(jax.devices()),
-        "cells": [single, sharded],
-        "single_per_step_ms": single["per_step_ms"],
-        "sharded_per_step_ms": sharded["per_step_ms"],
+        "cells": cells,
+        "single_per_step_ms": mean_ms("xla", False),
+        "sharded_per_step_ms": mean_ms("xla", True),
         "sharded_vs_single_step_ratio": (
-            sharded["per_step_ms"] / max(single["per_step_ms"], 1e-9)),
+            mean_ms("xla", True) / max(mean_ms("xla", False), 1e-9)),
+        "kernel_vs_oracle_mesh_ratio": (
+            mean_ms("kernel_interpret", True)
+            / max(mean_ms("xla", True), 1e-9)),
         "token_mismatches": int(mismatches),
     }
 
@@ -159,24 +202,29 @@ def main(argv=None):
             backend=args.backend, n_requests=args.requests, rate=args.rate)
     from benchmarks.common import save_artifact
     path = save_artifact("BENCH_sharded", r)
-    single, sharded = r["cells"]
     print(f"backend={r['backend']} requests={r['n_requests']} "
           f"devices={r['n_devices']}")
-    print(f"single:  {single['decode_steps']} steps, "
-          f"{single['per_step_ms']:.2f} ms/step, "
-          f"{single['decode_tokens_per_s']:.1f} tok/s")
-    print(f"mesh {tuple(sharded['mesh_shape'])}: "
-          f"{sharded['decode_steps']} steps, "
-          f"{sharded['per_step_ms']:.2f} ms/step, "
-          f"{sharded['decode_tokens_per_s']:.1f} tok/s")
-    print(f"sharded/single per-step ratio: "
-          f"{r['sharded_vs_single_step_ratio']:.2f}x "
-          f"(virtual-CPU meshes emulate collectives — correctness smoke, "
-          f"not a scaling claim)")
+    for c in r["cells"]:
+        where = (f"mesh {tuple(c['mesh_shape'])}" if c["mesh_shape"]
+                 else "single")
+        p = c["per_step_ms"] or {}
+        print(f"{c['matmul_backend']:>16s} / {where:<10s} "
+              f"{c['decode_steps']:3d} steps, per-step ms "
+              f"p50={p.get('p50', float('nan')):.2f} "
+              f"p90={p.get('p90', float('nan')):.2f} "
+              f"p99={p.get('p99', float('nan')):.2f}  "
+              f"{c['decode_tokens_per_s']:.1f} tok/s")
+    print(f"sharded/single per-step ratio (xla): "
+          f"{r['sharded_vs_single_step_ratio']:.2f}x; "
+          f"kernel/oracle on the mesh: "
+          f"{r['kernel_vs_oracle_mesh_ratio']:.2f}x "
+          f"(virtual-CPU meshes emulate collectives and the kernel cells "
+          f"pay the Pallas interpreter — correctness smoke, not a scaling "
+          f"claim)")
     print(f"token mismatches: {r['token_mismatches']}")
     print(f"artifact: {path}")
     if r["token_mismatches"]:
-        print("ERROR: sharded outputs diverged from single-device",
+        print("ERROR: outputs diverged across backend/mesh cells",
               file=sys.stderr)
         return 1
     return 0

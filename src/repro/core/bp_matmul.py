@@ -37,12 +37,18 @@ way), ``set_matmul_backend`` moves the process-wide default.
 from __future__ import annotations
 
 import contextlib
+import logging
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import quant
+# hoisted (was a per-call import inside the hot dispatch path): sharding
+# only imports jax/numpy, so there is no import cycle to dodge
+from repro.distributed import sharding as _shd
+
+_log = logging.getLogger(__name__)
 
 MODES = ("bf16", "qat", "bp_exact", "bp_approx")
 BACKENDS = ("auto", "xla", "kernel", "kernel_interpret")
@@ -81,25 +87,47 @@ def resolve_matmul_backend(backend: str = None) -> str:
     """Concrete backend ("xla" | "kernel" | "kernel_interpret") for the
     current default device.
 
-    Under an ACTIVE MESH trace the kernel backends fall back to "xla": the
-    Pallas kernels are single-device programs that have not been
-    shard_map-partitioned over the batch axis yet, while the XLA
-    formulations are plain einsum/gather graphs that GSPMD partitions
-    natively (split-KV partial softmax over the sharded cache axis, TP
-    matmul collectives).  This keeps ``matmul_backend`` settings valid
-    verbatim on the mesh executor instead of tracing a kernel that would
-    see only one shard of its operands."""
+    Kernel backends stay valid verbatim under an active mesh trace: the
+    dispatch sites wrap the Pallas kernels in ``shard_map`` over the active
+    mesh (per-shard fused kernel + collective combine of partial results),
+    so there is no blanket mesh -> "xla" downgrade here anymore.  The rare
+    remaining per-call degrades (e.g. int8 KV scale pages, which only the
+    gather oracle understands) announce themselves once through
+    :func:`note_backend_fallback` instead of silently resolving away."""
     b = _matmul_backend if backend is None else backend
     if b == "auto":
         b = "kernel" if jax.default_backend() == "tpu" else "xla"
-    if b != "xla" and _mesh_active():
-        return "xla"
     return b
 
 
-def _mesh_active() -> bool:
-    from repro.distributed.sharding import _mesh_axes
-    return _mesh_axes() is not None
+def mesh_active() -> bool:
+    """True when a mesh is active for the current trace (resolved once per
+    trace at each dispatch site — cached executions pay nothing)."""
+    return _shd.current_mesh() is not None
+
+
+#: one-time fallback ledger: reason -> count.  The first occurrence of each
+#: reason logs a warning; every occurrence is counted so telemetry/tests can
+#: assert whether (and why) a kernel request degraded to the XLA oracle.
+_FALLBACK_NOTES: dict = {}
+
+
+def note_backend_fallback(reason: str) -> None:
+    """Record (and log, first time per reason) a backend downgrade."""
+    n = _FALLBACK_NOTES.get(reason, 0)
+    _FALLBACK_NOTES[reason] = n + 1
+    if n == 0:
+        _log.warning("quantized-op backend fallback: %s "
+                     "(further occurrences counted, not logged)", reason)
+
+
+def backend_fallbacks() -> dict:
+    """Snapshot of the fallback ledger ({reason: count})."""
+    return dict(_FALLBACK_NOTES)
+
+
+def clear_backend_fallbacks() -> None:
+    _FALLBACK_NOTES.clear()
 
 
 def signed_low_particles(q):
@@ -159,11 +187,21 @@ def _qmm_fwd_impl(x, w, w_scale, mode):
     backend = resolve_matmul_backend()
     if backend != "xla" and mode in ("bp_exact", "bp_approx"):
         # fused Pallas path: quantize-scale plumbing + exact/approx
-        # contractions + dequant epilogue in one VMEM pass
-        from repro.kernels.bitparticle_matmul.ops import bp_matmul
-        out = bp_matmul(x_q, w, x_scale, w_scale,
-                        approx=(mode == "bp_approx"),
-                        interpret=(backend == "kernel_interpret"))
+        # contractions + dequant epilogue in one VMEM pass.  Under an
+        # active mesh the kernel runs per-shard inside shard_map (TP
+        # column split / split-K psum combine) instead of degrading to XLA.
+        interpret = backend == "kernel_interpret"
+        mesh = _shd.current_mesh()
+        if mesh is not None:
+            from repro.kernels.bitparticle_matmul.ops import bp_matmul_sharded
+            out = bp_matmul_sharded(x_q, w, x_scale, w_scale,
+                                    approx=(mode == "bp_approx"),
+                                    interpret=interpret, mesh=mesh)
+        else:
+            from repro.kernels.bitparticle_matmul.ops import bp_matmul
+            out = bp_matmul(x_q, w, x_scale, w_scale,
+                            approx=(mode == "bp_approx"),
+                            interpret=interpret)
         return out.astype(x.dtype)
     acc = bp_matmul_int(x_q, w, mode)
     return (acc.astype(jnp.float32) * (x_scale * w_scale)).astype(x.dtype)

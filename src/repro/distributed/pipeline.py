@@ -32,17 +32,12 @@ from jax.sharding import PartitionSpec as P
 
 
 def _shard_map(fn, *, mesh, in_specs, out_specs):
-    """Version-portable shard_map: ``jax.shard_map`` (jax >= 0.7,
-    ``check_vma``) with the ``jax.experimental`` spelling (``check_rep``)
-    as fallback — replication of the output is asserted by the test, not
-    the tracer, identically in both."""
-    sm = getattr(jax, "shard_map", None)
-    if sm is not None:
-        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                  check_vma=False)
-    from jax.experimental.shard_map import shard_map
-    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                     check_rep=False)
+    """Version-portable shard_map (see
+    :func:`repro.distributed.sharding.portable_shard_map`, the shared
+    implementation also used by the kernel wrappers)."""
+    from repro.distributed.sharding import portable_shard_map
+    return portable_shard_map(fn, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs)
 
 
 def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh,

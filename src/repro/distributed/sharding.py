@@ -26,6 +26,7 @@ import threading
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
@@ -114,6 +115,64 @@ def mesh_axes_dict(mesh) -> dict:
     if hasattr(mesh, "devices"):
         return dict(zip(mesh.axis_names, mesh.devices.shape))
     return dict(mesh.shape)
+
+
+def current_mesh():
+    """The mesh active for this trace — the abstract mesh on jax versions
+    that have one, else the thread-local physical mesh set by ``with
+    Mesh(...)`` / :func:`activate_mesh`.  Returns an object usable as the
+    ``mesh`` argument of ``shard_map``, or None when no mesh is active."""
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        mesh = get_abstract()
+        if mesh is not None and not mesh.empty:
+            return mesh
+    mesh = _physical_mesh()
+    if mesh is None or mesh.empty:
+        return None
+    return mesh
+
+
+def portable_shard_map(fn, *, mesh, in_specs, out_specs):
+    """Version-portable shard_map: ``jax.shard_map`` (jax >= 0.7,
+    ``check_vma``) with the ``jax.experimental`` spelling (``check_rep``)
+    as fallback.  Replication checking is off in both: the kernel wrappers
+    produce outputs whose replication the tracer cannot prove (psum-combined
+    partial contractions), and parity tests assert it instead."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+def combine_matmul_partials(acc, axis_name: str):
+    """Sum per-shard partial contractions (split-K tensor parallelism).
+
+    Called inside a shard_map body.  The psum runs in the accumulator's own
+    dtype, so int32 split-K partials combine exactly — a split-K kernel
+    matmul stays bit-identical to the unsplit contraction."""
+    return jax.lax.psum(acc, axis_name)
+
+
+def combine_softmax_state(acc, m, l, axis_name: str, *, eps: float = 1e-37):
+    """Merge per-shard online-softmax partial state into the global output.
+
+    Called inside a shard_map body.  Each shard contributes flash-decoding
+    state over its local KV split: ``m`` running max, ``l`` running
+    denominator, ``acc`` the *unnormalized* weighted-value accumulator
+    (broadcastable to ``acc``'s shape on the last dim).  A shard that saw
+    only masked positions has m = -inf, l = 0 and contributes exactly 0.
+
+        m_g = pmax(m);  out = psum(acc . e^{m-m_g}) / max(psum(l . e^{m-m_g}), eps)
+    """
+    m_all = jax.lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_all)
+    l_all = jax.lax.psum(l * corr, axis_name)
+    acc_all = jax.lax.psum(acc * corr, axis_name)
+    return acc_all / jnp.maximum(l_all, eps)
 
 
 def activate_mesh(mesh):

@@ -3,6 +3,13 @@
 Handles arbitrary leading batch dims, non-block-aligned shapes (zero padding
 — zeros contribute nothing in either exact or approx mode), scale plumbing,
 and the interpret-mode fallback used for CPU validation.
+
+:func:`bp_matmul_sharded` is the mesh entry point: it wraps the same kernel
+in ``shard_map`` over the active ("data","model") mesh, picking a tensor-
+parallel strategy per call — output-column split (zero collectives),
+split-K with an exact int32 psum combine, or replicated compute when
+neither contraction dim divides — so ``matmul_backend="kernel"`` stays
+valid verbatim on the mesh executor.
 """
 
 from __future__ import annotations
@@ -11,6 +18,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.bitparticle_matmul.kernel import bp_matmul_kernel
 
@@ -84,3 +92,71 @@ def bp_matmul(a_q, w_q, scale_a=None, scale_w=None, *, approx: bool = False,
         block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
     )
     return out[:m, :n].reshape(*lead, n)
+
+
+def _matmul_strategy(lead, k: int, n: int, axes: dict):
+    """(batch_axis, strategy) for one sharded matmul call.
+
+    strategy: "col" — weight columns over "model", per-shard fused kernel,
+    no collectives (the bit-exact fast path; applies whenever N divides);
+    "splitk" — contraction dim over "model", int32 psum combine (exact:
+    integer partial sums commute); "rep" — replicated compute.  The batch
+    axis additionally splits the leading dim over "data" when it divides.
+    """
+    model = axes.get("model", 1)
+    data = axes.get("data", 1)
+    batch_axis = ("data" if lead and data > 1 and lead[0] % data == 0
+                  else None)
+    if model > 1 and n % model == 0:
+        return batch_axis, "col"
+    if model > 1 and k % model == 0:
+        return batch_axis, "splitk"
+    return batch_axis, "rep"
+
+
+def bp_matmul_sharded(a_q, w_q, scale_a=None, scale_w=None, *,
+                      approx: bool = False, interpret: bool = False, mesh):
+    """BitParticle quantized matmul partitioned over an active mesh.
+
+    Same numerics contract as :func:`bp_matmul` with scales (always returns
+    the dequantized f32 result), but the kernel runs per shard inside
+    ``shard_map`` over ``mesh``.  Strategy is chosen from the shapes (see
+    :func:`_matmul_strategy`); both the column split and the split-K psum
+    keep integer accumulation exact, so the result matches the unsharded
+    kernel's dequant epilogue ``acc * scale_a * scale_w`` bit-for-bit.
+    """
+    from repro.distributed import sharding as shd
+
+    *lead, k = a_q.shape
+    k2, n = w_q.shape
+    assert k == k2, (a_q.shape, w_q.shape)
+    axes = shd.mesh_axes_dict(mesh)
+    batch_axis, strategy = _matmul_strategy(lead, k, n, axes)
+
+    sa = (jnp.ones((*lead, 1), jnp.float32) if scale_a is None
+          else jnp.broadcast_to(jnp.asarray(scale_a, jnp.float32),
+                                (*lead, 1)))
+    sw = (jnp.ones((n,), jnp.float32) if scale_w is None
+          else jnp.asarray(scale_w, jnp.float32).reshape(n))
+
+    lead_spec = (batch_axis,) + (None,) * (len(lead) - 1) if lead else ()
+    a_spec = P(*lead_spec, "model" if strategy == "splitk" else None)
+    w_spec = P("model" if strategy == "splitk" else None,
+               "model" if strategy == "col" else None)
+    sa_spec = P(*lead_spec, None)
+    sw_spec = P("model" if strategy == "col" else None)
+    out_spec = P(*lead_spec, "model" if strategy == "col" else None)
+
+    def run(aq, wq, sa, sw):
+        if strategy == "splitk":
+            acc = bp_matmul(aq, wq, approx=approx, interpret=interpret)
+            acc = shd.combine_matmul_partials(acc, "model")
+            # dequant epilogue after the exact int32 combine, in the same
+            # order as the kernel's fused epilogue (acc * sa * sw)
+            return acc.astype(jnp.float32) * sa * sw
+        return bp_matmul(aq, wq, sa, sw, approx=approx, interpret=interpret)
+
+    fn = shd.portable_shard_map(
+        run, mesh=mesh, in_specs=(a_spec, w_spec, sa_spec, sw_spec),
+        out_specs=out_spec)
+    return fn(a_q, w_q, sa, sw)

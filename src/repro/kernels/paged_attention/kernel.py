@@ -39,8 +39,12 @@ from repro.kernels.compat import CompilerParams as _CompilerParams
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
-def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, block_size: int, n_pages: int):
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *refs,
+            block_size: int, n_pages: int, return_state: bool):
+    if return_state:
+        o_ref, mo_ref, lo_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -76,16 +80,31 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(p == n_pages - 1)
     def _done():
-        o_ref[0, 0] = (acc_ref[...] /
-                       jnp.maximum(l_ref[...], 1e-37)).astype(o_ref.dtype)
+        if return_state:
+            # hand the raw flash-decoding state to the caller: shards of a
+            # split-KV mesh run combine (m, l, acc) across shards before
+            # normalizing (sharding.combine_softmax_state)
+            o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
+            mo_ref[0, 0] = m_ref[...]
+            lo_ref[0, 0] = l_ref[...]
+        else:
+            o_ref[0, 0] = (acc_ref[...] /
+                           jnp.maximum(l_ref[...], 1e-37)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "return_state"))
 def paged_attention_kernel(q, k_pages, v_pages, block_tables, lengths, *,
-                           interpret: bool = False):
+                           interpret: bool = False,
+                           return_state: bool = False):
     """q: (B, H, D); k_pages/v_pages: (N, block_size, KH, D);
     block_tables: (B, n_pages) int32 physical page ids; lengths: (B,) int32
-    last valid position (inclusive).  Returns (B, H, D) in q.dtype."""
+    last valid position (inclusive).  Returns (B, H, D) in q.dtype.
+
+    With ``return_state=True`` the normalization epilogue is skipped and the
+    call returns the online-softmax partial state ``(acc, m, l)`` — acc
+    (B, KH, G, D) f32 unnormalized, m/l (B, KH, G, 1) f32 — for a cross-
+    shard split-KV combine.  A caller whose table covers only masked
+    positions gets m = -inf, l = 0, acc = 0 (a neutral element)."""
     B, H, D = q.shape
     N, bs, KH, _ = k_pages.shape
     G = H // KH
@@ -93,7 +112,19 @@ def paged_attention_kernel(q, k_pages, v_pages, block_tables, lengths, *,
     scale = D ** -0.5
     qr = (q.astype(jnp.float32) * scale).reshape(B, KH, G, D)
 
-    kern = functools.partial(_kernel, block_size=bs, n_pages=n_pages)
+    kern = functools.partial(_kernel, block_size=bs, n_pages=n_pages,
+                             return_state=return_state)
+    out_block = pl.BlockSpec((1, 1, G, D), lambda b, h, p, bt, ln: (b, h, 0, 0))
+    state_block = pl.BlockSpec((1, 1, G, 1),
+                               lambda b, h, p, bt, ln: (b, h, 0, 0))
+    if return_state:
+        out_shape = (jax.ShapeDtypeStruct((B, KH, G, D), jnp.float32),
+                     jax.ShapeDtypeStruct((B, KH, G, 1), jnp.float32),
+                     jax.ShapeDtypeStruct((B, KH, G, 1), jnp.float32))
+        out_specs = (out_block, state_block, state_block)
+    else:
+        out_shape = jax.ShapeDtypeStruct((B, KH, G, D), q.dtype)
+        out_specs = out_block
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                   # block_tables, lengths
         grid=(B, KH, n_pages),
@@ -104,8 +135,7 @@ def paged_attention_kernel(q, k_pages, v_pages, block_tables, lengths, *,
             pl.BlockSpec((1, bs, 1, D),
                          lambda b, h, p, bt, ln: (bt[b, p], 0, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, D),
-                               lambda b, h, p, bt, ln: (b, h, 0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),     # running max m
             pltpu.VMEM((G, 1), jnp.float32),     # running sum l
@@ -115,11 +145,14 @@ def paged_attention_kernel(q, k_pages, v_pages, block_tables, lengths, *,
     out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        out_shape=out_shape,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="paged_attention_decode",
     )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
       qr, k_pages, v_pages)
+    if return_state:
+        acc, m, l = out
+        return acc, m, l
     return out.reshape(B, H, D)

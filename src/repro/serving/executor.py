@@ -31,11 +31,14 @@ Two executors ship behind the interface:
     ``"data"``, KV sequence axis over ``"model"`` — split-KV decode), and
     the block-paged cache + block tables stay replicated
     (``api.paged_cache_logical_axes``).  Every trace runs inside the mesh +
-    ``decode`` recipe scope, so the model's ``shard()`` constraints engage;
-    kernel backends fall back to the XLA oracle under a mesh
-    (``bp_matmul.resolve_matmul_backend``) because the Pallas kernels are
-    not shard_map-partitioned.  Greedy outputs are token-identical to
-    single-device execution (``tests/test_sharded_serving.py``).
+    ``decode`` recipe scope, so the model's ``shard()`` constraints engage.
+    Kernel backends stay active under the mesh: the dispatch sites wrap the
+    Pallas kernels in ``shard_map`` (TP column / split-K matmul partitions,
+    split-KV paged attention with an (m, l, acc) cross-shard softmax
+    combine — ``kernels/*/ops.py``), so ``matmul_backend="kernel"`` means
+    the kernel on every executor.  Greedy outputs are token-identical to
+    single-device execution for both backends
+    (``tests/test_sharded_serving.py``, ``tests/test_mesh_kernels.py``).
 
 ``params`` may be None for cache-only use: the cache managers build a
 default executor when constructed directly (tests); the model entry points
