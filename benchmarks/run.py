@@ -54,6 +54,10 @@ BENCHMARKS = [
      lambda r: f"p99_ms={r['per_step_ms']['p99']:.2f};"
                f"hw_samples={r['n_hw_samples']};"
                f"mismatches={r['token_mismatches']}"),
+    ("frontdoor", "benchmarks.frontdoor",
+     lambda r: f"affinity_gain={r['routing']['affinity_gain_blocks']};"
+               f"slo_p90={r['slo']['interactive_p90_slo']:.1f};"
+               f"mismatches={r['token_mismatches']}"),
     ("chaos_smoke", "benchmarks.chaos_smoke",
      lambda r: f"injected={r['n_injected_faults']};"
                f"recoveries={r['n_recoveries']};"

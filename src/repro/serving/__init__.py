@@ -19,10 +19,13 @@ from repro.serving.executor import (Executor, MeshExecutor,
 from repro.serving.faults import (NULL_INJECTOR, DeviceOOM, DrafterFault,
                                   FaultInjector, InjectedFault, StepFault,
                                   StepTimeout, TransientStepFault)
+from repro.serving.frontdoor import (FrontDoor, FrontDoorClient,
+                                     FrontDoorServer, Replica, Router)
 from repro.serving.probe import (NULL_PROBE, PROBE_METHODS, SparsityProbe,
                                  probe_supported)
 from repro.serving.queue import Request, RequestQueue, RequestState
-from repro.serving.scheduler import QuasiSyncScheduler, SchedulerConfig
+from repro.serving.scheduler import (QuasiSyncScheduler, SchedulerConfig,
+                                     SLOClass)
 from repro.serving.speculative import (Drafter, ModelDrafter,
                                        PromptLookupDrafter, make_drafter)
 from repro.serving.telemetry import (SCHEMA_VERSION, MetricsLogger,
@@ -38,6 +41,9 @@ __all__ = [
     "DrafterFault",
     "Executor",
     "FaultInjector",
+    "FrontDoor",
+    "FrontDoorClient",
+    "FrontDoorServer",
     "GenerationResult",
     "InjectedFault",
     "MeshExecutor",
@@ -50,11 +56,14 @@ __all__ = [
     "PagedCacheManager",
     "PromptLookupDrafter",
     "QuasiSyncScheduler",
+    "Replica",
     "Request",
     "RequestQueue",
     "RequestResult",
     "RequestState",
+    "Router",
     "SCHEMA_VERSION",
+    "SLOClass",
     "ServeConfig",
     "ServeLoop",
     "ServeReport",

@@ -43,6 +43,7 @@ from __future__ import annotations
 import collections
 import concurrent.futures
 import dataclasses
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
@@ -85,6 +86,16 @@ class ServeConfig:
     # (data, model) mesh shape for tensor-parallel serving; None = single
     # device.  Requires prod(mesh_shape) visible jax devices.
     mesh_shape: Optional[Tuple[int, int]] = None
+    # chunked prefill: bound the per-step prefill cost.  A prompt longer
+    # than ``prefill_chunk`` is admitted on its first chunk only; the rest
+    # of the prompt rides the multi-token verify step — at most
+    # ``prefill_chunk`` prompt tokens per batched step, interleaved with
+    # every other slot's decode — so a 10k-token prompt cannot stall
+    # in-flight decoders for its whole prefill.  The final chunk's argmax
+    # IS the first generated token (token-identical to one-shot prefill by
+    # construction).  Greedy-only; needs a multi-token verify family
+    # (dense/moe/vlm).  None = off (classic one-shot prefill).
+    prefill_chunk: Optional[int] = None
     # speculative decoding: "none" | "prompt_lookup" (weight-free n-gram
     # drafter) | "model" (small same-family draft model — pass draft_cfg/
     # draft_params to the engine).  Greedy-only; outputs stay token-
@@ -198,6 +209,14 @@ class ServeReport:
     # inter-token gap pooled over every request's consecutive emissions
     ttft_wall: Optional[Dict[str, float]] = None
     itl_wall: Optional[Dict[str, float]] = None
+    # queue-wait percentiles (wall seconds from queue entry to admission)
+    # and per-SLO-class latency breakdown: class name -> {"n", "ttft_wall",
+    # "itl_wall", "queue_wait"} — folded from the stream's per-request
+    # records, so the JSONL file reproduces them exactly
+    queue_wait: Optional[Dict[str, float]] = None
+    slo_classes: Optional[Dict[str, dict]] = None
+    # chunked prefill: prompt tokens ingested through bounded chunk steps
+    chunk_tokens: int = 0
     # robustness (docs/robustness.md): lifecycle evictions + fault ledger
     n_cancelled: int = 0              # requests cancelled (API or chaos)
     n_timed_out: int = 0              # requests past deadline_s/ttft budget
@@ -295,6 +314,31 @@ class ServeLoop:
         if cache_T is None:
             need = [r.prompt_len + r.max_new_tokens for r in requests] or [1]
             cache_T = max(need) + self.serve_cfg.cache_margin
+        # chunked prefill: validate up front so a misconfigured loop fails
+        # at construction, not at the first long prompt
+        self.prefill_chunk = self.serve_cfg.prefill_chunk
+        if self.prefill_chunk is not None:
+            if self.prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1 (or None)")
+            from repro.models import api as _api
+            if not _api.supports_verify(engine.cfg):
+                raise ValueError(
+                    f"family {engine.cfg.family!r} has no multi-token "
+                    f"verify path: chunked prefill feeds prompt chunks "
+                    f"through verify_step; serve with prefill_chunk=None")
+            if self.serve_cfg.temperature > 0:
+                raise ValueError(
+                    "chunked prefill is greedy-only (temperature == 0): "
+                    "the final chunk's first token comes from the verify "
+                    "step's fused argmax")
+            if extras:
+                raise ValueError(
+                    "chunked prefill does not compose with per-request "
+                    "extra prefill inputs (extras ride the one-shot "
+                    "prefill only)")
+        # slot -> next unfed prompt position for requests mid-chunked-
+        # prefill (cleared on preemption/eviction; replay restarts chunks)
+        self.chunking: Dict[int, int] = {}
         # constructor args kept so ``recover()`` can rebuild a fresh store
         self.n_slots = n_slots
         self._cache_T_arg = cache_T
@@ -315,6 +359,7 @@ class ServeLoop:
                                on_reject=self._on_reject)
         self.sched = QuasiSyncScheduler(self.rq, self.cm, sched_cfg,
                                         telemetry=self.tel)
+        self.sched.prefill_chunk = self.prefill_chunk
         self.ragged = self.sched.bucketing == "pow2"
         self.extras = extras
         # deque: submit_arrivals pops from the head every decode step, and
@@ -340,6 +385,22 @@ class ServeLoop:
         self._pressure_mark = 0
         #: optional test/debug hook called after every loop iteration
         self.on_step_end: Optional[Callable[["ServeLoop"], None]] = None
+        #: optional streaming hook: called once per FRESHLY emitted token
+        #: with (request, token, index) — replay re-emissions after a
+        #: preemption are suppressed (the client already received them),
+        #: so a streaming consumer sees each position exactly once
+        self.on_token: Optional[Callable[[Request, int, int], None]] = None
+        # live-serving inbox: thread-safe dynamic submission for
+        # ``run_forever`` (the front door's replica workers push here);
+        # ``close()`` lets the loop drain and return
+        self._inbox: List[Request] = []
+        self._inbox_lock = threading.Lock()
+        self._closed = False
+        # cost hint (cost-aware routing): running mean of modeled
+        # BitParticle array cycles per processed token over the probe's
+        # ``hw_estimate`` samples (0.0 until the first sample)
+        self._hw_cycles_sum = 0.0
+        self._hw_tokens_sum = 0
         # speculative decoding: a drafter proposes up to K tokens per slot,
         # one multi-token verify step checks them all, slots commit a
         # VARIABLE 1..K+1 tokens per step (greedy-only, token-identical)
@@ -380,7 +441,13 @@ class ServeLoop:
         matmul-backend downgrade invalidates the executor's trace cache."""
         self._decode_fn = self.engine.executor.decode_sample_fn(
             self.serve_cfg.temperature, paged=self.paged)
-        if self.drafter is not None:
+        # the multi-token verify entry point serves BOTH speculation and
+        # chunked prefill (a chunk step feeds known prompt tokens where
+        # speculation feeds drafts); keep it bound while either needs it —
+        # the ladder may null the drafter mid-run with chunking still on
+        need_verify = (self.drafter is not None
+                       or self.prefill_chunk is not None)
+        if need_verify:
             self._verify_fn = self.engine.executor.verify_sample_fn(
                 paged=self.paged)
         # probed variants are SEPARATE jits (the unprobed traces stay
@@ -389,7 +456,7 @@ class ServeLoop:
         if self.probe.enabled:
             self._decode_probe_fn = self.engine.executor.decode_sample_fn(
                 self.serve_cfg.temperature, paged=self.paged, probed=True)
-            if self.drafter is not None:
+            if need_verify:
                 self._verify_probe_fn = (
                     self.engine.executor.verify_sample_fn(paged=self.paged,
                                                           probed=True))
@@ -447,11 +514,17 @@ class ServeLoop:
                 "cow_blocks": int(pool.n_cow),
                 "peak_blocks_in_use": int(pool.peak_live)}
 
-    def _emit_hw(self, stats_np: np.ndarray, phase: str) -> None:
+    def _emit_hw(self, stats_np: np.ndarray, phase: str,
+                 n_tokens: int = 1) -> None:
         """Fold one sampled step's device stats through the probe's cost
         models into an ``hw_estimate`` record plus Chrome-trace counter
-        tracks (perfetto renders them alongside the phase spans)."""
+        tracks (perfetto renders them alongside the phase spans).
+        ``n_tokens`` is the tokens this step processed (prompt + committed
+        + chunk-fed) — the denominator of the running cycles/token cost
+        hint the front-door router reads for cost-aware routing."""
         fields = self.probe.fold(stats_np, self._weight_profile, phase)
+        self._hw_cycles_sum += float(fields["array_cycles_per_step"])
+        self._hw_tokens_sum += max(int(n_tokens), 1)
         self._emit("hw_estimate", step=int(self.sched.n_decode_steps),
                    **fields)
         self.tel.counter("sparsity",
@@ -463,6 +536,15 @@ class ServeLoop:
                          cycles_bp_exact=fields["cycles"]["bp_exact"],
                          energy_bp_exact_pj=fields["mac_energy_pj"]
                          ["bp_exact"])
+
+    @property
+    def cost_hint_cycles_per_token(self) -> float:
+        """Running mean of modeled BitParticle array cycles per processed
+        token over the probe's sampled steps (0.0 with no sample / probe
+        off) — the per-replica cost hint surfaced on router stats."""
+        if self._hw_tokens_sum == 0:
+            return 0.0
+        return self._hw_cycles_sum / self._hw_tokens_sum
 
     # -- lifecycle: cancellation + deadlines --------------------------------
 
@@ -476,6 +558,7 @@ class ServeLoop:
         """Remove ``slot``'s request from the batch and release every
         resource it holds (cache slot / block table, drafter state)."""
         req = self.active.pop(slot)
+        self.chunking.pop(slot, None)
         self.cm.free(slot)
         if self.drafter is not None:
             self.drafter.on_free(slot)
@@ -649,6 +732,9 @@ class ServeLoop:
         """Evict ``slot``'s request back to the queue head with its
         generated tokens queued for token-exact replay."""
         req = self.active.pop(slot)
+        # a mid-chunk preemption restarts chunked prefill on re-admission
+        # (the emitted-token replay list still pins token identity)
+        self.chunking.pop(slot, None)
         discarded = len(req.tokens)
         with self.tel.span("preempt", slot=slot,
                            request_id=req.request_id):
@@ -674,13 +760,18 @@ class ServeLoop:
                        action="shrink_lead_window", lead_window=int(new_e))
 
     def insert_with_preemption(self, slot: int, cache, req: Request,
-                               src_index: int):
+                               src_index: int,
+                               length: Optional[int] = None):
         """Install a prefill cache into ``slot``, preempting actives (newest
-        first) until the paged pool can cover the miss suffix."""
+        first) until the paged pool can cover the miss suffix.  ``length``
+        is the prefilled prefix being installed (defaults to the full
+        prompt; chunked admissions install only the first chunk)."""
+        length = req.prompt_len if length is None else length
         while True:
             try:
-                self.cm.insert(slot, cache, req.prompt_len,
-                               src_index=src_index, tokens=req.prompt)
+                self.cm.insert(slot, cache, length,
+                               src_index=src_index,
+                               tokens=req.prompt[:length])
                 return
             except NoFreeBlocks as e:
                 # the inserting request holds no slot entry in `active`
@@ -706,17 +797,26 @@ class ServeLoop:
         sync count matches the scheduler's."""
         engine = self.engine
         t_start = time.perf_counter()
+        wall_admit = time.perf_counter()
         for req in group:
             req.transition(RequestState.PREFILL)
             req.admitted_at = self.now
-        lens = np.asarray([r.prompt_len for r in group], np.int32)
+            if req.wall_admitted_at is None:
+                req.wall_admitted_at = wall_admit
+        # chunked prefill: a long prompt is admitted on its FIRST chunk
+        # only (bounded prefill cost); the remainder rides the multi-token
+        # verify step, interleaved with every other slot's decode
+        chunk = self.prefill_chunk
+        eff = [r.prompt_len if chunk is None else min(r.prompt_len, chunk)
+               for r in group]
+        lens = np.asarray(eff, np.int32)
         # pow2 buckets: right-pad hetero prompts to one fused prefill
         # shape (valid rows are causal-mask-independent of the padding)
         pad_to = (prefill_bucket_len(int(lens.max()), self.cm.cache_T)
                   if self.ragged else int(lens.max()))
         toks = np.zeros((len(group), pad_to), np.int32)
         for j, r in enumerate(group):
-            toks[j, :r.prompt_len] = r.prompt
+            toks[j, :eff[j]] = r.prompt[:eff[j]]
         batch = {"tokens": toks}
         extras = self.extras
         if extras:
@@ -760,26 +860,32 @@ class ServeLoop:
         dispatch_s = wall - t0
         self.prefill_s += dispatch_s
         t_inst = time.perf_counter()
+        n_emitted = 0
         with self.tel.span("install", group_size=len(group)):
             for j, req in enumerate(group):
-                if req.replay:
-                    # preempted request: re-emit its original first token
-                    tok = req.replay.pop(0)
-                else:
-                    arr = np.asarray(engine._sample(
-                        logits[j:j + 1], engine._request_key(req, 0)))
-                    self.tel.count("d2h_bytes", arr.nbytes)
-                    tok = int(arr[0])
-                self._append_token(req, tok, wall)
-                if req.first_token_at is None:
-                    req.first_token_at = self.now
-                reason = engine._finished(req, tok)
-                if reason is not None:
-                    req.finish(self.now, reason)
-                    continue
+                chunked = eff[j] < req.prompt_len
+                tok = None
+                if not chunked:
+                    if req.replay:
+                        # preempted request: re-emit its original first token
+                        tok = req.replay.pop(0)
+                    else:
+                        arr = np.asarray(engine._sample(
+                            logits[j:j + 1], engine._request_key(req, 0)))
+                        self.tel.count("d2h_bytes", arr.nbytes)
+                        tok = int(arr[0])
+                    self._append_token(req, tok, wall)
+                    n_emitted += 1
+                    if req.first_token_at is None:
+                        req.first_token_at = self.now
+                    reason = engine._finished(req, tok)
+                    if reason is not None:
+                        req.finish(self.now, reason)
+                        continue
                 slot = self.cm.alloc()
                 try:
-                    self.insert_with_preemption(slot, cache, req, j)
+                    self.insert_with_preemption(slot, cache, req, j,
+                                                length=eff[j])
                 except BaseException:
                     # never leak the slot: a failed install (injected OOM
                     # past its retries, recoverable exhaustion) must leave
@@ -787,8 +893,14 @@ class ServeLoop:
                     self.cm.free(slot)
                     raise
                 req.slot = slot
-                req.transition(RequestState.DECODE)
                 self.active[slot] = req
+                if chunked:
+                    # no token yet: the request stays PREFILL while the
+                    # remaining prompt rides the chunk steps; its first
+                    # token comes from the FINAL chunk's argmax
+                    self.chunking[slot] = eff[j]
+                    continue
+                req.transition(RequestState.DECODE)
                 self.last_tok[slot] = tok
                 if self.serve_cfg.temperature > 0:
                     self.slot_keys[slot] = np.asarray(
@@ -808,25 +920,39 @@ class ServeLoop:
                            "install_s": install_s},
                    group_size=int(len(group)), pad_to=int(pad_to),
                    prompt_tokens=int(lens.sum()),
-                   # every request emits exactly one token at prefill
-                   # (sampled or replayed), finished-at-prefill included
-                   committed_tokens=int(len(group)),
+                   # every NON-CHUNKED request emits exactly one token at
+                   # prefill (sampled or replayed), finished-at-prefill
+                   # included; chunked admissions emit theirs at the final
+                   # chunk step instead
+                   committed_tokens=int(n_emitted),
                    new_sync=bool(new_sync),
                    active_slots=int(self.cm.n_active),
                    h2d_bytes=h2d, d2h_bytes=d2h,
                    **self._pool_gauges())
         if probe_stats is not None:
-            self._emit_hw(probe_stats, "prefill")
+            self._emit_hw(probe_stats, "prefill",
+                          n_tokens=int(lens.sum()) + n_emitted)
 
-    @staticmethod
-    def _append_token(req: Request, tok: int, wall: float):
+    def _append_token(self, req: Request, tok: int, wall: float):
         """Record one emitted token with its wall-clock stamp.  Replayed
         tokens (re-emitted after a preemption) keep their ORIGINAL stamps —
         they already streamed to the client once — so a stamp is only
-        added once the token count grows past the recorded history."""
+        added once the token count grows past the recorded history.  Fresh
+        emissions also fan out to the streaming hook (each position exactly
+        once) and feed the scheduler's live SLO percentile windows."""
         req.tokens.append(tok)
         if len(req.wall_token_times) < len(req.tokens):
             req.wall_token_times.append(wall)
+            n = len(req.wall_token_times)
+            if n == 1:
+                if req.wall_submitted_at is not None:
+                    self.sched.observe_ttft(req.slo_class,
+                                            wall - req.wall_submitted_at)
+            else:
+                self.sched.observe_itl(req.slo_class,
+                                       wall - req.wall_token_times[-2])
+            if self.on_token is not None:
+                self.on_token(req, tok, len(req.tokens) - 1)
 
     # -- stepping -----------------------------------------------------------
 
@@ -943,34 +1069,50 @@ class ServeLoop:
                    h2d_bytes=h2d, d2h_bytes=d2h,
                    **self._pool_gauges())
         if probe_stats is not None:
-            self._emit_hw(probe_stats, "decode")
+            self._emit_hw(probe_stats, "decode", n_tokens=n_committed)
 
     def decode_once_spec(self):
-        """One speculative step: draft up to K tokens per slot, verify all
-        of them in ONE multi-token forward pass, commit the accepted
-        prefix plus the target's own next token — 1..K+1 committed tokens
-        per slot, token-identical to the classic greedy path.
+        """One fused multi-token step: speculative verification and/or
+        chunked prefill over ONE (n_slots, S) forward pass.
+
+        Decode slots ride it as speculation: draft up to K tokens, verify
+        them all, commit the accepted prefix plus the target's own next
+        token — 1..K+1 tokens per step, token-identical to classic greedy.
+        Chunk slots (requests mid-chunked-prefill) feed their next <= S
+        KNOWN prompt tokens instead: the model writes their KV at the
+        slot's positions exactly as it would rejected drafts, the
+        mid-chunk argmaxes are ignored (the true continuation is the
+        prompt itself), and when the prompt is exhausted the FINAL fed
+        position's argmax is the request's first generated token — so
+        chunked prefill is token-identical to one-shot prefill by
+        construction.  With no drafter (chunked prefill only), decode
+        slots degenerate to single-token commits, exactly a classic step.
 
         Per-slot draft lengths are capped by the remaining output budget
         (committing past ``max_new_tokens`` is impossible, so drafting
-        there is pure waste), and the verify batch rides one fixed
-        (n_slots, K+1) shape — slots with no usable draft simply commit
-        their single greedy token, exactly like a classic step."""
+        there is pure waste).  The step rides a fixed shape per mode —
+        (n_slots, K+1) for pure speculation, (n_slots, max(K+1, chunk))
+        when chunk slots are aboard — so compiled variants stay O(1);
+        causality makes the wider shape's extra garbage columns inert."""
         t_start = time.perf_counter()
-        K = self.serve_cfg.num_draft_tokens
-        slots = list(self.active.keys())
-        caps = {s: max(min(K, self.active[s].max_new_tokens
-                           - len(self.active[s].tokens) - 1), 0)
-                for s in slots}
         # the drafter may be disabled mid-step by the degradation ladder;
         # slot bookkeeping below must keep using the one that drafted
         drafter = self.drafter
+        K = self.serve_cfg.num_draft_tokens if drafter is not None else 0
+        chunk_now = dict(self.chunking)
+        S = (max(K + 1, self.prefill_chunk or 0) if chunk_now else K + 1)
+        slots = list(self.active.keys())
+        dec = [s for s in slots if s not in chunk_now]
+        caps = {s: max(min(K, self.active[s].max_new_tokens
+                           - len(self.active[s].tokens) - 1), 0)
+                for s in dec}
         t_draft = time.perf_counter()
-        with self.tel.span("draft", n_slots=len(slots)):
-            if any(caps.values()):
+        drafts = {}
+        with self.tel.span("draft", n_slots=len(dec)):
+            if drafter is not None and any(caps.values()):
                 try:
                     drafts = drafter.propose_all(
-                        {s: self.active[s] for s in slots}, caps)
+                        {s: self.active[s] for s in dec}, caps)
                     self._drafter_faults = 0
                 except DrafterFault:
                     # a failed drafter costs speculation, never correctness:
@@ -984,27 +1126,33 @@ class ServeLoop:
                         self._emit("degrade",
                                    step=int(self.sched.n_decode_steps),
                                    action="disable_speculation")
-            else:
-                # every slot is within one token of its budget: the step
-                # degenerates to a classic decode — don't burn drafter work
-                # on proposals that would be truncated to empty
-                drafts = {}
         draft_s = time.perf_counter() - t_draft
         drafts = {s: np.asarray(drafts.get(s, ()), np.int32)[:caps[s]]
-                  for s in slots}
+                  for s in dec}
+        # chunk rows: the next <= S unfed prompt tokens per chunk slot
+        feeds = {s: np.asarray(self.active[s].prompt[p:p + S], np.int32)
+                 for s, p in chunk_now.items()}
         # the paged store needs writable blocks over each slot's full
         # append span; preemption inside may shrink the slot set
+        spans = {s: len(drafts[s]) + 1 for s in dec}
+        spans.update({s: len(feeds[s]) for s in chunk_now})
         t_prep = time.perf_counter()
-        slots = self.writable_slots(
-            {s: len(drafts[s]) + 1 for s in slots})
+        slots = self.writable_slots(spans)
         prepare_s = time.perf_counter() - t_prep
         if not slots:
             return
-        toks = np.zeros((self.n_slots, K + 1), np.int32)
-        for s in slots:
+        # a preemption inside writable_slots evicts slots (and clears
+        # their chunk state): refresh both memberships before building rows
+        live = set(slots)
+        dec = [s for s in dec if s in live]
+        chunk_now = {s: p for s, p in chunk_now.items() if s in live}
+        toks = np.zeros((self.n_slots, S), np.int32)
+        for s in dec:
             toks[s, 0] = self.last_tok[s]
             d = drafts[s]
             toks[s, 1:1 + len(d)] = d
+        for s in chunk_now:
+            toks[s, :len(feeds[s])] = feeds[s]
         step = {"tokens": jnp.asarray(toks),
                 "cache_len": self.cm.cache_len_vector()}
         if self.paged:
@@ -1029,16 +1177,48 @@ class ServeLoop:
         dispatch_s = wall - t0
         self.decode_s += dispatch_s
         self.cm.update(new_cache)
-        greedy_np = np.asarray(greedy)      # (n_slots, K+1) argmax stream
+        greedy_np = np.asarray(greedy)      # (n_slots, S) argmax stream
         self.tel.count("d2h_bytes", int(greedy_np.nbytes))
         drafted0, accepted0 = self.n_drafted, self.n_accepted
-        commits: Dict[int, int] = {}
+        commits: Dict[int, int] = {}        # cache POSITIONS advanced
         finished: Dict[int, str] = {}
-        n_committed = 0
+        n_committed = 0                     # tokens EMITTED (decode output)
+        n_chunk_fed = 0                     # prompt tokens fed (chunk rows)
         t_commit = time.perf_counter()
         with self.tel.span("commit", n_slots=len(slots)):
             for slot in slots:
                 req = self.active[slot]
+                if slot in chunk_now:
+                    # chunked prefill: the fed prompt tokens are ground
+                    # truth, so the cache always advances by the feed span;
+                    # only the FINAL chunk's last argmax is a real output
+                    n = len(feeds[slot])
+                    commits[slot] = n
+                    n_chunk_fed += n
+                    new_pos = chunk_now[slot] + n
+                    if new_pos < req.prompt_len:
+                        self.chunking[slot] = new_pos
+                        continue
+                    del self.chunking[slot]
+                    if req.replay:
+                        tok = req.replay.pop(0)
+                    else:
+                        tok = int(greedy_np[slot, n - 1])
+                        if tok < 0:
+                            finished[slot] = "failed"
+                            continue
+                    self._append_token(req, tok, wall)
+                    if req.first_token_at is None:
+                        req.first_token_at = self.now
+                    req.transition(RequestState.DECODE)
+                    self.last_tok[slot] = tok
+                    n_committed += 1
+                    if self.drafter is not None:
+                        self.drafter.on_admit(slot, req)
+                    reason = self.engine._finished(req, tok)
+                    if reason is not None:
+                        finished[slot] = reason
+                    continue
                 d = drafts[slot]
                 # greedy accept: drafts match the target's argmax stream up
                 # to the first miss; the miss position's argmax is the
@@ -1089,15 +1269,20 @@ class ServeLoop:
         for slot in slots:
             if slot in finished:
                 req = self.active.pop(slot)
+                self.chunking.pop(slot, None)
                 self.cm.free(slot)
-                drafter.on_free(slot)
+                if drafter is not None:
+                    drafter.on_free(slot)
                 req.finish(self.now, finished[slot])
                 if finished[slot] == "failed":
                     self._emit("fault", step=int(self.sched.n_decode_steps),
                                site="nan_guard",
                                request_id=int(req.request_id),
                                slot=int(slot))
-            else:
+            elif drafter is not None and slot not in chunk_now:
+                # chunk slots have no drafter state: mid-chunk ones were
+                # never admitted into it, just-completed ones had on_admit
+                # called THIS step with the cache already at commit length
                 drafter.observe_commit(slot,
                                        int(self.cm.lengths[slot]))
         if probe_stats is not None:
@@ -1111,34 +1296,116 @@ class ServeLoop:
                    active_slots=int(len(slots)), n_slots=int(self.n_slots),
                    occupancy=occupancy, divergence=divergence,
                    committed_tokens=int(n_committed),
+                   chunk_tokens=int(n_chunk_fed),
                    drafted_tokens=int(self.n_drafted - drafted0),
                    accepted_tokens=int(self.n_accepted - accepted0),
                    h2d_bytes=h2d, d2h_bytes=d2h,
                    **self._pool_gauges())
         if probe_stats is not None:
-            self._emit_hw(probe_stats, "verify")
+            self._emit_hw(probe_stats, "verify",
+                          n_tokens=n_committed + n_chunk_fed)
+
+    # -- live submission (the front door's entry points) --------------------
+
+    def submit(self, request: Request) -> None:
+        """Thread-safe dynamic submission for :meth:`run_forever`.  The
+        request joins the arrival stream at the loop's next inbox drain;
+        its ``arrival_time`` defaults to the loop's current virtual clock
+        (stamped at drain) so step-clock metrics stay well-defined."""
+        with self._inbox_lock:
+            if self._closed:
+                raise RuntimeError("serve loop is closed; cannot submit")
+            self._inbox.append(request)
+
+    def close(self) -> None:
+        """Stop accepting submissions; :meth:`run_forever` returns once
+        everything already in flight drains."""
+        with self._inbox_lock:
+            self._closed = True
+
+    def _drain_inbox(self) -> None:
+        with self._inbox_lock:
+            if not self._inbox:
+                return
+            fresh, self._inbox = self._inbox, []
+        for req in fresh:
+            if req.arrival_time <= 0.0:
+                req.arrival_time = self.now
+            if (req.deadline_s is not None
+                    or req.ttft_deadline_s is not None):
+                self._any_deadlines = True
+            self.requests.append(req)
+            self.arrivals.append(req)
 
     def run(self) -> ServeReport:
+        """Drain the constructor-supplied request list to completion (the
+        classic batch entry point — a pre-closed live loop)."""
+        self.close()
+        return self.run_forever(poll_s=0.0)
+
+    def run_forever(self, poll_s: float = 0.001) -> ServeReport:
+        """Serve until closed AND drained.  Identical to the classic
+        :meth:`run` loop except that each iteration first drains the
+        thread-safe inbox, and an idle (empty) loop parks for ``poll_s``
+        instead of returning — :meth:`submit` wakes it, :meth:`close`
+        lets it finish.  Returns the same :class:`ServeReport`."""
         self.tel.start_profile()
         try:
             with self.tel.span("serve"):
                 self.submit_arrivals()
-                while self.arrivals or len(self.rq) or self.active:
+                while True:
+                    self._drain_inbox()
+                    if not (self.arrivals or len(self.rq) or self.active):
+                        with self._inbox_lock:
+                            done = self._closed and not self._inbox
+                        if done:
+                            break
+                        if poll_s > 0:
+                            time.sleep(poll_s)
+                        continue
                     # lifecycle sweep first: cancellations/expiries free
                     # capacity that this iteration's admission plan sees
                     self.sweep()
                     if not (self.arrivals or len(self.rq) or self.active):
-                        break
+                        # the sweep may have terminalized the only work
+                        # (e.g. a cancel); observers still need to hear
+                        # about it even though no step will run
+                        if self.on_step_end is not None:
+                            self.on_step_end(self)
+                        continue
                     try:
                         self._step()
                     except RECOVERABLE_ERRORS as e:
                         self.recover(e)
                     if self.on_step_end is not None:
                         self.on_step_end(self)
+            self._emit_request_records()
             return self.report()
         finally:
             self.tel.stop_profile()
             self.tel.flush()
+
+    def _emit_request_records(self) -> None:
+        """One ``request`` record per submitted request at drain time: the
+        stream-side source for queue-wait and per-SLO-class wall-latency
+        percentiles, so ``reduce_stream`` over the JSONL file reproduces
+        the report's numbers exactly (file/live parity)."""
+        step = int(self.sched.n_decode_steps)
+        for req in sorted(self.requests, key=lambda r: r.request_id):
+            wt = req.wall_token_times
+            queue_wait = (None if req.wall_submitted_at is None
+                          or req.wall_admitted_at is None
+                          else req.wall_admitted_at - req.wall_submitted_at)
+            ttft_wall = (None if req.wall_submitted_at is None or not wt
+                         else wt[0] - req.wall_submitted_at)
+            self._emit("request", step=step,
+                       request_id=int(req.request_id),
+                       slo_class=str(req.slo_class),
+                       finish_reason=req.finish_reason,
+                       n_tokens=int(len(req.tokens)),
+                       queue_wait_s=queue_wait,
+                       ttft_wall_s=ttft_wall,
+                       itl_wall_s=[b - a for a, b in zip(wt, wt[1:])])
 
     def _step(self):
         """One loop iteration: admissions, then one batched decode/verify.
@@ -1159,7 +1426,7 @@ class ServeLoop:
                 self.now = max(self.now, self.arrivals[0].arrival_time)
                 self.submit_arrivals()
             return
-        if self.drafter is not None:
+        if self.drafter is not None or self.chunking:
             self.decode_once_spec()
         else:
             t_prep = time.perf_counter()
@@ -1321,7 +1588,25 @@ class ServeLoop:
             committed_tokens_per_step=s.committed_tokens_per_step,
             ttft_wall=percentiles([ttft_wall(r) for r in self.requests]),
             itl_wall=percentiles(itl),
+            # queue-wait and per-class percentiles fold from the stream's
+            # ``request`` records (emitted at drain), preserving file/live
+            # parity for the SLO numbers too
+            queue_wait=percentiles(s.queue_wait_samples),
+            slo_classes=self._slo_class_stats(s),
+            chunk_tokens=s.chunk_tokens,
         )
+
+    @staticmethod
+    def _slo_class_stats(s) -> Optional[Dict[str, dict]]:
+        names = sorted(set(s.slo_ttft_samples) | set(s.slo_itl_samples))
+        if not names:
+            return None
+        return {name: {"n": len(s.slo_ttft_samples.get(name, ())),
+                       "ttft_wall": percentiles(
+                           s.slo_ttft_samples.get(name, ())),
+                       "itl_wall": percentiles(
+                           s.slo_itl_samples.get(name, ()))}
+                for name in names}
 
 
 class ServingEngine:

@@ -1,0 +1,19 @@
+"""Async front door: streaming HTTP server, multi-replica router, and
+the client that drives them.  See docs/serving.md ("Front door")."""
+
+from repro.serving.frontdoor.client import FrontDoorClient
+from repro.serving.frontdoor.replica import Replica, RequestHandle
+from repro.serving.frontdoor.router import POLICIES, Router
+from repro.serving.frontdoor.server import (FrontDoor, FrontDoorServer,
+                                            HttpError)
+
+__all__ = [
+    "FrontDoor",
+    "FrontDoorClient",
+    "FrontDoorServer",
+    "HttpError",
+    "POLICIES",
+    "Replica",
+    "RequestHandle",
+    "Router",
+]

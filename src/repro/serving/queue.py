@@ -96,6 +96,11 @@ class Request:
     # deadline that only applies while the request is still waiting
     deadline_s: Optional[float] = None
     ttft_deadline_s: Optional[float] = None
+    # SLO priority class (``scheduler.SLOClass`` name).  Under the
+    # scheduler's "slo" policy higher-priority classes are admitted first
+    # and their TTFT/ITL targets steer the lead window; the default FIFO
+    # policy ignores it entirely.
+    slo_class: str = "default"
     # tokens generated before a preemption, re-emitted verbatim on replay
     # (the engine forces them over the resampled ones, so a preempted
     # request finishes with exactly the tokens it would have produced)
@@ -106,6 +111,7 @@ class Request:
     # above stay the deterministic/replayable record, these feed the
     # ServeReport latency percentiles (TTFT / inter-token)
     wall_submitted_at: Optional[float] = None
+    wall_admitted_at: Optional[float] = None
     wall_token_times: List[float] = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
@@ -220,3 +226,16 @@ class RequestQueue:
         """Dequeue up to ``k`` requests in FIFO order."""
         popped, self._waiting = self._waiting[:k], self._waiting[k:]
         return popped
+
+    def pop_selected(self, requests: List[Request]) -> List[Request]:
+        """Dequeue a specific set of waiting requests (identity match),
+        preserving the caller's order — the SLO scheduler admits a
+        priority-ordered subset instead of the FIFO prefix.  Requests not
+        currently queued raise (a scheduling bug, not a race: the planner
+        selects from ``peek()`` under the same loop iteration)."""
+        for req in requests:
+            if not self.remove(req):
+                raise ValueError(
+                    f"request {req.request_id} is not waiting; cannot "
+                    f"admit it")
+        return list(requests)

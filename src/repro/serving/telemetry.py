@@ -63,8 +63,11 @@ STEP_SCHEMA: Dict[str, set] = {
     "prefill": _STEP_KEYS | {"group_size", "pad_to", "prompt_tokens",
                              "new_sync"},
     "decode": _STEP_KEYS | {"n_slots", "occupancy", "divergence"},
+    # ``chunk_tokens`` (additive): prompt tokens a chunked prefill fed
+    # through this verify step (0 on pure speculative steps)
     "verify": _STEP_KEYS | {"n_slots", "occupancy", "divergence",
-                            "drafted_tokens", "accepted_tokens"},
+                            "drafted_tokens", "accepted_tokens",
+                            "chunk_tokens"},
     "preempt": {"schema", "kind", "ts_s", "step", "slot", "request_id",
                 "discarded_tokens"},
     "reject": {"schema", "kind", "ts_s", "step", "request_id"},
@@ -87,6 +90,15 @@ STEP_SCHEMA: Dict[str, set] = {
                     "per_layer_act_value_sparsity", "cycles",
                     "array_utilization", "array_cycles_per_step",
                     "mac_energy_pj"},
+    # per-request lifecycle summary (additive, schema stays v1): one record
+    # per submitted request, emitted as the loop drains.  ``queue_wait_s``
+    # is wall time from queue entry to admission, ``ttft_wall_s`` from
+    # queue entry to first token, ``itl_wall_s`` the request's pairwise
+    # inter-token gaps — the raw samples behind the report's per-SLO-class
+    # percentiles, so the file reduction reproduces them exactly
+    "request": {"schema", "kind", "ts_s", "step", "request_id", "slo_class",
+                "finish_reason", "n_tokens", "queue_wait_s", "ttft_wall_s",
+                "itl_wall_s"},
 }
 
 
@@ -380,6 +392,18 @@ class StreamSummary:
     hw_cycles: Dict[str, float] = dataclasses.field(default_factory=dict)
     hw_mac_energy_pj: Dict[str, float] = dataclasses.field(
         default_factory=dict)
+    # chunked prefill: prompt tokens ingested through multi-token chunk
+    # steps (distinct from committed/generated tokens)
+    chunk_tokens: int = 0
+    # per-request lifecycle records: the wall-clock samples behind the
+    # report's queue-wait and per-SLO-class latency percentiles (floats
+    # round-trip JSON exactly, so file and live reductions agree)
+    n_requests: int = 0
+    queue_wait_samples: List[float] = dataclasses.field(default_factory=list)
+    slo_ttft_samples: Dict[str, List[float]] = dataclasses.field(
+        default_factory=dict)
+    slo_itl_samples: Dict[str, List[float]] = dataclasses.field(
+        default_factory=dict)
 
 
 def reduce_stream(records) -> StreamSummary:
@@ -411,6 +435,7 @@ def reduce_stream(records) -> StreamSummary:
             if kind == "verify":
                 s.drafted_tokens += int(r["drafted_tokens"])
                 s.accepted_tokens += int(r["accepted_tokens"])
+                s.chunk_tokens += int(r.get("chunk_tokens", 0))
         elif kind == "preempt":
             s.n_preemptions += 1
             discarded += int(r["discarded_tokens"])
@@ -437,6 +462,18 @@ def reduce_stream(records) -> StreamSummary:
             continue
         elif kind == "recover":
             s.n_recoveries += 1
+            continue
+        elif kind == "request":
+            s.n_requests += 1
+            cls = str(r["slo_class"])
+            if r["queue_wait_s"] is not None:
+                s.queue_wait_samples.append(float(r["queue_wait_s"]))
+            if r["ttft_wall_s"] is not None:
+                s.slo_ttft_samples.setdefault(cls, []).append(
+                    float(r["ttft_wall_s"]))
+            if r["itl_wall_s"]:
+                s.slo_itl_samples.setdefault(cls, []).extend(
+                    float(v) for v in r["itl_wall_s"])
             continue
         elif kind == "hw_estimate":
             s.n_hw_samples += 1

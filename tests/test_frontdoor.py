@@ -1,0 +1,441 @@
+"""Front door: chunked prefill, streaming serve loop, HTTP server +
+router, SLO scheduling, and the request-record telemetry they ride on."""
+
+import json
+import time
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs.base import get_arch
+from repro.models import api
+from repro.models.layers import quantize_dense_params
+from repro.serving import (FrontDoor, FrontDoorClient, Replica, Request,
+                           Router, SchedulerConfig, ServeConfig, SLOClass,
+                           ServingEngine, SparsityProbe, percentiles,
+                           read_jsonl, reduce_stream)
+from repro.serving.telemetry import STEP_SCHEMA, Telemetry
+
+jax.config.update("jax_default_matmul_precision", "float32")
+
+
+def _dense_cfg(**kw):
+    return get_arch("qwen2-1.5b").reduced().replace(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=128, head_dim=16, **kw)
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = _dense_cfg()
+    return cfg, api.init(jax.random.PRNGKey(0), cfg)
+
+
+def _engine(dense, *, backend="slab", prefill_chunk=None, max_new=6, **kw):
+    cfg, params = dense
+    return ServingEngine(cfg, params, ServeConfig(
+        max_new_tokens=max_new, temperature=0.0, cache_backend=backend,
+        block_size=4, prefill_chunk=prefill_chunk, **kw))
+
+
+def _prompt(n, seed=1, vocab=128):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (n,),
+                                         2, vocab), np.int32)
+
+
+def _tokens(report):
+    return [r.tokens.tolist() for r in report.results]
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+
+class TestChunkedPrefill:
+    @pytest.mark.parametrize("backend", ["slab", "paged"])
+    def test_token_identity_vs_oneshot(self, dense, backend):
+        prompts = [_prompt(5 + 9 * i % 23, seed=i) for i in range(5)]
+        outs = {}
+        for chunk in (None, 3, 8):
+            eng = _engine(dense, backend=backend, prefill_chunk=chunk)
+            reqs = [Request(prompt=p, max_new_tokens=6) for p in prompts]
+            outs[chunk] = _tokens(eng.serve(reqs, n_slots=2, cache_T=64))
+        assert outs[3] == outs[None]
+        assert outs[8] == outs[None]
+
+    def test_chunks_interleave_with_decode(self, dense):
+        """A long prompt admitted mid-run must NOT stall the in-flight
+        decoder: some verify step carries both decode commits and chunk
+        feeds."""
+        eng = _engine(dense, backend="paged", prefill_chunk=4, max_new=12)
+        reqs = [Request(prompt=_prompt(4, seed=1), max_new_tokens=12,
+                        arrival_time=0.0),
+                Request(prompt=_prompt(24, seed=2), max_new_tokens=4,
+                        arrival_time=2.0)]
+        loop = eng.make_loop(reqs, n_slots=2, cache_T=64)
+        loop.run()
+        mixed = [r for r in loop.stream if r["kind"] == "verify"
+                 and r["chunk_tokens"] > 0 and r["committed_tokens"] > 0]
+        assert mixed, "no step interleaved chunked prefill with decode"
+        # per-step prefill cost is bounded by the chunk across every slot
+        assert all(r["chunk_tokens"] <= 2 * 4 for r in loop.stream
+                   if r["kind"] == "verify")
+
+    def test_composes_with_speculation(self, dense):
+        base = _engine(dense, max_new=10)
+        prompts = [_prompt(17, seed=i) for i in range(3)]
+        want = _tokens(base.serve(
+            [Request(prompt=p, max_new_tokens=10) for p in prompts],
+            n_slots=2, cache_T=64))
+        eng = _engine(dense, prefill_chunk=5, max_new=10,
+                      draft="prompt_lookup", num_draft_tokens=3)
+        got = _tokens(eng.serve(
+            [Request(prompt=p, max_new_tokens=10) for p in prompts],
+            n_slots=2, cache_T=64))
+        assert got == want
+
+    def test_rejects_temperature_and_bad_chunk(self, dense):
+        cfg, params = dense
+        eng = ServingEngine(cfg, params, ServeConfig(
+            temperature=0.5, prefill_chunk=4))
+        with pytest.raises(ValueError, match="greedy-only"):
+            eng.make_loop([], cache_T=32)
+        eng = _engine(dense, prefill_chunk=0)
+        with pytest.raises(ValueError, match="prefill_chunk"):
+            eng.make_loop([], cache_T=32)
+
+
+# ---------------------------------------------------------------------------
+# streaming serve loop
+# ---------------------------------------------------------------------------
+
+
+class TestStreamingLoop:
+    def test_submit_close_matches_batch_run(self, dense):
+        prompts = [_prompt(7, seed=i) for i in range(4)]
+        want = _tokens(_engine(dense).serve(
+            [Request(prompt=p, max_new_tokens=6) for p in prompts],
+            n_slots=2, cache_T=64))
+        loop = _engine(dense).make_loop([], n_slots=2, cache_T=64)
+        for p in prompts:
+            loop.submit(Request(prompt=p, max_new_tokens=6))
+        loop.close()
+        report = loop.run_forever(poll_s=0.0)
+        assert _tokens(report) == want
+
+    def test_on_token_streams_each_position_once(self, dense):
+        loop = _engine(dense).make_loop([], n_slots=2, cache_T=64)
+        seen = {}
+        loop.on_token = lambda req, tok, i: (
+            seen.setdefault(req.request_id, []).append((i, tok)))
+        reqs = [Request(prompt=_prompt(7, seed=i), max_new_tokens=6)
+                for i in range(3)]
+        for r in reqs:
+            loop.submit(r)
+        loop.close()
+        loop.run_forever(poll_s=0.0)
+        for r in reqs:
+            assert [t for _, t in seen[r.request_id]] == r.tokens
+            assert [i for i, _ in seen[r.request_id]] == list(
+                range(len(r.tokens)))
+
+    def test_submit_after_close_raises(self, dense):
+        loop = _engine(dense).make_loop([], n_slots=2, cache_T=64)
+        loop.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            loop.submit(Request(prompt=_prompt(4)))
+
+    @pytest.mark.filterwarnings(
+        "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+    def test_replica_worker_crash_surfaces_error(self, dense):
+        """A dead worker must not strand its clients: orphaned in-flight
+        handles get on_finish (with a non-terminal request, which is the
+        tell), and submit/close re-raise instead of hanging."""
+        rep = Replica(_engine(dense), name="boom", n_slots=2, cache_T=64)
+
+        def _explode():
+            raise ZeroDivisionError("boom")
+
+        rep.loop._step = _explode
+        finished = []
+        rep.start()
+        rep.submit(Request(prompt=_prompt(6), max_new_tokens=4),
+                   on_finish=finished.append)
+        rep._thread.join(timeout=30)
+        assert isinstance(rep.error, ZeroDivisionError)
+        assert len(finished) == 1 and not finished[0].is_terminal
+        with pytest.raises(RuntimeError, match="worker died"):
+            rep.submit(Request(prompt=_prompt(6), max_new_tokens=4))
+        with pytest.raises(RuntimeError, match="worker died"):
+            rep.close()
+
+
+# ---------------------------------------------------------------------------
+# router (pure policy, fake replicas)
+# ---------------------------------------------------------------------------
+
+
+class _FakeReplica:
+    def __init__(self, name, depth=0, cost=0.0, block_size=4):
+        self.name = name
+        self.depth = depth
+        self.cost = cost
+        self.block_size = block_size
+
+    def stats(self):
+        return {"name": self.name, "queue_depth": self.depth,
+                "cost_hint_cycles_per_token": self.cost}
+
+
+class TestRouter:
+    def test_affinity_same_prefix_same_replica(self):
+        reps = [_FakeReplica("a"), _FakeReplica("b"), _FakeReplica("c")]
+        router = Router(reps, policy="affinity", affinity_blocks=2)
+        sys_prompt = _prompt(8, seed=7)
+        picks = {router.pick(np.concatenate([sys_prompt, _prompt(5, seed=i)]))
+                 for i in range(10)}
+        assert len(picks) == 1
+
+    def test_affinity_spills_on_imbalance_without_rehoming(self):
+        reps = [_FakeReplica("a"), _FakeReplica("b")]
+        router = Router(reps, policy="affinity", max_imbalance=2)
+        p = _prompt(12, seed=3)
+        home = router.pick(p)
+        home.depth = 10                      # home gets swamped
+        other = router.pick(p)
+        assert other is not home and router.n_spills == 1
+        home.depth = 0                       # pressure gone: back home
+        assert router.pick(p) is home
+
+    def test_least_loaded_breaks_ties_on_cost_hint(self):
+        reps = [_FakeReplica("a", depth=1, cost=9.0),
+                _FakeReplica("b", depth=1, cost=2.0),
+                _FakeReplica("c", depth=3, cost=0.0)]
+        router = Router(reps, policy="least_loaded")
+        assert router.pick(_prompt(4)) is reps[1]
+
+    def test_round_robin_cycles(self):
+        reps = [_FakeReplica("a"), _FakeReplica("b")]
+        router = Router(reps, policy="round_robin")
+        assert [router.pick(_prompt(4)).name for _ in range(4)] == [
+            "a", "b", "a", "b"]
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError, match="policy"):
+            Router([_FakeReplica("a")], policy="hash")
+
+
+# ---------------------------------------------------------------------------
+# HTTP front door (real TCP)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def door(dense):
+    replicas = [Replica(_engine(dense, backend="paged", prefill_chunk=6,
+                                max_new=24),
+                        name=f"r{i}", n_slots=2, cache_T=96)
+                for i in range(2)]
+    fd = FrontDoor(replicas, policy="affinity", affinity_blocks=1).start()
+    yield fd, FrontDoorClient("127.0.0.1", fd.port)
+    fd.stop()
+
+
+class TestFrontDoorHTTP:
+    def test_healthz_and_stats(self, door):
+        _, client = door
+        assert client.healthz() == {"ok": True}
+        stats = client.stats()
+        assert stats["policy"] == "affinity"
+        assert {r["name"] for r in stats["replicas"]} == {"r0", "r1"}
+
+    def test_token_identity_vs_direct_serve(self, dense, door):
+        _, client = door
+        prompts = [_prompt(15, seed=i) for i in range(4)]
+        want = _tokens(_engine(dense, max_new=5).serve(
+            [Request(prompt=p, max_new_tokens=5) for p in prompts],
+            n_slots=2, cache_T=96))
+        got = [client.generate(p, max_new_tokens=5)["tokens"]
+               for p in prompts]
+        assert got == want
+        streamed = [client.generate(p, max_new_tokens=5,
+                                    stream=True)["tokens"]
+                    for p in prompts]
+        assert streamed == want
+
+    def test_bad_requests_get_4xx(self, door):
+        _, client = door
+        with pytest.raises(RuntimeError, match="404"):
+            client._request_json("GET", "/nope")
+        with pytest.raises(RuntimeError, match="400"):
+            client._request_json("POST", "/v1/generate", {"prompt": "hi"})
+
+    def test_disconnect_cancels_and_releases_everything(self, dense):
+        replica = Replica(_engine(dense, backend="paged", prefill_chunk=6,
+                                  max_new=24),
+                          name="solo", n_slots=2, cache_T=96)
+        fd = FrontDoor([replica]).start()
+        client = FrontDoorClient("127.0.0.1", fd.port)
+        try:
+            p = _prompt(15, seed=40)
+            full = client.generate(p, max_new_tokens=24)
+            part = client.generate(p, max_new_tokens=24, disconnect_after=2)
+            assert part["disconnected"]
+            # the partial stream is a PREFIX of the fault-free stream
+            assert part["tokens"] == full["tokens"][:len(part["tokens"])]
+            assert len(part["tokens"]) < len(full["tokens"])
+            deadline = time.monotonic() + 30
+            while time.monotonic() < deadline:
+                s = replica.stats()
+                if s["queue_depth"] == 0 and s["blocks_in_use"] == 0:
+                    break
+                time.sleep(0.02)
+            s = replica.stats()
+            assert s["queue_depth"] == 0
+            assert s["blocks_in_use"] == 0, "disconnect leaked KV blocks"
+        finally:
+            reports = fd.stop()
+        assert reports["solo"].n_cancelled == 1
+        cancelled = [r for r in reports["solo"].results
+                     if r.finish_reason == "cancelled"]
+        assert len(cancelled) == 1
+
+    def test_two_replicas_share_one_engine_rejected(self, dense):
+        eng = _engine(dense)
+        with pytest.raises(ValueError, match="engine"):
+            FrontDoor([Replica(eng, name="a", cache_T=32),
+                       Replica(eng, name="b", cache_T=32)])
+
+
+# ---------------------------------------------------------------------------
+# SLO scheduling
+# ---------------------------------------------------------------------------
+
+
+def _slo_sched_cfg(**kw):
+    return SchedulerConfig(policy="slo", slo_classes={
+        "interactive": SLOClass(name="interactive", priority=10,
+                                ttft_target_s=kw.pop("ttft_target_s", None),
+                                itl_target_s=kw.pop("itl_target_s", None)),
+        "batch": SLOClass(name="batch", priority=0)}, **kw)
+
+
+class TestSLOScheduling:
+    def _trace(self, n_low=6, n_high=2):
+        reqs = [Request(prompt=_prompt(6, seed=i), max_new_tokens=6,
+                        arrival_time=0.0, slo_class="batch")
+                for i in range(n_low)]
+        reqs += [Request(prompt=_prompt(6, seed=50 + i), max_new_tokens=6,
+                         arrival_time=0.0, slo_class="interactive")
+                 for i in range(n_high)]
+        return reqs
+
+    def _per_class_ttft(self, reqs):
+        out = {}
+        for r in reqs:
+            out.setdefault(r.slo_class, []).append(r.ttft)
+        return {k: percentiles(v)["p90"] for k, v in out.items()}
+
+    def test_priority_class_beats_fifo_on_ttft(self, dense):
+        ttfts, toks = {}, {}
+        for policy in ("fifo", "slo"):
+            sched_cfg = (_slo_sched_cfg() if policy == "slo"
+                         else SchedulerConfig())
+            reqs = self._trace()
+            _engine(dense).serve(reqs, n_slots=2, cache_T=64,
+                                 sched_cfg=sched_cfg)
+            ttfts[policy] = self._per_class_ttft(reqs)
+            toks[policy] = [r.tokens for r in reqs]
+        # scheduling order must never change tokens (batch-composition
+        # independence is the repo's correctness anchor)
+        assert toks["slo"] == toks["fifo"]
+        # the high-priority class jumps the queue: strictly better p90
+        # TTFT on the same trace, measured on the deterministic step clock
+        assert (ttfts["slo"]["interactive"]
+                < ttfts["fifo"]["interactive"])
+
+    def test_ttft_breach_collapses_lead_window(self, dense):
+        loop = _engine(dense).make_loop(
+            [], n_slots=2, cache_T=64,
+            sched_cfg=_slo_sched_cfg(ttft_target_s=0.5, lead_window=4))
+        sched = loop.sched
+        assert sched._effective_lead_window() == 4
+        sched.observe_ttft("interactive", 2.0)
+        assert sched._effective_lead_window() == 0
+        # recovery: enough in-target samples push p90 back under target
+        for _ in range(40):
+            sched.observe_ttft("interactive", 0.01)
+        assert sched._effective_lead_window() == 4
+
+    def test_itl_breach_throttles_admission_burst(self, dense):
+        loop = _engine(dense).make_loop(
+            [], n_slots=4, cache_T=64,
+            sched_cfg=_slo_sched_cfg(itl_target_s=0.01, lead_window=0))
+        for i in range(4):
+            loop.submit(Request(prompt=_prompt(6, seed=i),
+                                max_new_tokens=6, slo_class="batch"))
+        loop._drain_inbox()
+        loop.submit_arrivals()
+        # an active batch + breached ITL: admissions throttle to 1
+        loop.sched.cache_mgr.alloc()
+        for _ in range(8):
+            loop.sched.observe_itl("interactive", 1.0)
+        groups = loop.sched.plan_admissions()
+        assert sum(len(g) for g in groups) == 1
+
+    def test_unknown_policy_rejected(self, dense):
+        with pytest.raises(ValueError, match="policy"):
+            _engine(dense).make_loop(
+                [], cache_T=32, sched_cfg=SchedulerConfig(policy="edf"))
+
+
+# ---------------------------------------------------------------------------
+# request records + report parity
+# ---------------------------------------------------------------------------
+
+
+class TestRequestRecords:
+    def test_stream_has_one_record_per_request(self, dense, tmp_path):
+        path = str(tmp_path / "metrics.jsonl")
+        tel = Telemetry(metrics_path=path)
+        cfg, params = dense
+        eng = ServingEngine(cfg, params, ServeConfig(
+            max_new_tokens=6, temperature=0.0, prefill_chunk=4,
+            telemetry=tel))
+        reqs = [Request(prompt=_prompt(9, seed=i), max_new_tokens=6,
+                        slo_class="interactive" if i % 2 else "batch")
+                for i in range(4)]
+        report = eng.serve(reqs, n_slots=2, cache_T=64,
+                           sched_cfg=_slo_sched_cfg())
+        tel.close()
+        recs = [r for r in read_jsonl(path)
+                if r["kind"] == "request"]
+        assert len(recs) == 4
+        for r in recs:
+            assert STEP_SCHEMA["request"] <= set(r)
+            assert r["queue_wait_s"] >= 0.0
+            assert r["ttft_wall_s"] > 0.0
+            assert len(r["itl_wall_s"]) == r["n_tokens"] - 1
+        # file/live parity: the report's SLO numbers are a pure reduction
+        # of the stream, so re-reducing the FILE reproduces them exactly
+        s = reduce_stream(read_jsonl(path))
+        assert report.queue_wait == percentiles(s.queue_wait_samples)
+        assert set(report.slo_classes) == {"interactive", "batch"}
+        for name, stats in report.slo_classes.items():
+            assert stats["ttft_wall"] == percentiles(
+                s.slo_ttft_samples[name])
+        assert report.chunk_tokens == s.chunk_tokens > 0
+
+    def test_cost_hint_accumulates_from_probe(self, dense):
+        cfg, params = dense
+        q_cfg = cfg.replace(matmul_mode="bp_exact", kv_cache_int8=True)
+        eng = ServingEngine(q_cfg, quantize_dense_params(params),
+                            ServeConfig(max_new_tokens=6, temperature=0.0,
+                                        probe=SparsityProbe(probe_every=2)))
+        loop = eng.make_loop(
+            [Request(prompt=_prompt(6, seed=i), max_new_tokens=6)
+             for i in range(2)], n_slots=2, cache_T=64)
+        assert loop.cost_hint_cycles_per_token == 0.0
+        loop.run()
+        assert loop.cost_hint_cycles_per_token > 0.0
